@@ -1,0 +1,31 @@
+"""Paper Figure 7 (asynchronous convex): Algorithm 2 with per-worker
+sync times drawn U[1, H], vs the synchronous counterparts."""
+
+from __future__ import annotations
+
+from benchmarks.common import BenchRow, run_convex
+from repro.core import operators as ops
+
+T = 400
+K = 40 / 7850.0
+TARGET = 1.0
+
+
+def run():
+    rows = []
+    for name, op, H, asy in [
+        ("sync_vanilla", ops.Identity(), 1, False),
+        ("async_topk_H4", ops.TopK(k=K), 4, True),
+        ("async_signtopk_H4", ops.SignSparsifier(k=K, m=1), 4, True),
+        ("async_qtopk_H4", ops.QuantizedSparsifier(k=K, s=15), 4, True),
+        ("async_qtopk_H8", ops.QuantizedSparsifier(k=K, s=15), 8, True),
+        ("sync_qtopk_H4", ops.QuantizedSparsifier(k=K, s=15), 4, False),
+    ]:
+        r = run_convex(op, H, T, asynchronous=asy, target_loss=TARGET)
+        btt = r["bits_to_target"]
+        rows.append(BenchRow(
+            f"async/{name}", r["us_per_step"],
+            f"loss={r['final_loss']:.3f};err={r['eval_error']:.3f};"
+            f"bits={r['bits']:.3g};bits_to_target="
+            f"{btt if btt is not None else 'n/a'}"))
+    return rows

@@ -1,0 +1,67 @@
+"""Paper Figures 1-3 (non-convex, synchronous): ResNet (the paper's
+model family, CIFAR-scale variant of the same code that expresses
+ResNet-50) trained with momentum-SGD local iterations, comparing
+vanilla / TopK / EF-Sign / QTopK / SignTopK / Qsparse-local on bits.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import BenchRow
+from repro.core import operators as ops
+from repro.data import make_image_data, worker_batches
+from repro.models import resnet
+from repro.optim import momentum_sgd, piecewise_decay
+from repro.train import RunConfig, train
+
+R, B, T = 4, 16, 150
+TARGET = 1.2
+
+
+def run():
+    cfg = resnet.resnet8_config()
+    x, y = make_image_data(4000, hw=16, seed=0)
+    params = resnet.init_params(jax.random.PRNGKey(0), cfg)
+
+    def grad_fn(p, batch):
+        return jax.value_and_grad(
+            lambda pp: resnet.loss_fn(pp, batch, cfg)[0])(p)
+
+    lr = piecewise_decay(0.05, [100, 130])
+    rows = []
+    results = {}
+    for name, op, H in [
+        ("vanilla_sgd", ops.Identity(), 1),
+        ("topk_sgd", ops.TopK(k=0.01), 1),
+        ("ef_signsgd", ops.Sign(), 1),
+        ("qtopk_4bit", ops.QuantizedSparsifier(k=0.01, s=15), 1),
+        ("signtopk", ops.SignSparsifier(k=0.01, m=1), 1),
+        ("signtopk_H4", ops.SignSparsifier(k=0.01, m=1), 4),
+        ("signtopk_H8", ops.SignSparsifier(k=0.01, m=1), 8),
+    ]:
+        batches = worker_batches(x, y, R, B, T, seed=1,
+                                 feature_key="images")
+        run_cfg = RunConfig(total_steps=T, R=R, H=H, log_every=25,
+                            target_loss=TARGET)
+        t0 = time.time()
+        state, hist = train(grad_fn, params, momentum_sgd(0.9), op, lr,
+                            batches, run_cfg)
+        us = (time.time() - t0) / T * 1e6
+        results[name] = hist
+        btt = hist.bits_to_target
+        rows.append(BenchRow(
+            f"nonconvex/{name}", us,
+            f"loss={hist.loss[-1]:.3f};bits={hist.bits[-1]:.3g};"
+            f"bits_to_target={btt if btt is not None else 'n/a'}"))
+    v = results["vanilla_sgd"].bits_to_target
+    t = results["topk_sgd"].bits_to_target
+    q = (results["signtopk_H8"].bits_to_target
+         or results["signtopk_H4"].bits_to_target)
+    if v and t and q:
+        rows.append(BenchRow("nonconvex/savings", 0.0,
+                             f"vs_topk={t / q:.1f}x;vs_vanilla={v / q:.0f}x"))
+    return rows

@@ -1,0 +1,47 @@
+"""Figure-1a/4a companion: per-operator compression quality, wire bits
+per round and compression-op throughput on a ResNet-50-sized tensor."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import BenchRow
+from repro.core import operators as ops
+
+D = 1_000_000  # ~ one large layer
+
+
+def run():
+    x = jax.random.normal(jax.random.PRNGKey(0), (D,))
+    rows = []
+    table = [
+        ("identity", ops.Identity()),
+        ("topk_1pct", ops.TopK(k=0.01)),
+        ("randk_1pct", ops.RandK(k=0.01)),
+        ("qsgd_4bit", ops.QSGDQuantizer(s=15)),
+        ("sign", ops.Sign()),
+        ("qtopk_1pct_4bit", ops.QuantizedSparsifier(k=0.01, s=15)),
+        ("qtopk_scaled", ops.QuantizedSparsifier(k=0.01, s=15, scaled=True)),
+        ("signtopk_1pct", ops.SignSparsifier(k=0.01, m=1)),
+        ("row_topk", ops.RowTopK(k=0.01, row_len=8192)),
+    ]
+    for name, op in table:
+        fn = jax.jit(lambda k, v, o=op: o(k, v))
+        out, bits = fn(jax.random.PRNGKey(1), x)
+        out.block_until_ready()
+        t0 = time.time()
+        n = 5
+        for i in range(n):
+            out, bits = fn(jax.random.PRNGKey(i), x)
+        out.block_until_ready()
+        us = (time.time() - t0) / n * 1e6
+        rel_err = float(jnp.sum((x - out) ** 2) / jnp.sum(x ** 2))
+        ratio = float(bits) / (32 * D)
+        rows.append(BenchRow(
+            f"op/{name}", us,
+            f"rel_err={rel_err:.4f};wire_ratio={ratio:.5f};"
+            f"gamma={op.gamma(D):.5f}"))
+    return rows

@@ -1,0 +1,24 @@
+"""Paper Figure 8 / Appendix D: scaled (Lemma 2) vs unscaled (Lemma 1)
+QTop_k composed operators, at several local-iteration counts."""
+
+from __future__ import annotations
+
+from benchmarks.common import BenchRow, run_convex
+from repro.core import operators as ops
+
+T = 300
+K = 40 / 7850.0
+
+
+def run():
+    rows = []
+    for H in (1, 4, 8):
+        for scaled in (False, True):
+            op = ops.QuantizedSparsifier(k=K, s=15, scaled=scaled)
+            r = run_convex(op, H, T)
+            tag = "scaled" if scaled else "unscaled"
+            rows.append(BenchRow(
+                f"scaledvs/qtopk_{tag}_H{H}", r["us_per_step"],
+                f"loss={r['final_loss']:.4f};err={r['eval_error']:.3f};"
+                f"bits={r['bits']:.3g}"))
+    return rows

@@ -1,0 +1,76 @@
+"""Shared benchmark scaffolding.
+
+Each bench_* module exposes ``run() -> list[BenchRow]``; run.py prints
+the required ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import mnist_like, worker_batches
+from repro.models import softmax
+from repro.optim import inverse_time, momentum_sgd, sgd
+from repro.train import RunConfig, train
+
+
+@dataclasses.dataclass
+class BenchRow:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def convex_problem(n=4000, seed=0):
+    x, y = mnist_like(n, seed=seed)
+    cfg = softmax.SoftmaxConfig(l2=1.0 / n)
+    params = softmax.init_params(jax.random.PRNGKey(0), cfg)
+
+    def grad_fn(p, batch):
+        return jax.value_and_grad(
+            lambda pp: softmax.loss_fn(pp, batch, cfg)[0])(p)
+
+    def eval_fn(p):
+        feats = jnp.asarray(x[:1000])
+        labels = jnp.asarray(y[:1000])
+        loss, aux = softmax.loss_fn(p, {"features": feats, "labels": labels},
+                                    cfg)
+        return {"loss": loss, "accuracy": aux["accuracy"],
+                "error": 1.0 - aux["accuracy"]}
+
+    return x, y, cfg, params, grad_fn, eval_fn
+
+
+def run_convex(op, H, T, *, R=15, b=8, asynchronous=False, seed=0,
+               target_loss: Optional[float] = None, xi=60.0, a=100.0,
+               inner="sgd"):
+    x, y, cfg, params, grad_fn, eval_fn = convex_problem()
+    lr = inverse_time(xi=xi, a=a)
+    batches = worker_batches(x, y, R, b, T, seed=seed)
+    run_cfg = RunConfig(total_steps=T, R=R, H=H, log_every=25,
+                        asynchronous=asynchronous, seed=seed,
+                        target_loss=target_loss, eval_every=0)
+    opt = momentum_sgd(0.9) if inner == "momentum" else sgd()
+    t0 = time.time()
+    state, hist = train(grad_fn, params, opt, op, lr, batches, run_cfg,
+                        eval_fn=None)
+    wall = time.time() - t0
+    metrics = eval_fn(state.master)
+    return {
+        "final_loss": hist.loss[-1],
+        "eval_loss": float(metrics["loss"]),
+        "eval_error": float(metrics["error"]),
+        "bits": hist.bits[-1],
+        "bits_to_target": hist.bits_to_target,
+        "steps_to_target": hist.steps_to_target,
+        "us_per_step": wall / T * 1e6,
+        "rounds": hist.rounds[-1],
+    }

@@ -1,0 +1,93 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from
+artifacts/dryrun/*.json (run after repro.launch.dryrun)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline import analyze, load_records
+
+
+def dryrun_table(recs) -> str:
+    hdr = ("| arch | shape | mesh | status | step | flops/chip | "
+           "bytes/chip | coll MiB/chip | temp GiB | arg GiB | compile s |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        if r["status"] != "ok":
+            reason = r.get("reason") or r.get("error", "")[:60]
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"{r['status']} ({reason}) | | | | | | | |")
+            continue
+        for name, st in r["steps"].items():
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | {name} | "
+                f"{st['flops']:.3g} | {st['bytes_accessed']:.3g} | "
+                f"{st['collectives']['total'] / 2**20:.1f} | "
+                f"{st['memory']['temp_bytes'] / 2**30:.2f} | "
+                f"{st['memory']['argument_bytes'] / 2**30:.2f} | "
+                f"{st['compile_s']} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs) -> str:
+    hdr = ("| arch | shape | mesh | step | compute s | memory s | "
+           "collective s | dominant | 6ND/HLO | hint |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        a = analyze(r)
+        if a is None:
+            continue
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} | {a['step']} | "
+            f"{a['t_compute_s']:.3e} | {a['t_memory_s']:.3e} | "
+            f"{a['t_collective_s']:.3e} | **{a['dominant']}** | "
+            f"{a['useful_ratio']:.2f} | {a['hint']} |")
+    return "\n".join(lines)
+
+
+def perf_compare(arch: str, shape: str, mesh: str, tags: list[str],
+                 art_dir: str = "artifacts/dryrun") -> str:
+    """Before/after table for hillclimb iterations (baseline + tags)."""
+    rows = []
+    base = f"{art_dir}/{arch}__{shape}__{mesh}.json"
+    files = [("baseline", base)] + [
+        (t, f"{art_dir}/{arch}__{shape}__{mesh}__{t}.json") for t in tags
+    ]
+    hdr = ("| iteration | step | compute s | memory s | collective s | "
+           "temp GiB | arg GiB | coll GiB |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for tag, fn in files:
+        if not os.path.exists(fn):
+            lines.append(f"| {tag} | (missing) | | | | | | |")
+            continue
+        with open(fn) as f:
+            rec = json.load(f)
+        if rec["status"] != "ok":
+            lines.append(f"| {tag} | ERROR {rec.get('error', '')[:50]} "
+                         f"| | | | | | |")
+            continue
+        a = analyze(rec)
+        st = rec["steps"][a["step"]]
+        lines.append(
+            f"| {tag} | {a['step']} | {a['t_compute_s']:.3e} | "
+            f"{a['t_memory_s']:.3e} | {a['t_collective_s']:.3e} | "
+            f"{st['memory']['temp_bytes'] / 2**30:.2f} | "
+            f"{st['memory']['argument_bytes'] / 2**30:.2f} | "
+            f"{st['collectives']['total'] / 2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load_records()
+    print("## Dry-run\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark driver: one module per paper table/figure group.
+
+Prints ``name,us_per_call,derived`` CSV (plus a header comment per
+suite).  Roofline rows appear when artifacts/dryrun/ exists (run
+``python -m repro.launch.dryrun --all`` first).
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+SUITES = [
+    ("operators", "benchmarks.bench_operators"),     # Fig 1a/4a companions
+    ("convex", "benchmarks.bench_convex"),           # Fig 4-6
+    ("async", "benchmarks.bench_async"),             # Fig 7
+    ("nonconvex", "benchmarks.bench_nonconvex"),     # Fig 1-3
+    ("scaled", "benchmarks.bench_scaled"),           # Fig 8 / App D
+    ("roofline", "benchmarks.roofline"),             # deliverable (g)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default=None,
+                    choices=[s for s, _ in SUITES])
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod_name in SUITES:
+        if args.suite and name != args.suite:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(mod_name)
+            rows = mod.run()
+            for r in rows:
+                print(r.csv(), flush=True)
+            print(f"# suite {name} done in {time.time() - t0:.1f}s",
+                  flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"# suite {name} FAILED: {type(e).__name__}: {e}",
+                  flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Paper Section 5.2 reproduction: convex softmax regression with R=15
+workers, batch 8, Top_k with k=40 coordinates, lr = c/(lambda (a+t)),
+synchronous (Algorithm 1) and asynchronous (Algorithm 2) operation.
+
+Run:  PYTHONPATH=src python examples/mnist_convex.py [--steps 400]
+"""
+
+import argparse
+
+import jax
+
+from repro.core.operators import (
+    Identity, QSGDQuantizer, QuantizedSparsifier, Sign, SignSparsifier, TopK,
+)
+from repro.data import mnist_like, worker_batches
+from repro.models import softmax
+from repro.optim import inverse_time, sgd
+from repro.train import RunConfig, train
+
+R, B = 15, 8
+K = 40 / 7850.0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--target", type=float, default=1.0)
+    args = ap.parse_args()
+    T = args.steps
+
+    x, y = mnist_like(6000, seed=0)
+    cfg = softmax.SoftmaxConfig(l2=1.0 / len(x))
+    params = softmax.init_params(jax.random.PRNGKey(0), cfg)
+
+    def grad_fn(p, batch):
+        return jax.value_and_grad(
+            lambda pp: softmax.loss_fn(pp, batch, cfg)[0])(p)
+
+    lr = inverse_time(xi=60.0, a=100.0)
+
+    methods = [
+        ("vanilla SGD", Identity(), 1, False),
+        ("TopK-SGD [SCJ18]", TopK(k=K), 1, False),
+        ("EF-SIGNSGD [KRSJ19]", Sign(), 1, False),
+        ("EF-QSGD [WHHZ18]", QSGDQuantizer(s=15), 1, False),
+        ("QTopK (Lemma 1)", QuantizedSparsifier(k=K, s=15), 1, False),
+        ("SignTopK (Lemma 3)", SignSparsifier(k=K, m=1), 1, False),
+        ("local SGD H=8 [Sti19]", Identity(), 8, False),
+        ("Qsparse-local QTopK H=8", QuantizedSparsifier(k=K, s=15), 8, False),
+        ("Qsparse-local SignTopK H=8", SignSparsifier(k=K, m=1), 8, False),
+        ("async SignTopK H=8 (Alg 2)", SignSparsifier(k=K, m=1), 8, True),
+    ]
+    print(f"{'method':30s} {'loss':>7s} {'Mbits':>10s} "
+          f"{'bits->target':>14s} {'rounds':>7s}")
+    base_bits = None
+    for name, op, H, asy in methods:
+        run = RunConfig(total_steps=T, R=R, H=H, asynchronous=asy,
+                        log_every=50, target_loss=args.target)
+        state, hist = train(grad_fn, params, sgd(), op, lr,
+                            worker_batches(x, y, R, B, T, seed=1), run)
+        btt = hist.bits_to_target
+        if name == "vanilla SGD":
+            base_bits = btt
+        rel = (f"{base_bits / btt:7.0f}x less" if btt and base_bits else "")
+        print(f"{name:30s} {hist.loss[-1]:7.3f} "
+              f"{hist.bits[-1] / 1e6:10.2f} "
+              f"{(f'{btt:.3g}' if btt else 'n/a'):>14s} "
+              f"{hist.rounds[-1]:7d}  {rel}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Config registry: ``--arch <id>`` resolution for every assigned
+architecture (plus the paper's own experiment models, which live in
+models/resnet.py and models/softmax.py)."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+ARCHS = {
+    "yi-6b": "yi_6b",
+    "stablelm-3b": "stablelm_3b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "gemma3-1b": "gemma3_1b",
+    "rwkv6-3b": "rwkv6_3b",
+    "musicgen-medium": "musicgen_medium",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "yi-34b": "yi_34b",
+    "zamba2-7b": "zamba2_7b",
+    "internvl2-26b": "internvl2_26b",
+}
+
+#: archs with a sub-quadratic long-context path => run long_500k
+LONG_CONTEXT_ARCHS = {"rwkv6-3b", "zamba2-7b", "gemma3-1b"}
+
+
+def _module(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; have {sorted(ARCHS)}")
+    return importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+
+
+def get_config(arch: str, *, smoke: bool = False, **kw) -> ModelConfig:
+    mod = _module(arch)
+    return mod.smoke() if smoke else mod.full(**kw)
+
+
+def shape_supported(arch: str, shape: str) -> tuple[bool, str]:
+    """(supported, reason) for the 10x4 dry-run matrix."""
+    sh = INPUT_SHAPES[shape]
+    if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return False, "full-attention arch; no sub-quadratic variant (DESIGN.md)"
+    return True, ""
+
+
+__all__ = [
+    "ARCHS",
+    "LONG_CONTEXT_ARCHS",
+    "INPUT_SHAPES",
+    "InputShape",
+    "ModelConfig",
+    "get_config",
+    "shape_supported",
+]

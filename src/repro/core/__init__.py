@@ -1,0 +1,41 @@
+"""Qsparse-local-SGD core: compression operators, error-feedback
+memory, sync/async engines, bit accounting, distributed production
+engine."""
+
+from repro.core import bits, operators, schedule
+from repro.core.operators import (
+    CompressionOp,
+    Identity,
+    QSGDQuantizer,
+    QuantizedSparsifier,
+    RandK,
+    RowSignTopK,
+    RowTopK,
+    Sign,
+    SignSparsifier,
+    StochasticKLevel,
+    TopK,
+    compress_tree,
+    make_operator,
+    tree_gamma,
+)
+
+__all__ = [
+    "bits",
+    "operators",
+    "schedule",
+    "CompressionOp",
+    "Identity",
+    "QSGDQuantizer",
+    "QuantizedSparsifier",
+    "RandK",
+    "RowSignTopK",
+    "RowTopK",
+    "Sign",
+    "SignSparsifier",
+    "StochasticKLevel",
+    "TopK",
+    "compress_tree",
+    "make_operator",
+    "tree_gamma",
+]

@@ -1,0 +1,151 @@
+"""Qsparse-local-SGD with asynchronous updates (paper Algorithm 2).
+
+Faithful to the paper's asynchrony model: all workers advance local
+iterates on a common global clock, but synchronize with the master at
+*per-worker* times I_T^{(r)} with gap(I_T^{(r)}) <= H.  The additional
+state vs Algorithm 1 is each worker's *view* of the master, x_t^{(r)}
+(the last broadcast it received), which can lag behind the true master
+x̄̄_t because other workers may have synced in between.
+
+Per step t (Algorithm 2 lines 4-20), with s_r = [t+1 in I_T^{(r)}]:
+
+  x̂_{t+1/2}^{(r)} = x̂_t^{(r)} - eta_t d_t^{(r)}
+  if not s_r:  x_{t+1}^{(r)} = x_t^{(r)};  m_{t+1}^{(r)} = m_t^{(r)};
+               x̂_{t+1}^{(r)} = x̂_{t+1/2}^{(r)}
+  else:        g_t^{(r)} = QComp_k(m_t^{(r)} + x_t^{(r)} - x̂_{t+1/2}^{(r)})
+               m_{t+1}^{(r)} = m_t^{(r)} + x_t^{(r)} - x̂_{t+1/2}^{(r)} - g
+  master:      x̄̄_{t+1} = x̄̄_t - (1/R) sum_{r in S} g_t^{(r)}
+  workers in S: x_{t+1}^{(r)} = x̂_{t+1}^{(r)} = x̄̄_{t+1}
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.operators import compress_tree
+from repro.optim.transforms import GradientTransform, apply_updates
+
+
+class AsyncQsparseState(NamedTuple):
+    master: Any           # x̄̄_t (true master)
+    master_view: Any      # x_t^{(r)}: last master copy each worker received [R]
+    local: Any            # x̂_t^{(r)} [R]
+    memory: Any           # m_t^{(r)} [R]
+    inner: Any            # [R]
+    step: jnp.ndarray
+    bits: jnp.ndarray
+    rounds: jnp.ndarray   # total worker-sync events
+
+
+def _replicate(tree, R: int):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (R,) + x.shape), tree
+    )
+
+
+def init(params, inner_opt: GradientTransform, R: int) -> AsyncQsparseState:
+    local = _replicate(params, R)
+    return AsyncQsparseState(
+        master=params,
+        master_view=local,
+        local=local,
+        memory=jax.tree_util.tree_map(jnp.zeros_like, local),
+        inner=jax.vmap(inner_opt.init)(local),
+        step=jnp.zeros((), jnp.int32),
+        bits=jnp.zeros((), jnp.float32),
+        rounds=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_step(
+    grad_fn: Callable,
+    inner_opt: GradientTransform,
+    operator,
+    lr_schedule: Callable,
+    R: int,
+):
+    """sync_flags: bool[R] — which workers hit a sync index at t+1.
+
+    Unlike the synchronous engine we cannot lax.cond the whole sync away
+    (different workers branch differently), so the update is computed
+    with per-worker masks; masked-out workers contribute zero to the
+    master psum and keep their state.  This is also exactly the shape the
+    production shard_map engine uses.
+    """
+
+    def step_fn(state: AsyncQsparseState, batch, sync_flags, key):
+        lr = lr_schedule(state.step)
+
+        def one(params, inner, data):
+            loss, grads = grad_fn(params, data)
+            updates, inner = inner_opt.update(grads, inner, params, lr)
+            return apply_updates(params, updates), inner, loss
+
+        half, inner, losses = jax.vmap(one)(state.local, state.inner, batch)
+
+        def worker_update(m_r, view_r, half_r, key_r, s_r):
+            delta = jax.tree_util.tree_map(
+                lambda m, x, h: m + x.astype(jnp.float32) - h.astype(jnp.float32),
+                m_r, view_r, half_r,
+            )
+            g, bits = compress_tree(operator, key_r, delta)
+            # masked: non-syncing workers transmit nothing
+            g = jax.tree_util.tree_map(
+                lambda gg: jnp.where(s_r, gg, jnp.zeros_like(gg)), g
+            )
+            new_m = jax.tree_util.tree_map(
+                lambda m, d, gg: jnp.where(s_r, d - gg, m), m_r, delta, g
+            )
+            bits = jnp.where(s_r, bits, 0.0)
+            return g, new_m, bits
+
+        keys = jax.random.split(key, R)
+        g_all, new_mem, bits_all = jax.vmap(worker_update)(
+            state.memory, state.master_view, half, keys, sync_flags
+        )
+        # master applies 1/R * sum over the syncing subset S
+        g_sum = jax.tree_util.tree_map(lambda g: jnp.sum(g, axis=0) / R, g_all)
+        new_master = jax.tree_util.tree_map(
+            lambda x, g: (x.astype(jnp.float32) - g).astype(x.dtype),
+            state.master, g_sum,
+        )
+        # only workers in S receive the broadcast
+        bcast = _replicate(new_master, R)
+
+        def select(s):  # per-leaf worker select on axis 0
+            def f(new, old):
+                shape = (R,) + (1,) * (new.ndim - 1)
+                return jnp.where(s.reshape(shape), new, old)
+            return f
+
+        sel = select(sync_flags)
+        new_view = jax.tree_util.tree_map(sel, bcast, state.master_view)
+        new_local = jax.tree_util.tree_map(sel, bcast, half)
+
+        new_state = AsyncQsparseState(
+            master=new_master,
+            master_view=new_view,
+            local=new_local,
+            memory=new_mem,
+            inner=inner,
+            step=state.step + 1,
+            bits=state.bits + jnp.sum(bits_all),
+            rounds=state.rounds + jnp.sum(sync_flags.astype(jnp.int32)),
+        )
+        return new_state, jnp.mean(losses)
+
+    return step_fn
+
+
+def run(state, step_fn, batches, sync_mask, key, jit: bool = True):
+    """sync_mask: bool[T, R] from schedule.async_schedule."""
+    fn = jax.jit(step_fn) if jit else step_fn
+    losses = []
+    for t, batch in enumerate(batches):
+        key, sub = jax.random.split(key)
+        state, loss = fn(state, batch, jnp.asarray(sync_mask[t]), sub)
+        losses.append(float(loss))
+    return state, losses

@@ -1,0 +1,84 @@
+"""Exact wire-bit accounting for every operator (the paper's x-axis).
+
+Conventions (conservative, matching the paper's setup):
+  * a dense float update costs ``value_bits`` per coordinate (32 default);
+  * a sparse update sends (index, value) pairs: ceil(log2(d)) bits per
+    index plus value bits per coordinate, plus one 32-bit length field;
+  * Rand_k indices are derivable from a shared seed, so only a 32-bit
+    seed + k values cross the wire;
+  * QSGD sends the 32-bit norm, one sign bit and ceil(log2(s+1)) level
+    bits per *non-zero* coordinate plus a bitmap-free index for zeros via
+    the same sparse encoding (we charge the index only for non-zeros,
+    matching QSGD's Elias-coded sparsity gains qualitatively while staying
+    an exact, implementable format);
+  * SignTop_k sends a 32-bit scale, k indices, k sign bits.
+
+Everything returns float (bits can be data dependent through the
+non-zero count for stochastic quantizers => returned as a traced scalar).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def _idx_bits(d: int) -> int:
+    return max(1, math.ceil(math.log2(max(d, 2))))
+
+
+def _level_bits(s: int) -> int:
+    return max(1, math.ceil(math.log2(s + 1)))
+
+
+def bits_dense(d: int, value_bits: int = 32) -> float:
+    return float(d * value_bits)
+
+
+def bits_topk(d: int, k: int, value_bits: int = 32) -> float:
+    return float(32 + k * (_idx_bits(d) + value_bits))
+
+
+def bits_randk(d: int, k: int, value_bits: int = 32) -> float:
+    # indices recoverable from a shared 32-bit seed
+    return float(32 + 32 + k * value_bits)
+
+
+def bits_sign(d: int) -> float:
+    # 32-bit scale + one bit per coordinate
+    return float(32 + d)
+
+
+def bits_signtopk(d: int, k: int) -> float:
+    return float(32 + k * (_idx_bits(d) + 1))
+
+
+def bits_klevel(d: int, s: int) -> float:
+    # lo & hi 32-bit floats + level bits per coordinate
+    return float(64 + d * _level_bits(s))
+
+
+def bits_qsgd(d: int, s: int, nnz) -> jnp.ndarray:
+    """norm + per-nonzero (index + sign + level).  nnz may be traced."""
+    per = _idx_bits(d) + 1 + _level_bits(s)
+    return jnp.asarray(32 + 32, jnp.float32) + jnp.asarray(nnz, jnp.float32) * per
+
+
+def bits_qtopk(d: int, k: int, s: int, nnz) -> jnp.ndarray:
+    """TopK then QSGD on the k survivors: indices for k, levels only for
+    the quantizer's non-zeros (QSGD may zero some survivors)."""
+    per_idx = _idx_bits(d)
+    per_val = 1 + _level_bits(s)
+    return (
+        jnp.asarray(32 + 32 + k * per_idx, jnp.float32)
+        + jnp.asarray(nnz, jnp.float32) * per_val
+    )
+
+
+def bits_qrandk(d: int, k: int, s: int, nnz) -> jnp.ndarray:
+    per_val = 1 + _level_bits(s)
+    return (
+        jnp.asarray(32 + 32 + 32, jnp.float32)
+        + jnp.asarray(nnz, jnp.float32) * per_val
+    )

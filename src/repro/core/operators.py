@@ -1,0 +1,502 @@
+"""Communication-efficient compression operators (paper Section 2).
+
+Every operator maps a flat (or arbitrary-shaped) array to a *dense*
+array of the same shape containing the decompressed update (the value the
+master will apply), plus an exact count of bits that would cross the wire
+for that update.  The dense representation keeps the algorithm math
+identical to the paper while the bits ledger accounts the true wire cost.
+
+Operators satisfy (or are tested against) Definition 3:
+
+    E ||x - C(x)||^2 <= (1 - gamma) ||x||^2,   gamma in (0, 1].
+
+Implemented (with the paper's lemma references):
+  * ``Identity``                 -- gamma = 1 (vanilla SGD / local-SGD)
+  * ``TopK`` / ``RandK``         -- gamma = k/d                     [SCJ18]
+  * ``QSGDQuantizer``            -- Definition 1, beta = min(d/s^2, sqrt(d)/s)
+  * ``StochasticKLevel``         -- Definition 1, beta = d/(2 s^2)
+  * ``Sign``                     -- Definition 2 (biased 1-bit)
+  * ``QuantizedSparsifier``      -- Lemma 1 (unscaled) / Lemma 2 (scaled)
+  * ``SignSparsifier``           -- Lemma 3 (Sign o Comp_k, ||.||_m / k scale)
+  * ``RowTopK``                  -- per-row top-k: the TP-shard-local variant
+                                    (Corollary 1 piecewise compression)
+
+All operators are stateless pytrees (dataclass + tree_util registration)
+so they can be closed over inside jit/shard_map without retracing hazards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bits as bitlib
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _flat(x: Array) -> Array:
+    return x.reshape(-1)
+
+
+def _static_size(x: Array) -> int:
+    return int(x.size)
+
+
+def resolve_k(k: int | float, d: int) -> int:
+    """k may be an absolute count or a fraction of d."""
+    if isinstance(k, float) and 0.0 < k < 1.0:
+        kk = max(1, int(round(k * d)))
+    else:
+        kk = int(k)
+    return max(1, min(kk, d))
+
+
+# ---------------------------------------------------------------------------
+# base
+# ---------------------------------------------------------------------------
+
+
+class CompressionOp:
+    """Base class.  Subclasses implement ``_compress_flat``."""
+
+    #: True if the operator consumes randomness.
+    stochastic: bool = False
+
+    def __call__(self, key: Optional[Array], x: Array) -> Tuple[Array, Array]:
+        """Returns ``(x_hat, bits)``: dense decompressed update + wire bits."""
+        flat = _flat(x)
+        out, bits = self._compress_flat(key, flat)
+        return out.reshape(x.shape).astype(x.dtype), bits
+
+    def _compress_flat(self, key, x):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def gamma(self, d: int) -> float:
+        """Compression coefficient from the paper (for theory checks)."""
+        raise NotImplementedError
+
+
+def _register(cls):
+    """Register a dataclass operator as a static pytree (no leaves)."""
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    jax.tree_util.register_pytree_node(
+        cls,
+        lambda op: ((), dataclasses.astuple(op)),
+        lambda aux, _: cls(*aux),
+    )
+    return cls
+
+
+# ---------------------------------------------------------------------------
+# identity / sparsifiers
+# ---------------------------------------------------------------------------
+
+
+@_register
+class Identity(CompressionOp):
+    """No compression; full-precision dense update (vanilla / local SGD)."""
+
+    value_bits: int = 32
+
+    def _compress_flat(self, key, x):
+        return x, jnp.asarray(bitlib.bits_dense(x.size, self.value_bits), jnp.float64
+                              if jax.config.read("jax_enable_x64") else jnp.float32)
+
+    def gamma(self, d):
+        return 1.0
+
+
+@_register
+class TopK(CompressionOp):
+    """Keep the k largest-magnitude coordinates at full precision."""
+
+    k: float = 0.01  # int count or fraction
+    value_bits: int = 32
+
+    def _compress_flat(self, key, x):
+        d = _static_size(x)
+        k = resolve_k(self.k, d)
+        xf = x.astype(jnp.float32)
+        vals, idx = jax.lax.top_k(jnp.abs(xf), k)
+        out = jnp.zeros_like(xf).at[idx].set(xf[idx])
+        bits = bitlib.bits_topk(d, k, self.value_bits)
+        return out, jnp.asarray(bits, jnp.float32)
+
+    def gamma(self, d):
+        return resolve_k(self.k, d) / d
+
+
+@_register
+class RandK(CompressionOp):
+    """Keep k uniformly random coordinates at full precision."""
+
+    k: float = 0.01
+    value_bits: int = 32
+    stochastic = True
+
+    def _compress_flat(self, key, x):
+        d = _static_size(x)
+        k = resolve_k(self.k, d)
+        xf = x.astype(jnp.float32)
+        idx = jax.random.choice(key, d, shape=(k,), replace=False)
+        out = jnp.zeros_like(xf).at[idx].set(xf[idx])
+        # Rand_k indices can be seeded: only the seed + values cross the wire.
+        bits = bitlib.bits_randk(d, k, self.value_bits)
+        return out, jnp.asarray(bits, jnp.float32)
+
+    def gamma(self, d):
+        return resolve_k(self.k, d) / d
+
+
+@_register
+class RowTopK(CompressionOp):
+    """Top-k per row of a 2D-reshaped tensor (blockwise Top_k).
+
+    This is the TP-friendly variant: applied per model shard it never
+    crosses shard boundaries, and by Corollary 1 (piecewise compression)
+    the composition over rows/shards is a compression operator with
+    gamma = k_row / row_len.
+
+    ``row_len`` rows are formed from the flattened tensor (padding with
+    zeros if needed); ``k`` is per-row.
+    """
+
+    k: float = 0.01
+    row_len: int = 4096
+    value_bits: int = 32
+
+    def _compress_flat(self, key, x):
+        d = _static_size(x)
+        row = min(self.row_len, d)
+        k = resolve_k(self.k, row)
+        pad = (-d) % row
+        xf = jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(-1, row)
+        vals, idx = jax.lax.top_k(jnp.abs(xf), k)
+        out = jnp.zeros_like(xf)
+        out = jax.vmap(lambda o, i, v: o.at[i].set(v))(
+            out, idx, jnp.take_along_axis(xf, idx, axis=1)
+        )
+        out = out.reshape(-1)[:d]
+        nrows = (d + pad) // row
+        bits = nrows * bitlib.bits_topk(row, k, self.value_bits)
+        return out, jnp.asarray(bits, jnp.float32)
+
+    def gamma(self, d):
+        row = min(self.row_len, d)
+        return resolve_k(self.k, row) / row
+
+
+# ---------------------------------------------------------------------------
+# quantizers (Definition 1 / Definition 2)
+# ---------------------------------------------------------------------------
+
+
+@_register
+class QSGDQuantizer(CompressionOp):
+    """QSGD [AGL+17]: q_i = ||x||_2 * sign(x_i) * xi_i / s.
+
+    xi_i stochastically rounds s*|x_i|/||x|| to an adjacent integer level.
+    Unbiased; E||Q(x)||^2 <= (1 + beta) ||x||^2 with
+    beta = min(d/s^2, sqrt(d)/s).
+    """
+
+    s: int = 15  # number of levels (4-bit quantizer => s = 2^4 - 1)
+    stochastic = True
+
+    def _compress_flat(self, key, x):
+        xf = x.astype(jnp.float32)
+        out = qsgd_quantize(key, xf, self.s)
+        d = _static_size(x)
+        nz = jnp.sum(out != 0.0)
+        bits = bitlib.bits_qsgd(d, self.s, nz)
+        return out, bits
+
+    def beta(self, d: int) -> float:
+        return min(d / self.s**2, math.sqrt(d) / self.s)
+
+    def gamma(self, d):
+        b = self.beta(d)
+        if b >= 1.0:
+            return 0.0  # outside Lemma-1 operating regime
+        return 1.0 - b
+
+
+def qsgd_quantize(key: Array, x: Array, s: int) -> Array:
+    """Core QSGD map (shared with the kernel oracle)."""
+    norm = jnp.linalg.norm(x)
+    safe = jnp.where(norm > 0, norm, 1.0)
+    level = jnp.abs(x) / safe * s           # in [0, s]
+    low = jnp.floor(level)
+    prob = level - low
+    u = jax.random.uniform(key, x.shape)
+    xi = low + (u < prob).astype(jnp.float32)
+    q = norm * jnp.sign(x) * xi / s
+    return jnp.where(norm > 0, q, jnp.zeros_like(x))
+
+
+@_register
+class StochasticKLevel(CompressionOp):
+    """Stochastic s-level quantization between min_i x_i and max_i x_i
+    [SYKM17, ZDJW13]; beta = d / (2 s^2)."""
+
+    s: int = 15
+    stochastic = True
+
+    def _compress_flat(self, key, x):
+        xf = x.astype(jnp.float32)
+        lo, hi = jnp.min(xf), jnp.max(xf)
+        span = jnp.where(hi > lo, hi - lo, 1.0)
+        level = (xf - lo) / span * self.s
+        low = jnp.floor(level)
+        prob = level - low
+        u = jax.random.uniform(key, xf.shape)
+        xi = low + (u < prob).astype(jnp.float32)
+        out = lo + xi / self.s * span
+        out = jnp.where(hi > lo, out, xf)
+        d = _static_size(x)
+        bits = jnp.asarray(bitlib.bits_klevel(d, self.s), jnp.float32)
+        return out, bits
+
+    def beta(self, d: int) -> float:
+        return d / (2.0 * self.s**2)
+
+    def gamma(self, d):
+        b = self.beta(d)
+        return max(0.0, 1.0 - b)
+
+
+@_register
+class Sign(CompressionOp):
+    """Deterministic 1-bit sign quantizer, scaled by ||x||_1 / d so that it
+    is a compression operator (Lemma 3 with k = d, m = 1)."""
+
+    def _compress_flat(self, key, x):
+        xf = x.astype(jnp.float32)
+        d = _static_size(x)
+        scale = jnp.sum(jnp.abs(xf)) / d
+        sg = jnp.where(xf >= 0, 1.0, -1.0)
+        out = scale * sg
+        bits = jnp.asarray(bitlib.bits_sign(d), jnp.float32)
+        return out, bits
+
+    def gamma(self, d):
+        return 1.0 / d  # worst case (Lemma 3, m = 1 lower term)
+
+
+# ---------------------------------------------------------------------------
+# compositions (Lemmas 1-3)
+# ---------------------------------------------------------------------------
+
+
+@_register
+class QuantizedSparsifier(CompressionOp):
+    """``Q_s ∘ Comp_k``: QSGD (or k-level) applied to the k surviving
+    coordinates of Top_k/Rand_k.
+
+    scaled=False -> Lemma 1 (requires beta_{k,s} < 1; gamma=(1-beta)k/d)
+    scaled=True  -> Lemma 2 (always compression; gamma = k/(d(1+beta)))
+    """
+
+    k: float = 0.01
+    s: int = 15
+    scaled: bool = False
+    sparsifier: str = "top"  # "top" | "rand"
+    quantizer: str = "qsgd"  # "qsgd" | "klevel"
+    stochastic = True
+
+    def _compress_flat(self, key, x):
+        d = _static_size(x)
+        k = resolve_k(self.k, d)
+        xf = x.astype(jnp.float32)
+        k_key, q_key = jax.random.split(key)
+        if self.sparsifier == "top":
+            _, idx = jax.lax.top_k(jnp.abs(xf), k)
+        else:
+            idx = jax.random.choice(k_key, d, shape=(k,), replace=False)
+        sel = xf[idx]  # compact k-vector: quantize it as a k-dim vector
+        if self.quantizer == "qsgd":
+            qsel = qsgd_quantize(q_key, sel, self.s)
+            beta = min(k / self.s**2, math.sqrt(k) / self.s)
+        else:
+            lo, hi = jnp.min(sel), jnp.max(sel)
+            span = jnp.where(hi > lo, hi - lo, 1.0)
+            level = (sel - lo) / span * self.s
+            low = jnp.floor(level)
+            u = jax.random.uniform(q_key, sel.shape)
+            xi = low + (u < (level - low)).astype(jnp.float32)
+            qsel = jnp.where(hi > lo, lo + xi / self.s * span, sel)
+            beta = k / (2.0 * self.s**2)
+        if self.scaled:
+            qsel = qsel / (1.0 + beta)
+        out = jnp.zeros_like(xf).at[idx].set(qsel)
+        nz = jnp.sum(qsel != 0.0)
+        if self.sparsifier == "top":
+            bits = bitlib.bits_qtopk(d, k, self.s, nz)
+        else:
+            bits = bitlib.bits_qrandk(d, k, self.s, nz)
+        return out, bits
+
+    def beta(self, d: int) -> float:
+        k = resolve_k(self.k, d)
+        if self.quantizer == "qsgd":
+            return min(k / self.s**2, math.sqrt(k) / self.s)
+        return k / (2.0 * self.s**2)
+
+    def gamma(self, d):
+        k = resolve_k(self.k, d)
+        b = self.beta(d)
+        if self.scaled:
+            return k / (d * (1.0 + b))
+        return max(0.0, (1.0 - b) * k / d)
+
+
+@_register
+class SignSparsifier(CompressionOp):
+    """``SignComp_k`` (Lemma 3): 1-bit sign of the k selected coordinates,
+    scaled by ||Comp_k(x)||_m / k.  m=1 or 2 supported."""
+
+    k: float = 0.01
+    m: int = 1
+    sparsifier: str = "top"
+    stochastic = True  # only when sparsifier == "rand"
+
+    def _compress_flat(self, key, x):
+        d = _static_size(x)
+        k = resolve_k(self.k, d)
+        xf = x.astype(jnp.float32)
+        if self.sparsifier == "top":
+            _, idx = jax.lax.top_k(jnp.abs(xf), k)
+        else:
+            idx = jax.random.choice(key, d, shape=(k,), replace=False)
+        sel = xf[idx]
+        if self.m == 1:
+            norm = jnp.sum(jnp.abs(sel))
+        else:
+            norm = jnp.linalg.norm(sel)
+        sg = jnp.where(sel >= 0, 1.0, -1.0)
+        out = jnp.zeros_like(xf).at[idx].set(norm / k * sg)
+        bits = jnp.asarray(bitlib.bits_signtopk(d, k), jnp.float32)
+        return out, bits
+
+    def gamma(self, d):
+        k = resolve_k(self.k, d)
+        if self.m == 1:
+            return 1.0 / d  # conservative lower bound from Lemma 3
+        return k ** (2.0 / self.m - 1.0) / d
+
+
+@_register
+class RowSignTopK(CompressionOp):
+    """SignTopK applied per row (TP-shard/block-local SignComp_k)."""
+
+    k: float = 0.01
+    row_len: int = 4096
+    m: int = 2
+
+    def _compress_flat(self, key, x):
+        d = _static_size(x)
+        row = min(self.row_len, d)
+        k = resolve_k(self.k, row)
+        pad = (-d) % row
+        xf = jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(-1, row)
+        _, idx = jax.lax.top_k(jnp.abs(xf), k)
+        sel = jnp.take_along_axis(xf, idx, axis=1)
+        if self.m == 1:
+            norm = jnp.sum(jnp.abs(sel), axis=1, keepdims=True)
+        else:
+            norm = jnp.linalg.norm(sel, axis=1, keepdims=True)
+        sg = jnp.where(sel >= 0, 1.0, -1.0)
+        out = jnp.zeros_like(xf)
+        out = jax.vmap(lambda o, i, v: o.at[i].set(v))(out, idx, norm / k * sg)
+        out = out.reshape(-1)[:d]
+        nrows = (d + pad) // row
+        bits = jnp.asarray(nrows * bitlib.bits_signtopk(row, k), jnp.float32)
+        return out, bits
+
+    def gamma(self, d):
+        row = min(self.row_len, d)
+        k = resolve_k(self.k, row)
+        return k ** (2.0 / self.m - 1.0) / row
+
+
+# ---------------------------------------------------------------------------
+# piecewise application over pytrees (Corollary 1)
+# ---------------------------------------------------------------------------
+
+
+def compress_tree(op_tree, key: Optional[Array], grads):
+    """Apply a (tree of) compression operator(s) leafwise.
+
+    ``op_tree`` is a single CompressionOp (broadcast to all leaves) or a
+    pytree-prefix of operators.  Returns (compressed_tree, total_bits).
+    By Corollary 1 the leafwise application is itself a compression
+    operator with gamma = min_i gamma_i.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    if isinstance(op_tree, CompressionOp):
+        ops = [op_tree] * len(leaves)
+    else:
+        ops = jax.tree_util.tree_leaves(
+            op_tree, is_leaf=lambda z: isinstance(z, CompressionOp)
+        )
+        if len(ops) != len(leaves):
+            raise ValueError(
+                f"operator tree has {len(ops)} leaves, grads have {len(leaves)}"
+            )
+    if key is not None:
+        keys = jax.random.split(key, len(leaves))
+    else:
+        keys = [None] * len(leaves)
+    outs, bit_terms = [], []
+    for op, k, g in zip(ops, keys, leaves):
+        o, b = op(k, g)
+        outs.append(o)
+        bit_terms.append(jnp.asarray(b, jnp.float32))
+    total_bits = jnp.sum(jnp.stack(bit_terms)) if bit_terms else jnp.float32(0)
+    return jax.tree_util.tree_unflatten(treedef, outs), total_bits
+
+
+def tree_gamma(op_tree, grads) -> float:
+    """min_i gamma_i over leaves (Corollary 1)."""
+    leaves = jax.tree_util.tree_leaves(grads)
+    if isinstance(op_tree, CompressionOp):
+        ops = [op_tree] * len(leaves)
+    else:
+        ops = jax.tree_util.tree_leaves(
+            op_tree, is_leaf=lambda z: isinstance(z, CompressionOp)
+        )
+    return min(op.gamma(int(l.size)) for op, l in zip(ops, leaves))
+
+
+# registry for config-driven construction --------------------------------
+
+OPERATORS = {
+    "identity": Identity,
+    "topk": TopK,
+    "randk": RandK,
+    "row_topk": RowTopK,
+    "qsgd": QSGDQuantizer,
+    "klevel": StochasticKLevel,
+    "sign": Sign,
+    "qtopk": partial(QuantizedSparsifier, sparsifier="top"),
+    "qrandk": partial(QuantizedSparsifier, sparsifier="rand"),
+    "signtopk": partial(SignSparsifier, sparsifier="top"),
+    "row_signtopk": RowSignTopK,
+}
+
+
+def make_operator(name: str, **kw) -> CompressionOp:
+    if name not in OPERATORS:
+        raise KeyError(f"unknown operator {name!r}; have {sorted(OPERATORS)}")
+    return OPERATORS[name](**kw)

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  * topk_compress — fused blockwise Top_k select (bisection threshold)
+    + optional Sign quantize + error-memory update (the per-sync
+    compression of ~25M-element accumulators).
+  * flash_attention — causal/sliding-window online-softmax attention
+    used by the transformer substrate.
+  * qsgd — bucketed stochastic s-level quantization.
+
+Each has a pure-jnp oracle in ``ref.py`` and a jit'd wrapper in
+``ops.py``; interpret=True executes the kernel body on CPU for the
+correctness sweeps in tests/test_kernels.py.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

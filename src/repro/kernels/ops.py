@@ -1,0 +1,45 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to auto: True off-TPU (this container is
+CPU-only; interpret mode executes the kernel body in Python/XLA for
+validation), False on real TPU backends.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import qsgd as _qsgd
+from repro.kernels import topk_compress as _topk
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("k", "iters", "sign", "interpret"))
+def topk_compress(acc, k: int, *, iters: int = 24, sign: bool = False,
+                  interpret: bool | None = None):
+    return _topk.topk_compress(acc, k, iters=iters, sign=sign,
+                               interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("window", "q_block", "kv_block",
+                                   "interpret"))
+def flash_attention(q, k, v, *, window: int = -1, q_block: int = 128,
+                    kv_block: int = 128, interpret: bool | None = None):
+    return _fa.flash_attention_fwd(
+        q, k, v, window=window, q_block=q_block, kv_block=kv_block,
+        interpret=_auto_interpret(interpret),
+    )
+
+
+@partial(jax.jit, static_argnames=("s", "interpret"))
+def qsgd_quantize(x, u, s: int, *, interpret: bool | None = None):
+    return _qsgd.qsgd_quantize(x, u, s, interpret=_auto_interpret(interpret))

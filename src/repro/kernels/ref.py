@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These define the exact semantics the kernels must reproduce; the tests
+sweep shapes/dtypes and assert allclose between kernel (interpret=True
+on CPU) and these references.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# topk_compress: bisection-threshold top-k select + fused error update
+# ---------------------------------------------------------------------------
+
+
+def topk_compress_ref(acc: jnp.ndarray, k: int, *, iters: int = 24,
+                      sign: bool = False):
+    """acc: [rows, n] error-compensated accumulator (m + x - x̂).
+
+    Per row: find (by bisection, ``iters`` rounds) the largest threshold
+    keeping >= k entries of |acc|; select those entries (full precision,
+    or sign * ||sel||_2/count when ``sign``); the fused error update is
+    m' = acc - selected.
+
+    Returns (selected, new_memory, count_per_row).
+    """
+    a = jnp.abs(acc.astype(jnp.float32))
+    hi = jnp.max(a, axis=1, keepdims=True)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum(a >= mid, axis=1, keepdims=True)
+        # too many kept -> raise threshold; too few -> lower it
+        lo = jnp.where(cnt > k, mid, lo)
+        hi = jnp.where(cnt > k, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    thr = lo  # keeps >= k entries (conservative side)
+    mask = a >= thr
+    cnt = jnp.sum(mask, axis=1)
+    sel = jnp.where(mask, acc.astype(jnp.float32), 0.0)
+    if sign:
+        norm = jnp.sqrt(jnp.sum(jnp.square(sel), axis=1, keepdims=True))
+        denom = jnp.maximum(cnt[:, None].astype(jnp.float32), 1.0)
+        sel = jnp.where(mask, jnp.sign(acc) * norm / denom, 0.0)
+    new_mem = acc.astype(jnp.float32) - sel
+    return sel, new_mem, cnt
+
+
+# ---------------------------------------------------------------------------
+# flash attention (causal, optional sliding window), GQA
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_ref(q, k, v, *, window: int = -1):
+    """q: [B, S, H, D]; k, v: [B, S, KV, D].  Causal; window > 0 limits
+    attention to the last ``window`` positions.  f32 accumulation."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, S, KV, G, D) * (D ** -0.5)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32))
+    pos = jnp.arange(S)
+    mask = pos[None, :] <= pos[:, None]
+    if window > 0:
+        mask &= pos[None, :] > pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# bucketed QSGD stochastic quantization
+# ---------------------------------------------------------------------------
+
+
+def qsgd_bucketed_ref(x: jnp.ndarray, u: jnp.ndarray, s: int):
+    """x: [buckets, n]; u: uniform [buckets, n] in [0,1).  Per-bucket l2
+    norm; levels xi stochastically rounded.  Returns quantized [buckets, n]."""
+    xf = x.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(jnp.square(xf), axis=1, keepdims=True))
+    safe = jnp.where(norm > 0, norm, 1.0)
+    level = jnp.abs(xf) / safe * s
+    low = jnp.floor(level)
+    xi = low + (u < (level - low)).astype(jnp.float32)
+    q = norm * jnp.sign(xf) * xi / s
+    return jnp.where(norm > 0, q, jnp.zeros_like(xf))

@@ -1,0 +1,32 @@
+"""HLO-text collective parsing (importable without touching jax device
+state — dryrun.py re-exports it)."""
+
+from __future__ import annotations
+
+import re
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([\d,]*)\][^=]*?\s"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\("
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-tensor bytes per collective kind from (per-device
+    partitioned) HLO text."""
+    out: dict = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        dtype, dims, kind = m.groups()
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        if dims:
+            for d in dims.split(","):
+                nbytes *= int(d)
+        out[kind] = out.get(kind, 0) + nbytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out

@@ -1,0 +1,115 @@
+"""Production training launcher.
+
+Drives the distributed Qsparse-local-SGD engine (core/distributed.py)
+for any assigned architecture on a jax mesh.  On real TPU hardware this
+is the per-host entry point (jax.distributed handles multi-host); on
+this CPU container it runs with forced host devices for integration
+testing:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+      --mesh 4x2 --steps 20 --H 4
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.core.distributed import ShardCompressor, make_dist_steps
+from repro.data import LMTokenStream
+from repro.launch.mesh import data_axes, worker_count
+from repro.models import get_model
+from repro.optim import momentum_sgd, warmup_piecewise
+from repro.sharding.specs import activation_policy, param_specs, sanitize_spec
+from repro.train import checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--mesh", default="4x2",
+                    help="DxM or PxDxM device mesh, e.g. 16x16 or 2x16x16")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=2, help="per-worker batch")
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--H", type=int, default=4)
+    ap.add_argument("--k-frac", type=float, default=0.01)
+    ap.add_argument("--compressor", default="topk",
+                    choices=["topk", "signtopk", "none"])
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    dims = [int(x) for x in args.mesh.split("x")]
+    names = ("pod", "data", "model")[-len(dims):]
+    mesh = jax.make_mesh(tuple(dims), names)
+    daxes = data_axes(mesh)
+    R = worker_count(mesh)
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = get_model(cfg)
+    policy = activation_policy(cfg, for_serving=False, data_axes=daxes)
+    specs = param_specs(cfg)
+
+    def grad_fn(params, batch):
+        def loss(p):
+            l, _ = model.loss_fn(p, batch, cfg, policy)
+            return l
+        return jax.value_and_grad(loss)(params)
+
+    init_fn, local_step, sync_step = make_dist_steps(
+        grad_fn, momentum_sgd(0.9),
+        ShardCompressor(args.compressor, args.k_frac),
+        warmup_piecewise(args.lr, 5, [int(args.steps * 0.8)]),
+        mesh, daxes, specs, zero1=args.zero1,
+    )
+    from jax.sharding import NamedSharding
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    put_specs = jax.tree_util.tree_map(
+        lambda leaf, sp: NamedSharding(
+            mesh, sanitize_spec(sp, leaf.shape, mesh)),
+        params, specs,
+        is_leaf=lambda z: hasattr(z, "shape") and not isinstance(z, dict),
+    )
+    with jax.set_mesh(mesh):
+        params = jax.device_put(params, put_specs)
+        state = init_fn(params)
+        ls, ss = jax.jit(local_step), jax.jit(sync_step)
+        stream = LMTokenStream(vocab=cfg.vocab, R=R, order=64, seed=0)
+        key = jax.random.PRNGKey(1)
+        t0 = time.time()
+        for t, batch in enumerate(
+                stream.batches(args.batch, args.seq, args.steps, seed=1)):
+            key, sub = jax.random.split(key)
+            b = {"tokens": jnp.asarray(batch["tokens"])}
+            if cfg.modality:
+                b["prefix_embeds"] = 0.02 * jax.random.normal(
+                    sub, (R, args.batch, cfg.n_frontend_tokens, cfg.d_model))
+            if (t + 1) % args.H == 0 or t == args.steps - 1:
+                state, loss = ss(state, b, sub)
+                kind = "sync "
+            else:
+                state, loss = ls(state, b, sub)
+                kind = "local"
+            print(f"step {t + 1:4d} [{kind}] loss {float(loss):.4f} "
+                  f"bits {float(state.bits):.3g}", flush=True)
+        dt = time.time() - t0
+    print(f"\n{args.steps} steps in {dt:.1f}s ({args.steps / dt:.2f} it/s); "
+          f"R={R} workers, {int(state.rounds)} sync rounds, "
+          f"{float(state.bits):.3g} wire bits")
+    assert np.isfinite(float(loss))
+    if args.ckpt:
+        checkpoint.save(args.ckpt, state.master, step=args.steps)
+        print("checkpoint saved to", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Family dispatcher: uniform access to every architecture family.
+
+Each family exposes:
+    init_params(key, cfg)
+    loss_fn(params, batch, cfg, policy=...) -> (loss, aux)
+    prefill(params, batch, cfg, policy=..., max_len=...) -> (logits, cache, n)
+    decode_step(params, cache, token, pos, cfg, policy=...) -> (logits, cache)
+    init_cache(cfg, batch, max_len)   (families with a decode path)
+"""
+
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+from repro.configs.base import ModelConfig
+from repro.models import moe, rwkv6, transformer, zamba2
+
+
+def get_model(cfg: ModelConfig) -> SimpleNamespace:
+    fam = cfg.family
+    if fam == "dense":
+        m = transformer
+    elif fam == "moe":
+        m = moe
+    elif fam == "rwkv6":
+        m = rwkv6
+    elif fam == "zamba2":
+        m = zamba2
+    else:
+        raise KeyError(f"unknown family {fam!r}")
+    return SimpleNamespace(
+        init_params=m.init_params,
+        loss_fn=m.loss_fn,
+        prefill=m.prefill,
+        decode_step=m.decode_step,
+        init_cache=getattr(m, "init_cache", None),
+        forward=getattr(m, "forward", None),
+        module=m,
+    )

@@ -1,0 +1,320 @@
+"""Shared transformer building blocks.
+
+Everything is a pure function over explicit parameter pytrees; stacks
+are scanned (params stacked on a leading layer axis) where the layer
+structure is uniform, unrolled otherwise (e.g. gemma3's mixed
+local/global attention with per-kind cache shapes).
+
+Attention is memory-efficient by construction: query-chunked online
+softmax (flash-style) so an S x S score matrix is never materialized.
+KV caches are ring buffers of length min(window, max_len) with an
+explicit slot->position array, which makes full, sliding-window and
+long-context decode masks uniform.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShardingPolicy
+
+Array = jax.Array
+
+
+def maybe_shard(x: Array, spec: Optional[P]) -> Array:
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def pvary(x, axes):
+    """Mark ``x`` as varying over the manual axes ``axes`` (vma typing
+    for scan carries created inside a shard_map region)."""
+    if not axes:
+        return x
+    return jax.tree_util.tree_map(lambda t: jax.lax.pvary(t, tuple(axes)), x)
+
+
+# ---------------------------------------------------------------------------
+# norms / embeddings / rope
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: Array, w: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [..., S, H, hd]; positions: [..., S] (int)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32)[..., None, :] * 1.0
+    # ang: [..., S, 1, 1] broadcasting against freqs [half]
+    ang = positions.astype(jnp.float32)[..., None, None] * freqs  # [..., S, 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def embed(tokens: Array, table: Array) -> Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def attn_params(key, cfg: ModelConfig, stacked: int | None):
+    """Per-layer (or [L]-stacked) GQA projection weights."""
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    pre = (stacked,) if stacked else ()
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], pre + (d, H * hd), cfg.pdtype),
+        "wk": dense_init(ks[1], pre + (d, KV * hd), cfg.pdtype),
+        "wv": dense_init(ks[2], pre + (d, KV * hd), cfg.pdtype),
+        "wo": dense_init(ks[3], pre + (H * hd, d), cfg.pdtype),
+    }
+
+
+def mlp_params(key, cfg: ModelConfig, stacked: int | None, d_ff=None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    pre = (stacked,) if stacked else ()
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(ks[0], pre + (d, ff), cfg.pdtype),
+        "w3": dense_init(ks[1], pre + (d, ff), cfg.pdtype),
+        "w2": dense_init(ks[2], pre + (ff, d), cfg.pdtype),
+    }
+
+
+def norm_params(cfg: ModelConfig, stacked: int | None):
+    pre = (stacked,) if stacked else ()
+    return jnp.zeros(pre + (cfg.d_model,), cfg.pdtype)
+
+
+# ---------------------------------------------------------------------------
+# attention core
+# ---------------------------------------------------------------------------
+
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q: Array, k: Array) -> Array:
+    """q: [B, Sq, KV, G, hd], k: [B, Sk, KV, hd] -> [B, KV, G, Sq, Sk]."""
+    return jnp.einsum("bqkgh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32)
+
+
+def _gqa_out(p: Array, v: Array) -> Array:
+    """p: [B, KV, G, Sq, Sk], v: [B, Sk, KV, hd] -> [B, Sq, KV, G, hd]."""
+    return jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(p.dtype))
+
+
+def chunked_attention(
+    q: Array,                # [B, S, H, hd] (already rope'd)
+    k: Array,                # [B, S, KV, hd]
+    v: Array,                # [B, S, KV, hd]
+    *,
+    window: int,             # -1 = full causal
+    q_chunk: int,
+    q_offset: Array | int = 0,  # global position of q[0] (prefill continuation)
+) -> Array:
+    """Causal (optionally sliding-window) attention, scanned over query
+    chunks so peak score memory is O(q_chunk * S)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qc = min(q_chunk, S)
+    pad = (-S) % qc
+    nchunk = (S + pad) // qc
+
+    qr = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qr = qr.reshape(B, nchunk, qc, KV, G, hd)
+    kpos = jnp.arange(S)
+
+    def one_chunk(ci, qchunk):
+        # qchunk: [B, qc, KV, G, hd]; local (same-array) positions suffice
+        # for causality since q and k index the same S tokens.
+        qpos = ci * qc + jnp.arange(qc)
+        s = _gqa_scores(qchunk.astype(jnp.float32) * scale, k.astype(jnp.float32))
+        mask = kpos[None, :] <= qpos[:, None]
+        # window may be a static int or a traced per-layer scalar (scan)
+        if window is None:
+            pass
+        elif isinstance(window, (int, np.integer)):
+            if window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - window
+        else:
+            w = jnp.asarray(window)
+            mask &= jnp.where(w > 0, kpos[None, :] > qpos[:, None] - w, True)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return _gqa_out(p, v)
+
+    if nchunk == 1:
+        out = one_chunk(0, qr[:, 0])[:, None]
+    else:
+        out = jax.lax.map(
+            lambda args: one_chunk(args[0], args[1]),
+            (jnp.arange(nchunk), jnp.moveaxis(qr, 1, 0)),
+        )
+        out = jnp.moveaxis(out, 0, 1)
+    out = out.reshape(B, nchunk * qc, H, hd)[:, :S]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (ring buffer with slot->position map)
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: Array      # [B, C, KV, hd]  (possibly [L, ...] stacked outside)
+    v: Array      # [B, C, KV, hd]
+    pos: Array    # [C] int32, -1 = empty; global position held by the slot
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, window: int, max_len: int,
+                  stacked: int | None = None, dtype=None) -> KVCache:
+    C = max_len if window is None or window <= 0 else min(window, max_len)
+    pre = (stacked,) if stacked else ()
+    dt = dtype or cfg.adtype
+    return KVCache(
+        k=jnp.zeros(pre + (batch, C, cfg.n_kv_heads, cfg.hd), dt),
+        v=jnp.zeros(pre + (batch, C, cfg.n_kv_heads, cfg.hd), dt),
+        pos=jnp.full(pre + (C,), -1, jnp.int32),
+    )
+
+
+def cache_write(cache: KVCache, k_new: Array, v_new: Array, pos) -> KVCache:
+    """Write one token (k_new/v_new: [B, 1, KV, hd]) at global ``pos``."""
+    C = cache.k.shape[1]
+    slot = jnp.mod(pos, C)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+    p = jax.lax.dynamic_update_slice_in_dim(
+        cache.pos, jnp.asarray(pos, jnp.int32)[None], slot, axis=0
+    )
+    return KVCache(k, v, p)
+
+
+def cache_prefill(cache: KVCache, k_all: Array, v_all: Array, S: int) -> KVCache:
+    """Bulk-write positions [0, S) (S static).  For ring caches keep the
+    last C positions."""
+    C = cache.k.shape[1]
+    if S <= C:
+        k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_all.astype(cache.k.dtype), 0, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_all.astype(cache.v.dtype), 0, axis=1)
+        p = jax.lax.dynamic_update_slice_in_dim(
+            cache.pos, jnp.arange(S, dtype=jnp.int32), 0, axis=0
+        )
+        return KVCache(k, v, p)
+    # keep last C tokens, ring-aligned so slot = pos % C stays true
+    start = S - C
+    kk = k_all[:, start:]
+    vv = v_all[:, start:]
+    pp = jnp.arange(start, S, dtype=jnp.int32)
+    roll = jnp.mod(start, C)
+    kk = jnp.roll(kk, roll, axis=1)
+    vv = jnp.roll(vv, roll, axis=1)
+    pp = jnp.roll(pp, roll, axis=0)
+    return KVCache(kk.astype(cache.k.dtype), vv.astype(cache.v.dtype), pp)
+
+
+def decode_attention(
+    q: Array,                # [B, 1, H, hd] (rope'd at cur_pos)
+    cache: KVCache,
+    cur_pos,                 # scalar int (traced ok)
+    window: int,
+) -> Array:
+    B, _, H, hd = q.shape
+    KV = cache.k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qr = q.reshape(B, 1, KV, G, hd).astype(jnp.float32) * scale
+    s = _gqa_scores(qr, cache.k.astype(jnp.float32))  # [B, KV, G, 1, C]
+    valid = (cache.pos >= 0) & (cache.pos <= cur_pos)
+    if window is None:
+        pass
+    elif isinstance(window, (int, np.integer)):
+        if window > 0:
+            valid &= cache.pos > cur_pos - window
+    else:
+        w = jnp.asarray(window)
+        valid &= jnp.where(w > 0, cache.pos > cur_pos - w, True)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = _gqa_out(p, cache.v)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x: Array, p) -> Array:
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    return h @ p["w2"]
+
+
+def gqa_project(x: Array, p, cfg: ModelConfig):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, KV, hd)
+    v = (x @ p["wv"]).reshape(B, S, KV, hd)
+    return q, k, v
+
+
+def attn_block_train(x, p, cfg: ModelConfig, window: int, positions,
+                     policy: ShardingPolicy):
+    """Full-sequence attention block (training / prefill). Returns
+    (out, (k, v)) so prefill can populate the cache."""
+    q, k, v = gqa_project(x, p, cfg)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    # the Pallas kernel needs a static window (it shapes the kv loop);
+    # traced per-layer windows (scanned mixed-pattern stacks) fall back
+    # to the chunked-jnp path.
+    if cfg.use_pallas and isinstance(window, (int, np.integer)):
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q, k, v, window=int(window))
+    else:
+        o = chunked_attention(q, k, v, window=window, q_chunk=cfg.q_chunk)
+    B, S = x.shape[:2]
+    out = o.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"]
+    return out, (k, v)
+
+
+def attn_block_decode(x, p, cfg: ModelConfig, cache: KVCache, pos, window: int):
+    q, k, v = gqa_project(x, p, cfg)
+    posv = jnp.asarray(pos)[None]
+    q = rope(q, jnp.broadcast_to(posv, (x.shape[0], 1)), cfg.rope_theta)
+    k = rope(k, jnp.broadcast_to(posv, (x.shape[0], 1)), cfg.rope_theta)
+    cache = cache_write(cache, k, v, pos)
+    o = decode_attention(q, cache, pos, window)
+    out = o.reshape(x.shape[0], 1, cfg.n_heads * cfg.hd) @ p["wo"]
+    return out, cache

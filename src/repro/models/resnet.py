@@ -1,0 +1,157 @@
+"""ResNet (He et al. 2016) — the paper's non-convex experiment model
+family (ResNet-50 on ImageNet in Section 5.1).
+
+Pure-functional JAX; normalization is GroupNorm (a documented
+substitution for BatchNorm to keep the model stateless under
+vmap-over-workers — local BN statistics would leak across Qsparse
+workers otherwise and GN is batch-size independent, which matters at
+per-worker batch sizes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str = "resnet"
+    stage_sizes: Sequence[int] = (2, 2, 2, 2)   # resnet18
+    bottleneck: bool = False                    # True => resnet50-style
+    width: int = 64
+    num_classes: int = 10
+    in_channels: int = 3
+    groups: int = 8
+    param_dtype: str = "float32"
+    stem_stride: int = 1                        # 1 for CIFAR-size inputs
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+
+def resnet50_config(num_classes: int = 1000) -> ResNetConfig:
+    return ResNetConfig(name="resnet50", stage_sizes=(3, 4, 6, 3),
+                        bottleneck=True, num_classes=num_classes,
+                        stem_stride=2)
+
+
+def resnet8_config(num_classes: int = 10) -> ResNetConfig:
+    """Small CIFAR-scale variant for the reproduction experiments."""
+    return ResNetConfig(name="resnet8", stage_sizes=(1, 1, 1),
+                        bottleneck=False, width=16, num_classes=num_classes)
+
+
+def _conv_init(key, k, cin, cout, dtype):
+    fan = k * k * cin
+    return (jax.random.normal(key, (k, k, cin, cout), jnp.float32)
+            * (2.0 / fan) ** 0.5).astype(dtype)
+
+
+def _gn_params(c, dtype):
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def init_params(key, cfg: ResNetConfig):
+    ks = iter(jax.random.split(key, 4 + sum(cfg.stage_sizes) * 4 + len(cfg.stage_sizes)))
+    w = cfg.width
+    params = {
+        "stem": {"conv": _conv_init(next(ks), 3, cfg.in_channels, w, cfg.pdtype),
+                 "gn": _gn_params(w, cfg.pdtype)},
+        "stages": [],
+    }
+    cin = w
+    for si, n in enumerate(cfg.stage_sizes):
+        cout = w * (2 ** si)
+        blocks = []
+        for bi in range(n):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            if cfg.bottleneck:
+                mid = cout
+                cexp = cout * 4
+                blk = {
+                    "conv1": _conv_init(next(ks), 1, cin, mid, cfg.pdtype),
+                    "gn1": _gn_params(mid, cfg.pdtype),
+                    "conv2": _conv_init(next(ks), 3, mid, mid, cfg.pdtype),
+                    "gn2": _gn_params(mid, cfg.pdtype),
+                    "conv3": _conv_init(next(ks), 1, mid, cexp, cfg.pdtype),
+                    "gn3": _gn_params(cexp, cfg.pdtype),
+                }
+                if cin != cexp or stride != 1:
+                    blk["proj"] = _conv_init(next(ks), 1, cin, cexp, cfg.pdtype)
+                cin = cexp
+            else:
+                blk = {
+                    "conv1": _conv_init(next(ks), 3, cin, cout, cfg.pdtype),
+                    "gn1": _gn_params(cout, cfg.pdtype),
+                    "conv2": _conv_init(next(ks), 3, cout, cout, cfg.pdtype),
+                    "gn2": _gn_params(cout, cfg.pdtype),
+                }
+                if cin != cout or stride != 1:
+                    blk["proj"] = _conv_init(next(ks), 1, cin, cout, cfg.pdtype)
+                cin = cout
+            blocks.append(blk)
+        params["stages"].append(blocks)
+    params["head"] = dense_init(next(ks), (cin, cfg.num_classes), cfg.pdtype)
+    params["head_b"] = jnp.zeros((cfg.num_classes,), cfg.pdtype)
+    return params
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _gn(x, p, groups):
+    c = x.shape[-1]
+    g = min(groups, c)
+    xg = x.reshape(x.shape[:-1] + (g, c // g)).astype(jnp.float32)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + 1e-5)
+    out = xg.reshape(x.shape) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+def _block(x, blk, cfg: ResNetConfig, stride: int):
+    r = x
+    if cfg.bottleneck:
+        y = jax.nn.relu(_gn(_conv(x, blk["conv1"]), blk["gn1"], cfg.groups))
+        y = jax.nn.relu(_gn(_conv(y, blk["conv2"], stride), blk["gn2"], cfg.groups))
+        y = _gn(_conv(y, blk["conv3"]), blk["gn3"], cfg.groups)
+    else:
+        y = jax.nn.relu(_gn(_conv(x, blk["conv1"], stride), blk["gn1"], cfg.groups))
+        y = _gn(_conv(y, blk["conv2"]), blk["gn2"], cfg.groups)
+    if "proj" in blk:
+        r = _conv(x, blk["proj"], stride)
+    return jax.nn.relu(y + r)
+
+
+def forward(params, images, cfg: ResNetConfig):
+    """images: [B, H, W, C] -> logits [B, num_classes]."""
+    x = _conv(images.astype(cfg.pdtype), params["stem"]["conv"], cfg.stem_stride)
+    x = jax.nn.relu(_gn(x, params["stem"]["gn"], cfg.groups))
+    for si, blocks in enumerate(params["stages"]):
+        for bi, blk in enumerate(blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            x = _block(x, blk, cfg, stride)
+    x = jnp.mean(x, axis=(1, 2))
+    return (x @ params["head"] + params["head_b"]).astype(jnp.float32)
+
+
+def loss_fn(params, batch, cfg: ResNetConfig):
+    logits = forward(params, batch["images"], cfg)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"accuracy": acc}

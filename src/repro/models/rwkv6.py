@@ -1,0 +1,379 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free, data-dependent
+per-channel decay linear recurrence.
+
+Per head (head size N), with receptance r_t, key k_t, value v_t, decay
+w_t in (0,1)^N (data dependent) and bonus u in R^N:
+
+    out_t = r_t @ (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+
+Training runs a *chunked* form: within a chunk of length c the
+recurrence is unrolled into a masked quadratic form with per-channel
+decay factors accumulated in log space (numerically safe because
+w = exp(-exp(x)) < 1), and the [N, N] state is carried across chunks by
+a scan — O(S*c) memory instead of O(S^2) or a length-S sequential scan.
+A naive sequential reference (`wkv6_ref`) backs the correctness tests.
+
+Decode is the O(1) recurrence — this is why rwkv6 runs the ``long_500k``
+shape natively.
+
+Simplifications vs the released checkpoints (documented in DESIGN.md):
+static token-shift mixing coefficients (v6 makes them data-dependent via
+tiny LoRAs) and a single LoRA for the decay only.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, NO_SHARDING, ShardingPolicy
+from repro.models.layers import dense_init, embed, maybe_shard, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def init_params(key: jax.Array, cfg: ModelConfig):
+    d, L, ff = cfg.d_model, cfg.n_layers, cfg.d_ff
+    N = cfg.ssm_head_dim
+    H = d // N
+    ks = jax.random.split(key, 16)
+    lora = max(32, N)
+    layers = {
+        "ln1": jnp.zeros((L, d), cfg.pdtype),
+        "ln2": jnp.zeros((L, d), cfg.pdtype),
+        # time-mix
+        "mix_r": jnp.full((L, d), 0.5, cfg.pdtype),
+        "mix_k": jnp.full((L, d), 0.5, cfg.pdtype),
+        "mix_v": jnp.full((L, d), 0.5, cfg.pdtype),
+        "mix_w": jnp.full((L, d), 0.5, cfg.pdtype),
+        "mix_g": jnp.full((L, d), 0.5, cfg.pdtype),
+        "wr": dense_init(ks[0], (L, d, d), cfg.pdtype),
+        "wk": dense_init(ks[1], (L, d, d), cfg.pdtype),
+        "wv": dense_init(ks[2], (L, d, d), cfg.pdtype),
+        "wg": dense_init(ks[3], (L, d, d), cfg.pdtype),
+        "wo": dense_init(ks[4], (L, d, d), cfg.pdtype),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((L, d), -2.0, jnp.float32),
+        "wA": dense_init(ks[5], (L, d, lora), cfg.pdtype),
+        "wB": dense_init(ks[6], (L, lora, d), cfg.pdtype, scale=0.01),
+        "bonus": jnp.zeros((L, H, N), jnp.float32),
+        "ln_x": jnp.zeros((L, d), cfg.pdtype),  # per-head groupnorm gain
+        # channel-mix
+        "cmix_k": jnp.full((L, d), 0.5, cfg.pdtype),
+        "cmix_r": jnp.full((L, d), 0.5, cfg.pdtype),
+        "ck": dense_init(ks[7], (L, d, ff), cfg.pdtype),
+        "cv": dense_init(ks[8], (L, ff, d), cfg.pdtype),
+        "cr": dense_init(ks[9], (L, d, d), cfg.pdtype),
+    }
+    return {
+        "embed": dense_init(ks[10], (cfg.vocab, d), cfg.pdtype, scale=1.0),
+        "layers": layers,
+        "final_norm": jnp.zeros((d,), cfg.pdtype),
+        "head": dense_init(ks[11], (d, cfg.vocab), cfg.pdtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# wkv6 core
+# ---------------------------------------------------------------------------
+
+
+def wkv6_ref(r, k, v, w, u):
+    """Sequential oracle.  r,k,v,w: [B, S, H, N]; u: [H, N].
+    Returns out [B, S, H, N]."""
+    B, S, H, N = r.shape
+
+    def step(S_state, xs):
+        r_t, k_t, v_t, w_t = xs  # [B, H, N]
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        # diag(u) applies on the key index of k_t v_t^T
+        out = jnp.einsum(
+            "bhk,bhkv->bhv", r_t,
+            S_state + jnp.einsum("hk,bhkv->bhkv", u, kv),
+        )
+        S_new = w_t[..., None] * S_state + kv
+        return S_new, out
+
+    S0 = jnp.zeros((B, H, N, N), jnp.float32)
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    _, outs = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(outs, 0, 1)
+
+
+def wkv6_chunked(r, k, v, w, u, chunk: int = 32, return_state: bool = False,
+                 vary_axes=()):
+    """Chunked parallel form.  Same signature as wkv6_ref."""
+    B, S, H, N = r.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        padf = lambda t, val=0.0: jnp.pad(
+            t, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=val
+        )
+        r, k, v = padf(r), padf(k), padf(v)
+        w = padf(w, 1.0)  # decay 1 on padding keeps state unchanged
+    Sp = r.shape[1]
+    nch = Sp // c
+
+    def reshape(t):
+        return t.astype(jnp.float32).reshape(B, nch, c, H, N).transpose(1, 0, 3, 2, 4)
+
+    rr, kk, vv, ww = map(reshape, (r, k, v, w))  # [nch, B, H, c, N]
+    logw = jnp.log(jnp.clip(ww, 1e-38))          # <= 0
+    la = jnp.cumsum(logw, axis=-2)               # logA_t (inclusive)
+
+    def chunk_step(S_state, xs):
+        rc, kc, vc, lac, logwc = xs              # [B, H, c, N]
+        la_prev = lac - logwc                    # logA_{t-1}
+        # inter-chunk: r_t ⊙ A_{t-1} @ S
+        r_dec = rc * jnp.exp(la_prev)
+        inter = jnp.einsum("bhck,bhkv->bhcv", r_dec, S_state)
+        # intra-chunk: sum_{j<t} (r_t ⊙ A_{t-1}/A_j) · k_j  v_j  (+ u diag)
+        # decay[t, j, :] = exp(la_prev[t] - la[j]);  strict lower triangle
+        dec = jnp.exp(
+            jnp.clip(la_prev[:, :, :, None, :] - lac[:, :, None, :, :], -60.0, 0.0)
+        )  # [B, H, c(t), c(j), N]
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        scores = jnp.einsum("bhtk,bhtjk,bhjk->bhtj", rc, dec, kc)
+        scores = jnp.where(tri[None, None], scores, 0.0)
+        intra = jnp.einsum("bhtj,bhjv->bhtv", scores, vc)
+        diag = jnp.einsum("bhtk,hk,bhtk->bht", rc, u, kc)
+        intra = intra + diag[..., None] * vc
+        out_c = inter + intra
+        # state update: S' = diag(A_c) S + sum_j (A_c / A_j) ⊙ k_j v_j^T
+        a_c = lac[:, :, -1, :]                   # [B, H, N]
+        k_dec = kc * jnp.exp(
+            jnp.clip(a_c[:, :, None, :] - lac, -60.0, 0.0)
+        )
+        S_new = jnp.exp(a_c)[..., None] * S_state + jnp.einsum(
+            "bhck,bhcv->bhkv", k_dec, vc
+        )
+        return S_new, out_c
+
+    from repro.models.layers import pvary
+    S0 = pvary(jnp.zeros((B, H, N, N), jnp.float32), vary_axes)
+    S_final, outs = jax.lax.scan(chunk_step, S0, (rr, kk, vv, la, logw))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, Sp, H, N)
+    if return_state:
+        return out[:, :S], S_final
+    return out[:, :S]
+
+
+def wkv6_decode(S_state, r_t, k_t, v_t, w_t, u):
+    """One step.  S_state: [B, H, N, N]; r/k/v/w: [B, H, N]."""
+    kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+    out = jnp.einsum(
+        "bhk,bhkv->bhv", r_t, S_state + jnp.einsum("hk,bhkv->bhkv", u, kv)
+    )
+    S_new = w_t[..., None] * S_state + kv
+    return S_new, out
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _shift(x, x_prev):
+    """x: [B, S, d] -> previous-token tensor with x_prev as t=-1."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _time_mix(h, lp, cfg: ModelConfig, x_prev, return_state: bool = False,
+              vary_axes=()):
+    B, S, d = h.shape
+    N = cfg.ssm_head_dim
+    H = d // N
+    sh = _shift(h, x_prev)
+
+    def mx(m):
+        return h + (sh - h) * lp[m].astype(h.dtype)
+
+    r = (mx("mix_r") @ lp["wr"]).reshape(B, S, H, N)
+    k = (mx("mix_k") @ lp["wk"]).reshape(B, S, H, N)
+    v = (mx("mix_v") @ lp["wv"]).reshape(B, S, H, N)
+    g = jax.nn.silu(mx("mix_g") @ lp["wg"])
+    xw = mx("mix_w").astype(jnp.float32)
+    dd = jnp.tanh(xw @ lp["wA"].astype(jnp.float32)) @ lp["wB"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(lp["w0"] + dd))        # (0, 1), data-dependent
+    w = w.reshape(B, S, H, N)
+    u = lp["bonus"]
+    if return_state:
+        out, S_final = wkv6_chunked(r, k, v, w, u, return_state=True,
+                                    vary_axes=vary_axes)
+    else:
+        out = wkv6_chunked(r, k, v, w, u, vary_axes=vary_axes)
+        S_final = None
+    # per-head groupnorm
+    mean = jnp.mean(out, axis=-1, keepdims=True)
+    var = jnp.var(out, axis=-1, keepdims=True)
+    out = (out - mean) * jax.lax.rsqrt(var + 1e-5)
+    out = out.reshape(B, S, d) * (1.0 + lp["ln_x"].astype(jnp.float32))
+    out = out.astype(h.dtype) * g
+    return out @ lp["wo"], h[:, -1], S_final
+
+
+def _channel_mix(h, lp, x_prev):
+    sh = _shift(h, x_prev)
+    xk = h + (sh - h) * lp["cmix_k"].astype(h.dtype)
+    xr = h + (sh - h) * lp["cmix_r"].astype(h.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ lp["ck"]))
+    out = jax.nn.sigmoid(xr @ lp["cr"]) * (kk @ lp["cv"])
+    return out, h[:, -1]
+
+
+def _layer(h, lp, cfg, policy, shift_tm, shift_cm, return_state=False):
+    a, new_tm, S_final = _time_mix(rmsnorm(h, lp["ln1"]), lp, cfg, shift_tm,
+                                   return_state, vary_axes=policy.vary_axes)
+    h = h + a
+    b, new_cm = _channel_mix(rmsnorm(h, lp["ln2"]), lp, shift_cm)
+    h = h + b
+    h = maybe_shard(h, policy.act)
+    return h, new_tm, new_cm, S_final
+
+
+def apply_stack(params, h, cfg: ModelConfig, policy: ShardingPolicy):
+    B, S, d = h.shape
+    z = jnp.zeros((B, d), h.dtype)
+
+    def body(carry, lp):
+        out, _, _, _ = _layer(carry, lp, cfg, policy, z, z)
+        return out, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    return h
+
+
+def prefill(params, batch, cfg: ModelConfig,
+            policy: ShardingPolicy = NO_SHARDING, max_len: Optional[int] = None):
+    """Consume the prompt, return (last_logits, RWKVCache, n_consumed)."""
+    tokens = batch["tokens"]
+    h = embed(tokens, params["embed"]).astype(cfg.adtype)
+    B, S, d = h.shape
+    z = jnp.zeros((B, d), h.dtype)
+
+    def body(carry, lp):
+        hh = carry
+        out, tm, cm, S_final = _layer(hh, lp, cfg, policy, z, z,
+                                      return_state=True)
+        return out, (S_final, tm, cm)
+
+    h, (wkv, tm, cm) = jax.lax.scan(body, h, params["layers"])
+    cache = RWKVCache(wkv=wkv, shift_tm=tm, shift_cm=cm)
+    hl = rmsnorm(h[:, -1:], params["final_norm"])
+    logits = (hl[:, 0] @ params["head"]).astype(jnp.float32)
+    return logits, cache, S
+
+
+def loss_fn(params, batch, cfg: ModelConfig,
+            policy: ShardingPolicy = NO_SHARDING, loss_chunk: int = 1024):
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    h = embed(inp, params["embed"]).astype(cfg.adtype)
+    h = apply_stack(params, h, cfg, policy)
+    h = rmsnorm(h, params["final_norm"])
+    return _chunked_ce(h, params["head"], labels, policy, loss_chunk)
+
+
+def _chunked_ce(h, W, labels, policy, loss_chunk):  # noqa: used by zamba2 too
+    B, S, _ = h.shape
+    c = min(loss_chunk, S)
+    pad = (-S) % c
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)))
+    msk = jnp.pad(jnp.ones((B, S), jnp.float32), ((0, 0), (0, pad)))
+    n = hp.shape[1] // c
+    hp = hp.reshape(B, n, c, -1).swapaxes(0, 1)
+    lp = lp.reshape(B, n, c).swapaxes(0, 1)
+    msk = msk.reshape(B, n, c).swapaxes(0, 1)
+
+    def chunk_loss(carry, xs):
+        hc, lc, mc = xs
+        logits = (hc @ W).astype(jnp.float32)
+        logits = maybe_shard(logits, policy.logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum((lse - gold) * mc), None
+
+    from repro.models.layers import pvary
+    total, _ = jax.lax.scan(chunk_loss,
+                            pvary(jnp.zeros((), jnp.float32), policy.vary_axes),
+                            (hp, lp, msk))
+    return total / (B * S), {}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+class RWKVCache(NamedTuple):
+    wkv: jax.Array      # [L, B, H, N, N]
+    shift_tm: jax.Array  # [L, B, d]
+    shift_cm: jax.Array  # [L, B, d]
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0) -> RWKVCache:
+    d, L = cfg.d_model, cfg.n_layers
+    N = cfg.ssm_head_dim
+    H = d // N
+    return RWKVCache(
+        wkv=jnp.zeros((L, batch, H, N, N), jnp.float32),
+        shift_tm=jnp.zeros((L, batch, d), cfg.adtype),
+        shift_cm=jnp.zeros((L, batch, d), cfg.adtype),
+    )
+
+
+def decode_step(params, cache: RWKVCache, token, pos, cfg: ModelConfig,
+                policy: ShardingPolicy = NO_SHARDING):
+    h = embed(token[:, None], params["embed"]).astype(cfg.adtype)
+    B, _, d = h.shape
+    N = cfg.ssm_head_dim
+    H = d // N
+
+    def body(carry, xs):
+        hh = carry
+        lp, S_state, st_tm, st_cm = xs
+        x = rmsnorm(hh, lp["ln1"])
+        x1 = x[:, 0]
+
+        def mx(m):
+            return x1 + (st_tm - x1) * lp[m].astype(x1.dtype)
+
+        r = (mx("mix_r") @ lp["wr"]).reshape(B, H, N).astype(jnp.float32)
+        k = (mx("mix_k") @ lp["wk"]).reshape(B, H, N).astype(jnp.float32)
+        v = (mx("mix_v") @ lp["wv"]).reshape(B, H, N).astype(jnp.float32)
+        g = jax.nn.silu(mx("mix_g") @ lp["wg"])
+        xw = mx("mix_w").astype(jnp.float32)
+        dd = jnp.tanh(xw @ lp["wA"].astype(jnp.float32)) @ lp["wB"].astype(jnp.float32)
+        w = jnp.exp(-jnp.exp(lp["w0"] + dd)).reshape(B, H, N)
+        S_new, out = wkv6_decode(S_state, r, k, v, w, lp["bonus"])
+        mean = jnp.mean(out, axis=-1, keepdims=True)
+        var = jnp.var(out, axis=-1, keepdims=True)
+        out = (out - mean) * jax.lax.rsqrt(var + 1e-5)
+        out = out.reshape(B, d) * (1.0 + lp["ln_x"].astype(jnp.float32))
+        out = out.astype(hh.dtype) * g
+        hh = hh + (out @ lp["wo"])[:, None]
+        x2 = rmsnorm(hh, lp["ln2"])[:, 0]
+        xk = x2 + (st_cm - x2) * lp["cmix_k"].astype(x2.dtype)
+        xr = x2 + (st_cm - x2) * lp["cmix_r"].astype(x2.dtype)
+        kk = jnp.square(jax.nn.relu(xk @ lp["ck"]))
+        cm = jax.nn.sigmoid(xr @ lp["cr"]) * (kk @ lp["cv"])
+        hh = hh + cm[:, None]
+        return hh, (S_new, x1, x2)
+
+    h, (wkv, s1, s2) = jax.lax.scan(
+        body, h, (params["layers"], cache.wkv, cache.shift_tm, cache.shift_cm)
+    )
+    new_cache = RWKVCache(wkv=wkv, shift_tm=s1, shift_cm=s2)
+    h = rmsnorm(h, params["final_norm"])
+    logits = (h[:, 0] @ params["head"]).astype(jnp.float32)
+    return maybe_shard(logits, policy.logits), new_cache

@@ -1,0 +1,51 @@
+"""Softmax (multinomial logistic) regression with an l2 regularizer —
+the paper's convex objective (Section 5.2):
+
+    -(1/n) sum_i sum_j 1{b_i = j} log h_{x,z}(a_i) + (lambda/2) ||x||^2
+
+Parameters: weight columns x_j in R^d per class plus biases z.  For
+MNIST-shaped data (d=784, L=10) this is exactly the paper's d=7850
+parameter problem.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftmaxConfig:
+    name: str = "mnist_softmax"
+    input_dim: int = 784
+    num_classes: int = 10
+    l2: float = 1e-4          # lambda; paper uses 1/n
+
+
+def init_params(key, cfg: SoftmaxConfig):
+    return {
+        "x": jnp.zeros((cfg.input_dim, cfg.num_classes), jnp.float32),
+        "z": jnp.zeros((cfg.num_classes,), jnp.float32),
+    }
+
+
+def forward(params, feats):
+    return feats @ params["x"] + params["z"]
+
+
+def loss_fn(params, batch, cfg: SoftmaxConfig):
+    logits = forward(params, batch["features"])
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    nll = jnp.mean(lse - gold)
+    reg = 0.5 * cfg.l2 * jnp.sum(jnp.square(params["x"]))
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return nll + reg, {"accuracy": acc, "nll": nll}
+
+
+def strong_convexity(cfg: SoftmaxConfig) -> float:
+    """mu >= lambda (the regularizer's contribution)."""
+    return cfg.l2

@@ -1,0 +1,267 @@
+"""Dense decoder-only transformer (yi, stablelm, gemma3, musicgen,
+internvl2 backbones).
+
+Training/prefill scan over a stacked [L, ...] parameter pytree; the
+per-layer attention window rides along as a traced [L] array so mixed
+local/global patterns (gemma3 5:1) still scan.  Decode unrolls only when
+cache shapes are heterogeneous (mixed windows => per-layer ring-cache
+lengths differ).
+
+Multimodal backbones (musicgen audio / internvl2 vision) consume
+precomputed frontend embeddings prepended to the token embeddings — the
+frontend itself is the one allowed stub (see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, NO_SHARDING, ShardingPolicy
+from repro.models.layers import (
+    KVCache,
+    attn_block_decode,
+    attn_block_train,
+    attn_params,
+    cache_prefill,
+    dense_init,
+    embed,
+    init_kv_cache,
+    maybe_shard,
+    mlp_params,
+    norm_params,
+    rmsnorm,
+    swiglu,
+)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def init_params(key: jax.Array, cfg: ModelConfig):
+    L = cfg.n_layers
+    ks = jax.random.split(key, 6)
+    stacked = L if cfg.scan_layers else None
+    if cfg.scan_layers:
+        layers = {
+            "ln1": norm_params(cfg, L),
+            "attn": attn_params(ks[0], cfg, L),
+            "ln2": norm_params(cfg, L),
+            "mlp": mlp_params(ks[1], cfg, L),
+        }
+    else:
+        layers = []
+        lk = jax.random.split(ks[0], L)
+        for i in range(L):
+            k1, k2 = jax.random.split(lk[i])
+            layers.append({
+                "ln1": norm_params(cfg, None),
+                "attn": attn_params(k1, cfg, None),
+                "ln2": norm_params(cfg, None),
+                "mlp": mlp_params(k2, cfg, None),
+            })
+    params = {
+        "embed": dense_init(ks[2], (cfg.vocab, cfg.d_model), cfg.pdtype, scale=1.0),
+        "layers": layers,
+        "final_norm": norm_params(cfg, None),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(ks[3], (cfg.d_model, cfg.vocab), cfg.pdtype)
+    return params
+
+
+def _head(params, cfg: ModelConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["head"]
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _layer_train(h, lp, window, positions, cfg, policy):
+    a, kv = attn_block_train(rmsnorm(h, lp["ln1"]), lp["attn"], cfg, window,
+                             positions, policy)
+    h = h + a
+    h = h + swiglu(rmsnorm(h, lp["ln2"]), lp["mlp"])
+    h = maybe_shard(h, policy.act)
+    return h, kv
+
+
+def apply_stack(params, h, positions, cfg: ModelConfig,
+                policy: ShardingPolicy, collect_kv: bool = False):
+    """Runs all layers.  Returns (h, kv_stack|None).  kv_stack leaves are
+    [L, B, S, KV, hd]."""
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+    if cfg.scan_layers:
+        def body(carry, xs):
+            lp, w = xs
+            hh, kv = _layer_train(carry, lp, w, positions, cfg, policy)
+            return hh, (kv if collect_kv else None)
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        h, kvs = jax.lax.scan(body_fn, h, (params["layers"], windows))
+        return h, kvs
+    kvs = []
+    wins = cfg.layer_windows()
+    for i, lp in enumerate(params["layers"]):
+        h, kv = _layer_train(h, lp, int(wins[i]), positions, cfg, policy)
+        if collect_kv:
+            kvs.append(kv)
+    return h, (kvs if collect_kv else None)
+
+
+def embed_inputs(params, batch: dict, cfg: ModelConfig):
+    """Returns (h, n_prefix): token embeddings with optional multimodal
+    prefix embeddings prepended."""
+    tokens = batch["tokens"]
+    h = embed(tokens, params["embed"]).astype(cfg.adtype)
+    if "prefix_embeds" in batch:
+        pre = batch["prefix_embeds"].astype(cfg.adtype)
+        h = jnp.concatenate([pre, h], axis=1)
+        return h, pre.shape[1]
+    return h, 0
+
+
+def forward(params, batch: dict, cfg: ModelConfig,
+            policy: ShardingPolicy = NO_SHARDING):
+    """Full-sequence logits [B, S_total, V]."""
+    h, _ = embed_inputs(params, batch, cfg)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    h, _ = apply_stack(params, h, positions, cfg, policy)
+    h = rmsnorm(h, params["final_norm"])
+    logits = h @ _head(params, cfg)
+    return maybe_shard(logits.astype(jnp.float32), policy.logits)
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig,
+            policy: ShardingPolicy = NO_SHARDING,
+            loss_chunk: int = 1024):
+    """Next-token CE over the token segment (prefix embeddings are
+    context only).  The LM head is applied in sequence chunks so the
+    [B, S, V] f32 logits tensor is never fully materialized."""
+    tokens = batch["tokens"]            # [B, S+1]
+    inp = {**batch, "tokens": tokens[:, :-1]}
+    labels = tokens[:, 1:]
+    h, n_prefix = embed_inputs(params, inp, cfg)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    h, _ = apply_stack(params, h, positions, cfg, policy)
+    h = rmsnorm(h, params["final_norm"])
+    if n_prefix:
+        h = h[:, n_prefix:]
+    W = _head(params, cfg)
+    Stok = h.shape[1]
+    c = min(loss_chunk, Stok)
+    pad = (-Stok) % c
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)))
+    msk = jnp.pad(jnp.ones((B, Stok), jnp.float32), ((0, 0), (0, pad)))
+    n = hp.shape[1] // c
+    hp = hp.reshape(B, n, c, -1).swapaxes(0, 1)
+    lp = lp.reshape(B, n, c).swapaxes(0, 1)
+    msk = msk.reshape(B, n, c).swapaxes(0, 1)
+
+    def chunk_loss(carry, xs):
+        hc, lc, mc = xs
+        logits = (hc @ W).astype(jnp.float32)
+        logits = maybe_shard(logits, policy.logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return carry + jnp.sum(nll), None
+
+    from repro.models.layers import pvary
+    total, _ = jax.lax.scan(chunk_loss,
+                            pvary(jnp.zeros((), jnp.float32),
+                                  policy.vary_axes),
+                            (hp, lp, msk))
+    loss = total / (B * Stok)
+    return loss, {"ntokens": B * Stok}
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+
+def uniform_windows(cfg: ModelConfig) -> bool:
+    return len(set(cfg.layer_windows())) == 1
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    wins = cfg.layer_windows()
+    if uniform_windows(cfg) and cfg.scan_layers:
+        return init_kv_cache(cfg, batch, wins[0], max_len, stacked=cfg.n_layers)
+    return [init_kv_cache(cfg, batch, w, max_len) for w in wins]
+
+
+def prefill(params, batch: dict, cfg: ModelConfig,
+            policy: ShardingPolicy = NO_SHARDING, max_len: Optional[int] = None):
+    """Consume the prompt; return (last_token_logits, cache, n_consumed)."""
+    h, n_prefix = embed_inputs(params, batch, cfg)
+    B, S, _ = h.shape
+    max_len = max_len or max(cfg.max_seq_len, S)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    h, kvs = apply_stack(params, h, positions, cfg, policy, collect_kv=True)
+    hl = rmsnorm(h[:, -1:], params["final_norm"])
+    logits = (hl @ _head(params, cfg)).astype(jnp.float32)
+    wins = cfg.layer_windows()
+    if uniform_windows(cfg) and cfg.scan_layers:
+        cache = init_kv_cache(cfg, B, wins[0], max_len, stacked=cfg.n_layers)
+        cache = jax.vmap(lambda c, k, v: cache_prefill(c, k, v, S))(
+            cache, kvs[0], kvs[1]
+        )
+    else:
+        cache = []
+        for i, w in enumerate(wins):
+            c = init_kv_cache(cfg, B, w, max_len)
+            if cfg.scan_layers:  # scan stacked the kv on a leading L axis
+                k, v = kvs[0][i], kvs[1][i]
+            else:
+                k, v = kvs[i]
+            cache.append(cache_prefill(c, k, v, S))
+    return logits, cache, S
+
+
+def decode_step(params, cache, token: jax.Array, pos, cfg: ModelConfig,
+                policy: ShardingPolicy = NO_SHARDING):
+    """One decode step.  token: [B] int32; pos: scalar global position.
+    Returns (logits [B, V], new_cache)."""
+    h = embed(token[:, None], params["embed"]).astype(cfg.adtype)
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+
+    def layer(h, lp, cache_l, w):
+        a, new_c = attn_block_decode(rmsnorm(h, lp["ln1"]), lp["attn"], cfg,
+                                     cache_l, pos, w)
+        h = h + a
+        h = h + swiglu(rmsnorm(h, lp["ln2"]), lp["mlp"])
+        return h, new_c
+
+    if uniform_windows(cfg) and cfg.scan_layers:
+        def body(carry, xs):
+            lp, c, w = xs
+            hh, new_c = layer(carry, lp, c, w)
+            return hh, new_c
+
+        h, new_cache = jax.lax.scan(body, h, (params["layers"], cache, windows))
+    else:
+        wins = cfg.layer_windows()
+        new_cache = []
+        layer_params = (
+            params["layers"] if not cfg.scan_layers
+            else [jax.tree_util.tree_map(lambda x: x[i], params["layers"])
+                  for i in range(cfg.n_layers)]
+        )
+        for i, lp in enumerate(layer_params):
+            h, c = layer(h, lp, cache[i], wins[i])
+            new_cache.append(c)
+    h = rmsnorm(h, params["final_norm"])
+    logits = (h[:, 0] @ _head(params, cfg)).astype(jnp.float32)
+    return maybe_shard(logits, policy.logits), new_cache

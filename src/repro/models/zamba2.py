@@ -1,0 +1,463 @@
+"""Mamba2 (SSD) blocks + Zamba2 hybrid stack (arXiv:2411.15242).
+
+Mamba2 selective-state-space block with scalar-per-head decay:
+
+    a_t = exp(dt_t * A_h)           (A_h < 0, dt_t = softplus(...))
+    h_t = a_t h_{t-1} + (dt_t x_t) ⊗ B_t        h in R^{P x N} per head
+    y_t = h_t C_t + D_h x_t
+
+Training uses the SSD chunked form (intra-chunk masked quadratic +
+inter-chunk state carry) — O(S·c) memory; a naive sequential reference
+(`ssd_ref`) backs the tests.  Decode is the O(1) recurrence, so zamba2
+runs ``long_500k``.
+
+Zamba2 hybrid: a stack of Mamba2 blocks with a *shared* attention+MLP
+block (one parameter set) applied every ``attn_every`` layers on
+concat(hidden, original embedding) — following Zamba2's shared-block
+design; the 2d->d input projection is our documented simplification.
+At long context the shared block's KV cache is a sliding-window ring
+(config ``swa_pattern``), the documented TPU adaptation for long_500k.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, NO_SHARDING, ShardingPolicy
+from repro.models.layers import (
+    KVCache,
+    attn_block_decode,
+    attn_block_train,
+    attn_params,
+    cache_prefill,
+    dense_init,
+    embed,
+    init_kv_cache,
+    maybe_shard,
+    mlp_params,
+    norm_params,
+    rmsnorm,
+    swiglu,
+)
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_ref(x, dt, A, B, C, D):
+    """Sequential oracle.
+    x: [Bt, S, H, P]; dt: [Bt, S, H]; A: [H] (<0); B, C: [Bt, S, N]; D: [H].
+    Returns y: [Bt, S, H, P]."""
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(h, xs):
+        x_t, dt_t, B_t, C_t = xs
+        a_t = jnp.exp(dt_t * A)                      # [Bt, H]
+        upd = jnp.einsum("bhp,bn->bhpn", x_t * dt_t[..., None], B_t)
+        h = a_t[..., None, None] * h + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t) + D[None, :, None] * x_t
+        return h, y
+
+    h0 = jnp.zeros((Bt, H, P, N), jnp.float32)
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(C.astype(jnp.float32), 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int = 64, return_state: bool = False,
+                vary_axes=()):
+    """Chunked SSD.  Same signature/semantics as ssd_ref."""
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    nch = Sp // c
+
+    xr = x.astype(jnp.float32).reshape(Bt, nch, c, H, P).transpose(1, 0, 3, 2, 4)
+    dtr = dt.astype(jnp.float32).reshape(Bt, nch, c, H).transpose(1, 0, 3, 2)
+    Br = B.astype(jnp.float32).reshape(Bt, nch, c, N).transpose(1, 0, 2, 3)
+    Cr = C.astype(jnp.float32).reshape(Bt, nch, c, N).transpose(1, 0, 2, 3)
+    # xr: [nch, Bt, H, c, P]; dtr: [nch, Bt, H, c]; Br/Cr: [nch, Bt, c, N]
+    loga = dtr * A[None, None, :, None]             # [nch, Bt, H, c], <= 0
+    la = jnp.cumsum(loga, axis=-1)                  # inclusive cumsum
+
+    def chunk_step(h, xs):
+        xc, dtc, Bc, Cc, lac = xs
+        # inter: y_t += exp(la_t) * C_t h0
+        CB_h0 = jnp.einsum("bcn,bhpn->bhcp", Cc, h)
+        inter = jnp.exp(lac)[..., None] * CB_h0
+        # intra: scores[t, j] = (C_t . B_j) exp(la_t - la_j) dt_j, j<=t
+        dec = jnp.exp(jnp.clip(lac[..., :, None] - lac[..., None, :], -60.0, 0.0))
+        cb = jnp.einsum("btn,bjn->btj", Cc, Bc)     # [Bt, c, c]
+        scores = cb[:, None] * dec * dtc[..., None, :]  # [Bt, H, t, j]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        scores = jnp.where(tri[None, None], scores, 0.0)
+        intra = jnp.einsum("bhtj,bhjp->bhtp", scores, xc)
+        y = inter + intra + D[None, :, None, None] * xc
+        # state: h' = exp(la_c) h + sum_j exp(la_c - la_j) dt_j x_j ⊗ B_j
+        la_c = lac[..., -1]
+        wdec = jnp.exp(jnp.clip(la_c[..., None] - lac, -60.0, 0.0)) * dtc
+        upd = jnp.einsum("bhcp,bhc,bcn->bhpn", xc, wdec, Bc)
+        h_new = jnp.exp(la_c)[..., None, None] * h + upd
+        return h_new, y
+
+    from repro.models.layers import pvary
+    h0 = pvary(jnp.zeros((Bt, H, P, N), jnp.float32), vary_axes)
+    h_final, ys = jax.lax.scan(chunk_step, h0, (xr, dtr, Br, Cr, la))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(Bt, Sp, H, P)[:, :S]
+    if return_state:
+        return y, h_final
+    return y
+
+
+def ssd_decode(h, x_t, dt_t, A, B_t, C_t, D):
+    """One step.  h: [Bt, H, P, N]; x_t: [Bt, H, P]; dt_t: [Bt, H];
+    B_t, C_t: [Bt, N]."""
+    a_t = jnp.exp(dt_t * A)
+    upd = jnp.einsum("bhp,bn->bhpn", x_t * dt_t[..., None], B_t)
+    h = a_t[..., None, None] * h + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, C_t) + D[None, :, None] * x_t
+    return h, y
+
+
+# ---------------------------------------------------------------------------
+# mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba_params(key, cfg: ModelConfig, stacked: int | None):
+    """Projections are kept *unpacked* (separate z/x/B/C/dt weights and
+    per-part conv filters) so each leaf carries a clean TP sharding: the
+    head-major x/z/dt dims shard over 'model'; the head-shared B/C
+    projections stay replicated."""
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    H = din // cfg.ssm_head_dim
+    pre = (stacked,) if stacked else ()
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": jnp.zeros(pre + (d,), cfg.pdtype),
+        "w_z": dense_init(ks[0], pre + (d, din), cfg.pdtype),
+        "w_x": dense_init(ks[1], pre + (d, din), cfg.pdtype),
+        "w_B": dense_init(ks[2], pre + (d, N), cfg.pdtype),
+        "w_C": dense_init(ks[3], pre + (d, N), cfg.pdtype),
+        "w_dt": dense_init(ks[4], pre + (d, H), cfg.pdtype),
+        "conv_x": dense_init(ks[5], pre + (cfg.ssm_conv, din), cfg.pdtype,
+                             scale=0.5),
+        "conv_B": dense_init(ks[6], pre + (cfg.ssm_conv, N), cfg.pdtype,
+                             scale=0.5),
+        "conv_C": dense_init(ks[7], pre + (cfg.ssm_conv, N), cfg.pdtype,
+                             scale=0.5),
+        "conv_bx": jnp.zeros(pre + (din,), cfg.pdtype),
+        "conv_bB": jnp.zeros(pre + (N,), cfg.pdtype),
+        "conv_bC": jnp.zeros(pre + (N,), cfg.pdtype),
+        "dt_bias": jnp.zeros(pre + (H,), jnp.float32),
+        "A_log": jnp.zeros(pre + (H,), jnp.float32),      # A = -exp(A_log)
+        "D": jnp.ones(pre + (H,), jnp.float32),
+        "ln_y": jnp.zeros(pre + (din,), cfg.pdtype),      # gated norm
+        "w_out": dense_init(ks[2], pre + (din, d), cfg.pdtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: [B, S, C]; w: [K, C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(y + b)
+
+
+
+
+
+def mamba_block(h, mp, cfg: ModelConfig, return_state: bool = False,
+                vary_axes=()):
+    """Full-sequence Mamba2 block.  h: [Bt, S, d]."""
+    Bt, S, d = h.shape
+    din = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    P = cfg.ssm_head_dim
+    H = din // P
+    hn = rmsnorm(h, mp["ln"])
+    z = hn @ mp["w_z"]
+    x_raw = hn @ mp["w_x"]
+    B_raw = hn @ mp["w_B"]
+    C_raw = hn @ mp["w_C"]
+    dt = hn @ mp["w_dt"]
+    xs = _causal_conv(x_raw, mp["conv_x"], mp["conv_bx"]).reshape(Bt, S, H, P)
+    Bm = _causal_conv(B_raw, mp["conv_B"], mp["conv_bB"])
+    Cm = _causal_conv(C_raw, mp["conv_C"], mp["conv_bC"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + mp["dt_bias"])
+    A = -jnp.exp(mp["A_log"])
+    out = ssd_chunked(xs, dt, A, Bm, Cm, mp["D"], return_state=return_state,
+                      vary_axes=vary_axes)
+    if return_state:
+        y, ssm_state = out
+    else:
+        y, ssm_state = out, None
+    y = y.reshape(Bt, S, din).astype(h.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), mp["ln_y"])
+    y = y @ mp["w_out"]
+    if return_state:
+        # conv state: last (K-1) pre-activation channels of [x|B|C]
+        K = cfg.ssm_conv
+        raw = jnp.concatenate([x_raw, B_raw, C_raw], axis=-1)
+        conv_state = raw[:, -(K - 1):, :]
+        return y, ssm_state, conv_state
+    return y
+
+
+def mamba_decode(h1, mp, cfg: ModelConfig, ssm_state, conv_state):
+    """One-token Mamba2.  h1: [Bt, 1, d]; conv_state: [Bt, K-1, C]."""
+    Bt = h1.shape[0]
+    din = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    P = cfg.ssm_head_dim
+    H = din // P
+    K = cfg.ssm_conv
+    hn = rmsnorm(h1, mp["ln"])[:, 0]
+    z = hn @ mp["w_z"]
+    x_raw = hn @ mp["w_x"]
+    B_raw = hn @ mp["w_B"]
+    C_raw = hn @ mp["w_C"]
+    dt = hn @ mp["w_dt"]
+    xbc = jnp.concatenate([x_raw, B_raw, C_raw], axis=-1)
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # [Bt, K, C]
+    conv_w = jnp.concatenate([mp["conv_x"], mp["conv_B"], mp["conv_C"]], axis=-1)
+    conv_b = jnp.concatenate([mp["conv_bx"], mp["conv_bB"], mp["conv_bC"]])
+    y_conv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                        conv_w.astype(jnp.float32)) + conv_b
+    y_conv = jax.nn.silu(y_conv).astype(h1.dtype)
+    xs = y_conv[..., :din].reshape(Bt, H, P)
+    Bm = y_conv[..., din:din + N]
+    Cm = y_conv[..., din + N:]
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + mp["dt_bias"])
+    A = -jnp.exp(mp["A_log"])
+    ssm_state, y = ssd_decode(
+        ssm_state, xs.astype(jnp.float32), dtv, A,
+        Bm.astype(jnp.float32), Cm.astype(jnp.float32), mp["D"],
+    )
+    y = y.reshape(Bt, din).astype(h1.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), mp["ln_y"])
+    y = (y @ mp["w_out"])[:, None]
+    new_conv = window[:, 1:]
+    return y, ssm_state, new_conv
+
+
+# ---------------------------------------------------------------------------
+# zamba2 hybrid stack
+# ---------------------------------------------------------------------------
+
+
+def _n_attn_apps(cfg: ModelConfig) -> int:
+    return len([i for i in range(cfg.n_layers) if i % cfg.attn_every == 0])
+
+
+def init_params(key: jax.Array, cfg: ModelConfig):
+    d, L = cfg.d_model, cfg.n_layers
+    ks = jax.random.split(key, 8)
+    params = {
+        "embed": dense_init(ks[0], (cfg.vocab, d), cfg.pdtype, scale=1.0),
+        "layers": mamba_params(ks[1], cfg, L),
+        "final_norm": jnp.zeros((d,), cfg.pdtype),
+        "head": dense_init(ks[2], (d, cfg.vocab), cfg.pdtype),
+    }
+    if cfg.attn_every > 0:
+        params["shared"] = {
+            "w_cat": dense_init(ks[3], (2 * d, d), cfg.pdtype),
+            "ln1": norm_params(cfg, None),
+            "attn": attn_params(ks[4], cfg, None),
+            "ln2": norm_params(cfg, None),
+            "mlp": mlp_params(ks[5], cfg, None),
+            "w_back": dense_init(ks[6], (d, d), cfg.pdtype),
+        }
+    return params
+
+
+def _shared_window(cfg: ModelConfig) -> int:
+    return cfg.swa_pattern[0] if cfg.swa_pattern else -1
+
+
+def _shared_block_train(h, h0, sp, cfg, positions, policy):
+    x = jnp.concatenate([h, h0], axis=-1) @ sp["w_cat"]
+    a, kv = attn_block_train(rmsnorm(x, sp["ln1"]), sp["attn"], cfg,
+                             _shared_window(cfg), positions, policy)
+    x = x + a
+    x = x + swiglu(rmsnorm(x, sp["ln2"]), sp["mlp"])
+    return h + x @ sp["w_back"], kv
+
+
+def apply_stack(params, h, positions, cfg: ModelConfig,
+                policy: ShardingPolicy, collect_kv: bool = False):
+    """Mamba scan with shared attention applied at i % attn_every == 0.
+
+    The shared block is *unrolled* (it has a single parameter set and a
+    handful of applications), interleaved with scanned mamba segments.
+    """
+    L, E = cfg.n_layers, cfg.attn_every
+    lay = params["layers"]
+    kvs = []
+
+    def seg_scan(h, lo, hi):
+        if hi <= lo:
+            return h
+        seg = jax.tree_util.tree_map(lambda x: x[lo:hi], lay)
+
+        def body(carry, mp):
+            out = mamba_block(carry, mp, cfg, vary_axes=policy.vary_axes)
+            return carry + out, None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        h, _ = jax.lax.scan(body_fn, h, seg)
+        return h
+
+    h0 = h
+    apps = list(range(0, L, E)) if E > 0 else []
+    prev = 0
+    for i in apps:
+        h = seg_scan(h, prev, i)
+        h, kv = _shared_block_train(h, h0, params["shared"], cfg, positions,
+                                    policy)
+        kvs.append(kv)
+        prev = i
+    h = seg_scan(h, prev, L)
+    return h, (kvs if collect_kv else None)
+
+
+def loss_fn(params, batch, cfg: ModelConfig,
+            policy: ShardingPolicy = NO_SHARDING, loss_chunk: int = 1024):
+    from repro.models.rwkv6 import _chunked_ce
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    h = embed(inp, params["embed"]).astype(cfg.adtype)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    h, _ = apply_stack(params, h, positions, cfg, policy)
+    h = rmsnorm(h, params["final_norm"])
+    return _chunked_ce(h, params["head"], labels, policy, loss_chunk)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+class ZambaCache(NamedTuple):
+    ssm: jax.Array        # [L, Bt, H, P, N]
+    conv: jax.Array       # [L, Bt, K-1, C]
+    attn: Optional[KVCache]  # stacked [n_apps, ...] or None
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> ZambaCache:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    N, P, K = cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_conv
+    H = din // P
+    conv_ch = din + 2 * N
+    attn = None
+    if cfg.attn_every > 0:
+        attn = init_kv_cache(cfg, batch, _shared_window(cfg), max_len,
+                             stacked=_n_attn_apps(cfg))
+    return ZambaCache(
+        ssm=jnp.zeros((cfg.n_layers, batch, H, P, N), jnp.float32),
+        conv=jnp.zeros((cfg.n_layers, batch, K - 1, conv_ch), cfg.adtype),
+        attn=attn,
+    )
+
+
+def prefill(params, batch, cfg: ModelConfig,
+            policy: ShardingPolicy = NO_SHARDING, max_len: Optional[int] = None):
+    tokens = batch["tokens"]
+    h = embed(tokens, params["embed"]).astype(cfg.adtype)
+    B, S, _ = h.shape
+    max_len = max_len or max(cfg.max_seq_len, S)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    L, E = cfg.n_layers, cfg.attn_every
+    lay = params["layers"]
+    h0 = h
+    ssm_states, conv_states, kvs = [], [], []
+    apps = list(range(0, L, E)) if E > 0 else []
+    for i in range(L):
+        if i in apps:
+            h, kv = _shared_block_train(h, h0, params["shared"], cfg,
+                                        positions, policy)
+            kvs.append(kv)
+        mp = jax.tree_util.tree_map(lambda x: x[i], lay)
+        y, ssm_s, conv_s = mamba_block(h, mp, cfg, return_state=True)
+        h = h + y
+        ssm_states.append(ssm_s)
+        conv_states.append(conv_s)
+    h = rmsnorm(h[:, -1:], params["final_norm"])
+    logits = (h[:, 0] @ params["head"]).astype(jnp.float32)
+    attn_cache = None
+    if apps:
+        attn_cache = init_kv_cache(cfg, B, _shared_window(cfg), max_len,
+                                   stacked=len(apps))
+        k_all = jnp.stack([kv[0] for kv in kvs])
+        v_all = jnp.stack([kv[1] for kv in kvs])
+        attn_cache = jax.vmap(lambda c, k, v: cache_prefill(c, k, v, S))(
+            attn_cache, k_all, v_all
+        )
+    cache = ZambaCache(
+        ssm=jnp.stack(ssm_states),
+        conv=jnp.stack(conv_states).astype(cfg.adtype),
+        attn=attn_cache,
+    )
+    return logits, cache, S
+
+
+def decode_step(params, cache: ZambaCache, token, pos, cfg: ModelConfig,
+                policy: ShardingPolicy = NO_SHARDING):
+    h = embed(token[:, None], params["embed"]).astype(cfg.adtype)
+    h0 = h
+    L, E = cfg.n_layers, cfg.attn_every
+    lay = params["layers"]
+    apps = list(range(0, L, E)) if E > 0 else []
+    new_ssm, new_conv, new_attn = [], [], []
+    app_idx = 0
+    for i in range(L):
+        if i in apps:
+            sp = params["shared"]
+            x = jnp.concatenate([h, h0], axis=-1) @ sp["w_cat"]
+            c_i = jax.tree_util.tree_map(lambda t: t[app_idx], cache.attn)
+            a, c_new = attn_block_decode(rmsnorm(x, sp["ln1"]), sp["attn"],
+                                         cfg, c_i, pos, _shared_window(cfg))
+            x = x + a
+            x = x + swiglu(rmsnorm(x, sp["ln2"]), sp["mlp"])
+            h = h + x @ sp["w_back"]
+            new_attn.append(c_new)
+            app_idx += 1
+        mp = jax.tree_util.tree_map(lambda x: x[i], lay)
+        y, s_new, c_new2 = mamba_decode(h, mp, cfg, cache.ssm[i], cache.conv[i])
+        h = h + y
+        new_ssm.append(s_new)
+        new_conv.append(c_new2)
+    attn_cache = None
+    if apps:
+        attn_cache = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_attn)
+    new_cache = ZambaCache(
+        ssm=jnp.stack(new_ssm),
+        conv=jnp.stack(new_conv).astype(cfg.adtype),
+        attn=attn_cache,
+    )
+    h = rmsnorm(h, params["final_norm"])
+    logits = (h[:, 0] @ params["head"]).astype(jnp.float32)
+    return maybe_shard(logits, policy.logits), new_cache

@@ -1,0 +1,73 @@
+"""Learning-rate schedules.
+
+Includes the paper's schedules:
+  * fixed eta = C/sqrt(T)                          (Theorem 1 / 4)
+  * decaying eta_t = xi / (a + t)                  (Theorems 2, 3, 5, 6)
+  * the convex-experiment schedule c / (lambda (a + t)) with a = d*H/k
+  * ResNet-style warmup + piecewise decay          (Section 5.1)
+
+All schedules are ``step -> lr`` callables usable under jit (step traced).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32)
+
+    return fn
+
+
+def inverse_time(xi: float, a: float):
+    """eta_t = xi / (a + t)  (paper Lemma 4 / Theorem 2/3 form)."""
+
+    def fn(step):
+        return jnp.asarray(xi, jnp.float32) / (a + step.astype(jnp.float32))
+
+    return fn
+
+
+def paper_convex_lr(c: float, lam: float, d: int, H: int, k: int):
+    """Section 5.2.2: lr = c / (lambda (a + t)), a = d H / k."""
+    a = float(d) * H / max(k, 1)
+    return inverse_time(c / lam, a)
+
+
+def piecewise_decay(base_lr: float, boundaries, factor: float = 0.1):
+    bnds = jnp.asarray(list(boundaries), jnp.int32)
+
+    def fn(step):
+        n = jnp.sum(step >= bnds)
+        return base_lr * factor ** n.astype(jnp.float32)
+
+    return fn
+
+
+def warmup_piecewise(base_lr: float, warmup_steps: int, boundaries,
+                     factor: float = 0.1):
+    """Linear warmup then piecewise decay (paper's ResNet-50 schedule)."""
+    pw = piecewise_decay(base_lr, boundaries, factor)
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * (s + 1.0) / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, pw(step))
+
+    return fn
+
+
+def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * (s + 1.0) / max(warmup_steps, 1)
+        prog = jnp.clip(
+            (s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return fn

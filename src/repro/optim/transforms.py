@@ -1,0 +1,125 @@
+"""Minimal optax-style gradient transforms (built from scratch; the
+container has no optax).
+
+The Qsparse engines need the *local* inner optimizer to expose the
+update as a pure function so each worker can be vmapped/shard_mapped.
+
+``update(grads, state, params, lr) -> (updates, new_state)`` where
+``updates`` is the quantity to *subtract* scaled by +1, i.e. the new
+params are ``params - updates`` (so updates already include the learning
+rate).  This matches the paper's bookkeeping where
+``x_t - x̂_{t+1/2}`` accumulates ``sum_j eta_j * d_j``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+OptState = Any
+
+
+class GradientTransform(NamedTuple):
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any, jnp.ndarray], tuple[Any, OptState]]
+
+
+def _zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def sgd(weight_decay: float = 0.0) -> GradientTransform:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        if weight_decay:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p, grads, params
+            )
+        updates = jax.tree_util.tree_map(lambda g: lr * g, grads)
+        return updates, state
+
+    return GradientTransform(init, update)
+
+
+def momentum_sgd(
+    momentum: float = 0.9, nesterov: bool = False, weight_decay: float = 0.0
+) -> GradientTransform:
+    """SGD with (heavy-ball) momentum, applied on local iterations as in
+    the paper's ResNet-50 experiments (momentum 0.9)."""
+
+    def init(params):
+        return {"mu": _zeros_like(params)}
+
+    def update(grads, state, params, lr):
+        if weight_decay:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p, grads, params
+            )
+        mu = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g, state["mu"], grads
+        )
+        if nesterov:
+            eff = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, mu, grads
+            )
+        else:
+            eff = mu
+        updates = jax.tree_util.tree_map(lambda e: lr * e, eff)
+        return updates, {"mu": mu}
+
+    return GradientTransform(init, update)
+
+
+def adam(
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> GradientTransform:
+    def init(params):
+        return {
+            "m": _zeros_like(params),
+            "v": _zeros_like(params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads
+        )
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), state["v"], grads
+        )
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1**c
+        bc2 = 1 - b2**c
+
+        def upd(m_, v_, p):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p
+            return lr * u
+
+        updates = jax.tree_util.tree_map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "count": count}
+
+    return GradientTransform(init, update)
+
+
+def apply_updates(params, updates):
+    """params - updates (updates already carry the learning rate)."""
+    return jax.tree_util.tree_map(
+        lambda p, u: (p - u).astype(p.dtype), params, updates
+    )
+
+
+def make_optimizer(name: str, **kw) -> GradientTransform:
+    table = {"sgd": sgd, "momentum": momentum_sgd, "adam": adam}
+    if name not in table:
+        raise KeyError(f"unknown optimizer {name!r}; have {sorted(table)}")
+    return table[name](**kw)

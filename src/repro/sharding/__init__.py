@@ -1,0 +1,7 @@
+from repro.sharding.specs import (
+    activation_policy,
+    batch_specs,
+    param_specs,
+)
+
+__all__ = ["activation_policy", "batch_specs", "param_specs"]

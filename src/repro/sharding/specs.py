@@ -1,0 +1,246 @@
+"""Per-architecture PartitionSpec trees (tensor-parallel 'model' axis).
+
+Conventions (megatron-style):
+  * column-parallel:  out-features sharded ('model' on the last dim)
+  * row-parallel:     in-features sharded  ('model' on the contraction dim)
+  * embeddings sharded on vocab; heads sharded where divisible.
+
+The specs only mention the 'model' axis — data-parallel placement is
+the engines' job (replicated masters, worker-axis locals, batch over
+('pod','data')).  Leaves whose natural shard axis does not divide by
+the mesh's model size are replicated (None) — correctness first, noted
+for the roofline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShardingPolicy
+
+
+def _dense_layer_specs(cfg: ModelConfig, L: bool = True):
+    pre = (None,) if L else ()
+    return {
+        "ln1": P(*pre, None),
+        "ln2": P(*pre, None),
+        "attn": {
+            "wq": P(*pre, None, "model"),
+            "wk": P(*pre, None, "model"),
+            "wv": P(*pre, None, "model"),
+            "wo": P(*pre, "model", None),
+        },
+        "mlp": {
+            "w1": P(*pre, None, "model"),
+            "w3": P(*pre, None, "model"),
+            "w2": P(*pre, "model", None),
+        },
+    }
+
+
+def _moe_specs(cfg: ModelConfig):
+    nper_pre = (None,)
+    lay = {
+        "ln1": P(None, None),
+        "ln2": P(None, None),
+        "attn": {
+            "wq": P(None, None, "model"),
+            "wk": P(None, None, "model"),
+            "wv": P(None, None, "model"),
+            "wo": P(None, "model", None),
+        },
+        "moe": {
+            "router": P(None, None, None),
+            "w1": P(None, "model", None, None),   # experts over 'model'
+            "w3": P(None, "model", None, None),
+            "w2": P(None, "model", None, None),
+        },
+    }
+    if cfg.shared_expert:
+        lay["moe"]["shared"] = {
+            "w1": P(None, None, "model"),
+            "w3": P(None, None, "model"),
+            "w2": P(None, "model", None),
+        }
+    if cfg.moe_interleave > 1:
+        lay["dense_mlp"] = {
+            "w1": P(None, None, "model"),
+            "w3": P(None, None, "model"),
+            "w2": P(None, "model", None),
+        }
+    return lay
+
+
+def _rwkv_specs(cfg: ModelConfig):
+    v = {
+        "ln1": P(None, None), "ln2": P(None, None),
+        "mix_r": P(None, None), "mix_k": P(None, None),
+        "mix_v": P(None, None), "mix_w": P(None, None),
+        "mix_g": P(None, None),
+        "wr": P(None, None, "model"),
+        "wk": P(None, None, "model"),
+        "wv": P(None, None, "model"),
+        "wg": P(None, None, "model"),
+        "wo": P(None, "model", None),
+        "w0": P(None, None),
+        "wA": P(None, None, None),
+        "wB": P(None, None, None),
+        "bonus": P(None, "model", None),   # heads over model
+        "ln_x": P(None, None),
+        "cmix_k": P(None, None), "cmix_r": P(None, None),
+        "ck": P(None, None, "model"),
+        "cv": P(None, "model", None),
+        "cr": P(None, None, "model"),
+    }
+    return v
+
+
+def _zamba_specs(cfg: ModelConfig):
+    lay = {
+        "ln": P(None, None),
+        "w_z": P(None, None, "model"),
+        "w_x": P(None, None, "model"),
+        "w_B": P(None, None, None),
+        "w_C": P(None, None, None),
+        "w_dt": P(None, None, "model"),
+        "conv_x": P(None, None, "model"),
+        "conv_B": P(None, None, None),
+        "conv_C": P(None, None, None),
+        "conv_bx": P(None, "model"),
+        "conv_bB": P(None, None),
+        "conv_bC": P(None, None),
+        "dt_bias": P(None, "model"),
+        "A_log": P(None, "model"),
+        "D": P(None, "model"),
+        "ln_y": P(None, "model"),
+        "w_out": P(None, "model", None),
+    }
+    shared = {
+        "w_cat": P(None, "model"),
+        "ln1": P(None),
+        "attn": {
+            "wq": P(None, "model"), "wk": P(None, "model"),
+            "wv": P(None, "model"), "wo": P("model", None),
+        },
+        "ln2": P(None),
+        "mlp": {
+            "w1": P(None, "model"), "w3": P(None, "model"),
+            "w2": P("model", None),
+        },
+        "w_back": P("model", None),
+    }
+    return lay, shared
+
+
+def param_specs(cfg: ModelConfig):
+    """PartitionSpec tree matching the family's init_params structure."""
+    if cfg.family == "dense":
+        specs = {
+            "embed": P("model", None),
+            "layers": _dense_layer_specs(cfg),
+            "final_norm": P(None),
+        }
+        if not cfg.tie_embeddings:
+            specs["head"] = P(None, "model")
+        return specs
+    if cfg.family == "moe":
+        return {
+            "embed": P("model", None),
+            "layers": _moe_specs(cfg),
+            "final_norm": P(None),
+            "head": P(None, "model"),
+        }
+    if cfg.family == "rwkv6":
+        return {
+            "embed": P("model", None),
+            "layers": _rwkv_specs(cfg),
+            "final_norm": P(None),
+            "head": P(None, "model"),
+        }
+    if cfg.family == "zamba2":
+        lay, shared = _zamba_specs(cfg)
+        out = {
+            "embed": P("model", None),
+            "layers": lay,
+            "final_norm": P(None),
+            "head": P(None, "model"),
+        }
+        if cfg.attn_every > 0:
+            out["shared"] = shared
+        return out
+    raise KeyError(cfg.family)
+
+
+def activation_policy(cfg: ModelConfig, *, for_serving: bool,
+                      data_axes=("data",), seq_shard: bool = False,
+                      ep: bool = True) -> ShardingPolicy:
+    """Activation constraints.
+
+    Training runs inside a manual-(pod,data) shard_map, so constraints
+    may reference only 'model'.  Serving runs under plain jit, so batch
+    dims carry the data axes.
+    """
+    da = tuple(data_axes)
+    if for_serving:
+        return ShardingPolicy(
+            act=P(da, None, None),
+            logits=None,  # ranks differ between prefill/decode; leave to XLA
+            kv_cache=P(da, None, "model", None),
+            ep_axis="model" if (ep and cfg.family == "moe") else None,
+        )
+    # NOTE: the explicit expert-parallel shard_map cannot nest inside the
+    # manual-(pod,data) training region in current JAX (mixed Manual/Auto
+    # PartitionSpec rejection); training delegates expert sharding to XLA
+    # auto over the expert axis instead.  Serving keeps explicit EP.
+    return ShardingPolicy(
+        act=P(None, "model", None) if seq_shard else None,
+        logits=P(None, None, "model"),
+        # EP inside the manual-(pod,data) region works through the
+        # custom_vjp expert apply (models/moe.py) — plain AD through a
+        # nested shard_map is unsupported in current JAX.
+        ep_axis="model" if (ep and cfg.family == "moe") else None,
+        vary_axes=tuple(data_axes),
+    )
+
+
+def sanitize_spec(spec, shape, mesh) -> P:
+    """Drop sharding entries whose axis size does not divide the dim
+    (e.g. internvl2's 92553 vocab, rwkv6's 40 heads on a 16-way model
+    axis) — replicate those dims instead.  Keeps lowering legal; the
+    divisibility loss is reported via head_divisibility_note."""
+    if spec is None:
+        return P()
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, e in zip(shape, entries):
+        if e is None:
+            out.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(e if dim % size == 0 else None)
+    return P(*out)
+
+
+def batch_specs(kind: str, data_axes=("data",)):
+    da = tuple(data_axes)
+    if kind == "train":
+        return {"tokens": P(da, None, None)}
+    return {"tokens": P(da, None)}
+
+
+def head_divisibility_note(cfg: ModelConfig, model_size: int) -> str:
+    """Roofline annotation: which shardings are limited by divisibility."""
+    notes = []
+    if cfg.family in ("dense", "moe"):
+        if (cfg.n_heads * cfg.hd) % model_size:
+            notes.append(f"attn out dim {cfg.n_heads * cfg.hd} !% {model_size}")
+        if (cfg.n_kv_heads * cfg.hd) % model_size:
+            notes.append(
+                f"kv dim {cfg.n_kv_heads * cfg.hd} !% {model_size} (replicated)"
+            )
+    return "; ".join(notes) or "clean"

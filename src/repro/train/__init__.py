@@ -1,0 +1,4 @@
+from repro.train import checkpoint
+from repro.train.trainer import History, RunConfig, train
+
+__all__ = ["checkpoint", "History", "RunConfig", "train"]

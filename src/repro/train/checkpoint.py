@@ -1,0 +1,92 @@
+"""Checkpointing: flat-npz + JSON manifest of the pytree structure.
+
+Sharding-aware restore: arrays are saved from host memory (gathered);
+``restore(..., shardings=tree)`` device_puts each leaf back onto its
+NamedSharding.  No external deps (no orbax in this container).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't serialize bf16/f8 natively; store as uint16/uint8 views
+_EXOTIC = {
+    "bfloat16": ("uint16", ml_dtypes.bfloat16),
+    "float8_e4m3fn": ("uint8", ml_dtypes.float8_e4m3fn),
+    "float8_e5m2": ("uint8", ml_dtypes.float8_e5m2),
+}
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        items.append((key, leaf))
+    return items, treedef
+
+
+def save(path: str, tree: Any, step: Optional[int] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    items, _ = _flatten_with_paths(tree)
+    arrays = {}
+    manifest = {"keys": [], "step": step}
+    for i, (key, leaf) in enumerate(items):
+        name = f"a{i}"
+        arr = np.asarray(jax.device_get(leaf))
+        dtype = str(arr.dtype)
+        if dtype in _EXOTIC:
+            arr = arr.view(_EXOTIC[dtype][0])
+        arrays[name] = arr
+        manifest["keys"].append({"name": name, "path": key, "dtype": dtype})
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def restore(path: str, like: Any, shardings: Any = None) -> Any:
+    """``like``: a pytree with the target structure (e.g. abstract or
+    freshly-initialized params)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    if len(manifest["keys"]) != len(leaves_like):
+        raise ValueError(
+            f"checkpoint has {len(manifest['keys'])} leaves, target "
+            f"structure has {len(leaves_like)}"
+        )
+    out = []
+    for e in manifest["keys"]:
+        arr = np.asarray(data[e["name"]])
+        if e["dtype"] in _EXOTIC:
+            arr = arr.view(_EXOTIC[e["dtype"]][1])
+        out.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    else:
+        tree = jax.tree_util.tree_map(
+            lambda a, l: jax.numpy.asarray(a, getattr(l, "dtype", None)),
+            tree, like,
+        )
+    return tree
+
+
+def latest_step(root: str) -> Optional[int]:
+    if not os.path.isdir(root):
+        return None
+    steps = []
+    for d in os.listdir(root):
+        if d.startswith("step_"):
+            try:
+                steps.append(int(d.split("_")[1]))
+            except ValueError:
+                pass
+    return max(steps) if steps else None

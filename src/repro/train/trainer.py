@@ -1,0 +1,124 @@
+"""Training loop driving Qsparse-local-SGD (reference engines).
+
+Handles: sync/async schedules, LR schedules, the bits ledger (the
+paper's evaluation axis), periodic eval, target-loss early stats (bits
+to reach target), and checkpointing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import async_qsparse, qsparse, schedule as sched
+from repro.core.operators import CompressionOp
+from repro.optim.transforms import GradientTransform
+from repro.train import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class RunConfig:
+    total_steps: int
+    R: int
+    H: int = 1
+    asynchronous: bool = False
+    seed: int = 0
+    log_every: int = 50
+    eval_every: int = 0
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
+    target_loss: Optional[float] = None
+
+
+@dataclasses.dataclass
+class History:
+    steps: list = dataclasses.field(default_factory=list)
+    loss: list = dataclasses.field(default_factory=list)
+    bits: list = dataclasses.field(default_factory=list)
+    rounds: list = dataclasses.field(default_factory=list)
+    eval_steps: list = dataclasses.field(default_factory=list)
+    eval_metrics: list = dataclasses.field(default_factory=list)
+    bits_to_target: Optional[float] = None
+    steps_to_target: Optional[int] = None
+    wall_time: float = 0.0
+
+    def summary(self) -> dict:
+        return {
+            "final_loss": self.loss[-1] if self.loss else None,
+            "total_bits": self.bits[-1] if self.bits else 0.0,
+            "rounds": self.rounds[-1] if self.rounds else 0,
+            "bits_to_target": self.bits_to_target,
+            "steps_to_target": self.steps_to_target,
+            "wall_time": self.wall_time,
+        }
+
+
+def train(
+    grad_fn: Callable,                       # (params, batch)->(loss, grads)
+    params: Any,
+    inner_opt: GradientTransform,
+    operator: CompressionOp | Any,
+    lr_schedule: Callable,
+    batches: Iterable,
+    run: RunConfig,
+    eval_fn: Optional[Callable] = None,      # (master_params) -> metrics dict
+    smooth: int = 20,
+) -> tuple[Any, History]:
+    """Runs Algorithm 1 (or Algorithm 2 when run.asynchronous)."""
+    key = jax.random.PRNGKey(run.seed)
+    hist = History()
+    t0 = time.time()
+    if run.asynchronous:
+        state = async_qsparse.init(params, inner_opt, run.R)
+        step_fn = jax.jit(async_qsparse.make_step(
+            grad_fn, inner_opt, operator, lr_schedule, run.R))
+        mask = sched.async_schedule(run.total_steps, run.R, run.H,
+                                    seed=run.seed)
+    else:
+        state = qsparse.init(params, inner_opt, run.R)
+        step_fn = jax.jit(qsparse.make_step(
+            grad_fn, inner_opt, operator, lr_schedule, run.R),
+            static_argnames=("sync",))
+        mask = sched.fixed_schedule(run.total_steps, run.H)
+
+    recent = []
+    for t, batch in enumerate(batches):
+        if t >= run.total_steps:
+            break
+        key, sub = jax.random.split(key)
+        batch = jax.tree_util.tree_map(jnp.asarray, batch)
+        if run.asynchronous:
+            state, loss = step_fn(state, batch, jnp.asarray(mask[t]), sub)
+        else:
+            state, loss = step_fn(state, batch, sync=bool(mask[t]), key=sub)
+        lossf = float(loss)
+        recent.append(lossf)
+        if len(recent) > smooth:
+            recent.pop(0)
+        sm = float(np.mean(recent))
+        if (t + 1) % run.log_every == 0 or t == run.total_steps - 1:
+            hist.steps.append(t + 1)
+            hist.loss.append(sm)
+            hist.bits.append(float(state.bits))
+            hist.rounds.append(int(state.rounds))
+        if (run.target_loss is not None and hist.bits_to_target is None
+                and sm <= run.target_loss and len(recent) == smooth):
+            hist.bits_to_target = float(state.bits)
+            hist.steps_to_target = t + 1
+        if eval_fn and run.eval_every and (t + 1) % run.eval_every == 0:
+            hist.eval_steps.append(t + 1)
+            hist.eval_metrics.append(
+                {k: float(v) for k, v in eval_fn(state.master).items()}
+            )
+        if run.ckpt_dir and run.ckpt_every and (t + 1) % run.ckpt_every == 0:
+            ckpt.save(f"{run.ckpt_dir}/step_{t + 1}", state.master, step=t + 1)
+    hist.wall_time = time.time() - t0
+    if run.ckpt_dir:
+        ckpt.save(f"{run.ckpt_dir}/final", state.master,
+                  step=run.total_steps)
+    return state, hist

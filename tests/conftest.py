@@ -1,0 +1,34 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count forcing here —
+smoke tests must see the real single CPU device; multi-device tests
+spawn subprocesses that set the flag before importing jax."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 900):
+    """Run python code in a subprocess with a forced device count."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True,
+        text=True, timeout=timeout,
+    )
+    if out.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed\nSTDOUT:\n{out.stdout[-4000:]}\n"
+            f"STDERR:\n{out.stderr[-4000:]}"
+        )
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_subprocess

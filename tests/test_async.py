@@ -1,0 +1,116 @@
+"""Algorithm 2 (asynchronous) behaviour tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import async_qsparse, operators as ops, qsparse, schedule
+from repro.optim import constant, inverse_time, sgd
+
+R, D = 4, 40
+
+
+@pytest.fixture(scope="module")
+def problem():
+    cs = jax.random.normal(jax.random.PRNGKey(1), (R, D))
+
+    def grad_fn(params, data):
+        c, noise = data
+        g = params["w"] - c + 0.01 * noise
+        return 0.5 * jnp.sum((params["w"] - c) ** 2), {"w": g}
+
+    def batches(T, seed=2):
+        k = jax.random.PRNGKey(seed)
+        out = []
+        for _ in range(T):
+            k, s = jax.random.split(k)
+            out.append((cs, jax.random.normal(s, (R, D))))
+        return out
+
+    return cs, grad_fn, batches
+
+
+@settings(max_examples=20, deadline=None)
+@given(T=st.integers(10, 200), Rr=st.integers(1, 12), H=st.integers(1, 9),
+       seed=st.integers(0, 999))
+def test_async_schedule_respects_gap(T, Rr, H, seed):
+    mask = schedule.async_schedule(T, Rr, H, seed=seed)
+    for g in schedule.worker_gaps(mask):
+        assert 0 < g <= H
+
+
+@settings(max_examples=20, deadline=None)
+@given(T=st.integers(2, 300), H=st.integers(1, 16))
+def test_fixed_schedule_gap(T, H):
+    mask = schedule.fixed_schedule(T, H)
+    idx = [t + 1 for t in range(T) if mask[t]]
+    assert schedule.gap(idx) <= H
+    assert T in idx  # paper requires T in I_T
+
+
+def test_async_all_sync_equals_sync(problem):
+    """When every worker syncs every step, Algorithm 2 == Algorithm 1."""
+    cs, grad_fn, batches = problem
+    T = 30
+    bs = batches(T)
+    op = ops.TopK(k=8)
+    params = {"w": jnp.zeros(D)}
+    inner = sgd()
+    lr = constant(0.05)
+
+    s1 = qsparse.init(params, inner, R)
+    f1 = jax.jit(qsparse.make_step(grad_fn, inner, op, lr, R),
+                 static_argnames=("sync",))
+    s2 = async_qsparse.init(params, inner, R)
+    f2 = jax.jit(async_qsparse.make_step(grad_fn, inner, op, lr, R))
+    key = jax.random.PRNGKey(0)
+    all_on = jnp.ones((R,), bool)
+    for b in bs:
+        key, k1 = jax.random.split(key)
+        s1, _ = f1(s1, b, sync=True, key=k1)
+        s2, _ = f2(s2, b, all_on, k1)
+    np.testing.assert_allclose(np.asarray(s1.master["w"]),
+                               np.asarray(s2.master["w"]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(s1.bits), float(s2.bits))
+
+
+def test_async_converges(problem):
+    cs, grad_fn, batches = problem
+    opt_pt = jnp.mean(cs, 0)
+    T, H = 1200, 4
+    op = ops.QuantizedSparsifier(k=8, s=15)
+    params = {"w": jnp.zeros(D)}
+    inner = sgd()
+    lr = inverse_time(30.0, 200.0)
+    state = async_qsparse.init(params, inner, R)
+    step = async_qsparse.make_step(grad_fn, inner, op, lr, R)
+    mask = schedule.async_schedule(T, R, H, seed=0)
+    state, _ = async_qsparse.run(state, step, batches(T), mask,
+                                 jax.random.PRNGKey(4))
+    err = float(jnp.linalg.norm(state.master["w"] - opt_pt))
+    assert err < 0.6, err
+
+
+def test_async_nonsync_workers_keep_state(problem):
+    cs, grad_fn, batches = problem
+    op = ops.TopK(k=8)
+    params = {"w": jnp.zeros(D)}
+    inner = sgd()
+    state = async_qsparse.init(params, inner, R)
+    step = jax.jit(async_qsparse.make_step(grad_fn, inner, op,
+                                           constant(0.05), R))
+    b = batches(1)[0]
+    flags = jnp.array([True] + [False] * (R - 1))
+    state, _ = step(state, b, flags, jax.random.PRNGKey(0))
+    # worker 0 synced: its view matches the new master; others still x0
+    np.testing.assert_allclose(np.asarray(state.master_view["w"][0]),
+                               np.asarray(state.master["w"]))
+    np.testing.assert_allclose(np.asarray(state.master_view["w"][1]),
+                               np.zeros(D))
+    # memory only updated for worker 0
+    assert float(jnp.sum(state.memory["w"][1] ** 2)) == 0.0
+    assert float(jnp.sum(state.memory["w"][0] ** 2)) >= 0.0
+    assert int(state.rounds) == 1

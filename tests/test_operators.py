@@ -1,0 +1,160 @@
+"""Property tests for the compression operators (paper Section 2).
+
+The load-bearing invariant is Definition 3:
+    E_C ||x - C(x)||^2 <= (1 - gamma) ||x||^2
+with the gamma values proved in Lemmas 1-3 and Corollary 1.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bits as bitlib
+from repro.core import operators as ops
+
+ATOL = 1e-4
+
+
+def vec_strategy(max_d=400):
+    return st.integers(1, 10_000).map(
+        lambda seed: jax.random.normal(
+            jax.random.PRNGKey(seed),
+            (int(jax.random.randint(jax.random.PRNGKey(seed + 1), (), 8,
+                                    max_d)),),
+        )
+    )
+
+
+def check_def3(op, x, trials=12, slack=1.02):
+    d = int(x.size)
+    errs = []
+    for i in range(trials):
+        out, _ = op(jax.random.PRNGKey(i), x)
+        errs.append(float(jnp.sum((x - out.astype(x.dtype)) ** 2)))
+    lhs = np.mean(errs)
+    rhs = (1.0 - op.gamma(d)) * float(jnp.sum(x ** 2))
+    assert lhs <= rhs * slack + ATOL, (lhs, rhs, type(op).__name__)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), kfrac=st.floats(0.01, 0.9))
+def test_topk_def3(seed, kfrac):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (200,))
+    check_def3(ops.TopK(k=kfrac), x, trials=1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), kfrac=st.floats(0.05, 0.9))
+def test_randk_def3(seed, kfrac):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (150,))
+    check_def3(ops.RandK(k=kfrac), x, trials=30, slack=1.25)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), s=st.integers(16, 128))
+def test_qsgd_def3_and_unbiased(seed, s):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (100,))
+    op = ops.QSGDQuantizer(s=s)
+    check_def3(op, x, trials=30, slack=1.3)
+    outs = [op(jax.random.PRNGKey(i), x)[0] for i in range(200)]
+    mean = jnp.mean(jnp.stack(outs), 0)
+    # Definition 1(i): unbiasedness
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(x),
+                               atol=4 * float(jnp.max(jnp.abs(x))) / np.sqrt(200))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_qsgd_second_moment(seed):
+    """Definition 1(ii): E||Q(x)||^2 <= (1 + beta)||x||^2."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,))
+    s = 8
+    op = ops.QSGDQuantizer(s=s)
+    sq = [float(jnp.sum(op(jax.random.PRNGKey(i), x)[0] ** 2))
+          for i in range(100)]
+    beta = op.beta(64)
+    assert np.mean(sq) <= (1 + beta) * float(jnp.sum(x ** 2)) * 1.1
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(4, 64),
+       scaled=st.booleans())
+def test_qtopk_composition_lemma(seed, k, scaled):
+    """Lemma 1 (unscaled, beta < 1 regime) / Lemma 2 (scaled, always)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (128,))
+    s = 32  # beta_{k,s} = k/s^2 < 1 for k <= 64
+    op = ops.QuantizedSparsifier(k=k, s=s, scaled=scaled)
+    check_def3(op, x, trials=25, slack=1.2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(1, 100),
+       m=st.sampled_from([1, 2]))
+def test_signtopk_lemma3(seed, k, m):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (128,))
+    op = ops.SignSparsifier(k=k, m=m)
+    check_def3(op, x, trials=1)
+
+
+def test_sign_def3():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,))
+    check_def3(ops.Sign(), x, trials=1)
+
+
+def test_scaled_better_gamma_when_beta_lt_1():
+    """Remark 2: gamma_scaled > gamma_unscaled whenever beta < 1."""
+    d = 1000
+    for k in (10, 100, 500):
+        u = ops.QuantizedSparsifier(k=k, s=40, scaled=False)
+        s = ops.QuantizedSparsifier(k=k, s=40, scaled=True)
+        assert u.beta(d) < 1
+        assert s.gamma(d) > u.gamma(d)
+
+
+def test_piecewise_corollary1():
+    """Corollary 1: leafwise composition has gamma = min_i gamma_i."""
+    tree = {
+        "a": jax.random.normal(jax.random.PRNGKey(0), (64,)),
+        "b": jax.random.normal(jax.random.PRNGKey(1), (32, 8)),
+    }
+    op_tree = {"a": ops.TopK(k=16), "b": ops.TopK(k=0.5)}
+    g = ops.tree_gamma(op_tree, tree)
+    assert abs(g - min(16 / 64, 0.5)) < 1e-9
+    out, total_bits = ops.compress_tree(op_tree, jax.random.PRNGKey(2), tree)
+    err = sum(float(jnp.sum((x - y) ** 2))
+              for x, y in zip(jax.tree_util.tree_leaves(tree),
+                              jax.tree_util.tree_leaves(out)))
+    norm = sum(float(jnp.sum(x ** 2)) for x in jax.tree_util.tree_leaves(tree))
+    assert err <= (1 - g) * norm * 1.01
+    assert float(total_bits) > 0
+
+
+def test_row_ops_match_gamma():
+    x = jax.random.normal(jax.random.PRNGKey(3), (1000,))
+    for op in (ops.RowTopK(k=0.1, row_len=100),
+               ops.RowSignTopK(k=0.1, row_len=100, m=2)):
+        check_def3(op, x, trials=1)
+
+
+def test_bits_accounting_exact():
+    d, k = 1024, 32
+    assert bitlib.bits_dense(d) == d * 32
+    assert bitlib.bits_topk(d, k) == 32 + k * (10 + 32)
+    assert bitlib.bits_signtopk(d, k) == 32 + k * 11
+    assert bitlib.bits_randk(d, k) == 64 + 32 * k
+    # composed operator beats TopK beats dense
+    assert (bitlib.bits_signtopk(d, k) < bitlib.bits_topk(d, k)
+            < bitlib.bits_dense(d))
+
+
+def test_operator_registry():
+    for name in ops.OPERATORS:
+        op = ops.make_operator(name)
+        x = jax.random.normal(jax.random.PRNGKey(0), (64,))
+        out, bits = op(jax.random.PRNGKey(1), x)
+        assert out.shape == x.shape
+        assert np.isfinite(float(bits))
+    with pytest.raises(KeyError):
+        ops.make_operator("nope")

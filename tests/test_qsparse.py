@@ -1,0 +1,162 @@
+"""Algorithm 1 (sync) behaviour tests: vanilla-SGD equivalence,
+convergence, memory lemmas, error-compensation identity (Lemma 6)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import operators as ops, qsparse, schedule
+from repro.optim import constant, inverse_time, sgd
+
+R, D = 4, 50
+
+
+@pytest.fixture(scope="module")
+def problem():
+    cs = jax.random.normal(jax.random.PRNGKey(1), (R, D))
+
+    def grad_fn(params, data):
+        c, noise = data
+        g = params["w"] - c + 0.01 * noise
+        return 0.5 * jnp.sum((params["w"] - c) ** 2), {"w": g}
+
+    def batches(T, seed=2):
+        k = jax.random.PRNGKey(seed)
+        out = []
+        for _ in range(T):
+            k, s = jax.random.split(k)
+            out.append((cs, jax.random.normal(s, (R, D))))
+        return out
+
+    return cs, grad_fn, batches
+
+
+def run_alg1(grad_fn, batches, op, T, H, lr, seed=3):
+    params = {"w": jnp.zeros(D)}
+    inner = sgd()
+    state = qsparse.init(params, inner, R)
+    step = qsparse.make_step(grad_fn, inner, op, lr, R)
+    mask = schedule.fixed_schedule(T, H)
+    state, losses = qsparse.run(state, step, batches, mask,
+                                jax.random.PRNGKey(seed))
+    return state, losses
+
+
+def test_identity_h1_equals_vanilla_sgd(problem):
+    """gamma=1, H=1 must reproduce distributed vanilla SGD exactly."""
+    cs, grad_fn, batches = problem
+    T, eta = 40, 0.05
+    bs = batches(T)
+    state, _ = run_alg1(grad_fn, bs, ops.Identity(), T, 1, constant(eta))
+    # manual vanilla distributed SGD
+    w = jnp.zeros(D)
+    for c, noise in bs:
+        g = jnp.mean(w[None] - c + 0.01 * noise, axis=0)
+        w = w - eta * g
+    np.testing.assert_allclose(np.asarray(state.master["w"]), np.asarray(w),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_identity_local_sgd_equals_manual(problem):
+    """gamma=1, H>1 == local SGD with parameter averaging at sync."""
+    cs, grad_fn, batches = problem
+    T, H, eta = 12, 3, 0.05
+    bs = batches(T)
+    state, _ = run_alg1(grad_fn, bs, ops.Identity(), T, H, constant(eta))
+    ws = jnp.zeros((R, D))
+    for t, (c, noise) in enumerate(bs):
+        g = ws - c + 0.01 * noise
+        ws = ws - eta * g
+        if (t + 1) % H == 0 or t == T - 1:
+            ws = jnp.broadcast_to(jnp.mean(ws, 0), ws.shape)
+    np.testing.assert_allclose(np.asarray(state.master["w"]),
+                               np.asarray(ws[0]), rtol=1e-5, atol=1e-5)
+
+
+def test_compressed_converges_to_neighborhood(problem):
+    cs, grad_fn, batches = problem
+    opt_pt = jnp.mean(cs, 0)
+    T, H = 1200, 4
+    lr = inverse_time(30.0, 200.0)
+    state, _ = run_alg1(grad_fn, batches(T), ops.TopK(k=10), T, H, lr)
+    err = float(jnp.linalg.norm(state.master["w"] - opt_pt))
+    assert err < 0.35, err
+    # uncompressed reference is better but same order
+    state0, _ = run_alg1(grad_fn, batches(T), ops.Identity(), T, H, lr)
+    err0 = float(jnp.linalg.norm(state0.master["w"] - opt_pt))
+    assert err0 < err
+
+
+def test_memory_lemma5_bound(problem):
+    """Lemma 5: E||m||^2 <= 4 eta^2 (1-gamma^2)/gamma^2 H^2 G^2."""
+    cs, grad_fn, batches = problem
+    T, H, eta = 200, 4, 0.02
+    op = ops.TopK(k=10)
+    gamma = op.gamma(D)
+    state, _ = run_alg1(grad_fn, batches(T), op, T, H, constant(eta))
+    mem = float(jnp.mean(qsparse.memory_sq_norms(state)))
+    # G^2: bound gradient norm along the trajectory (generous estimate)
+    G2 = float(jnp.max(jnp.sum(cs ** 2, axis=1))) * 4 + 1.0
+    bound = 4 * eta ** 2 * (1 - gamma ** 2) / gamma ** 2 * H ** 2 * G2
+    assert mem <= bound, (mem, bound)
+
+
+def test_memory_contracts_with_decaying_lr(problem):
+    """Lemma 4: memory ~ O(eta_t^2) for eta_t = xi/(a+t)."""
+    cs, grad_fn, batches = problem
+    op = ops.TopK(k=10)
+    mems = []
+    for T in (200, 800):
+        lr = inverse_time(20.0, 400.0)
+        state, _ = run_alg1(grad_fn, batches(T), op, T, 4, lr)
+        mems.append(float(jnp.mean(qsparse.memory_sq_norms(state))))
+    # eta ratio: ((400+200)/(400+800))^2 = 0.25 => memory should shrink
+    assert mems[1] < mems[0] * 0.6, mems
+
+
+def test_bits_ledger_matches_schedule(problem):
+    cs, grad_fn, batches = problem
+    T, H = 40, 4
+    op = ops.TopK(k=10)
+    state, _ = run_alg1(grad_fn, batches(T), op, T, H, constant(0.05))
+    rounds = int(state.rounds)
+    assert rounds == len([t for t in range(T)
+                          if (t + 1) % H == 0 or t == T - 1])
+    from repro.core import bits as bitlib
+    expected = rounds * R * bitlib.bits_topk(D, 10)
+    np.testing.assert_allclose(float(state.bits), expected)
+
+
+def test_lemma6_virtual_sequence_identity(problem):
+    """Lemma 6: x̂_t − x̃_t == (1/R) Σ_r m_t^{(r)}.  The virtual sequence
+    x̃ applies the *uncompressed* local updates evaluated at the real
+    local iterates; we replay it exactly alongside Algorithm 1."""
+    cs, grad_fn, batches = problem
+    T, H, eta = 12, 3, 0.05
+    bs = batches(T)
+    op = ops.TopK(k=5)
+    params = {"w": jnp.zeros(D)}
+    inner = sgd()
+    state = qsparse.init(params, inner, R)
+    step = jax.jit(qsparse.make_step(grad_fn, inner, op, constant(eta), R),
+                   static_argnames=("sync",))
+    mask = schedule.fixed_schedule(T, H)
+    key = jax.random.PRNGKey(3)
+    virtual = jnp.zeros((R, D))  # x̃^{(r)}
+    for t, (c, noise) in enumerate(bs):
+        # virtual update uses gradients at the REAL local iterates x̂_t
+        g = state.local["w"] - c + 0.01 * noise
+        virtual = virtual - eta * g
+        key, sub = jax.random.split(key)
+        state, _ = step(state, (c, noise), sync=bool(mask[t]), key=sub)
+        xhat_bar = jnp.mean(state.local["w"], 0)
+        xtilde_bar = jnp.mean(virtual, 0)
+        mean_mem = jnp.mean(state.memory["w"], 0)
+        np.testing.assert_allclose(
+            np.asarray(xhat_bar - xtilde_bar), np.asarray(mean_mem),
+            rtol=1e-4, atol=1e-5)
+    # at a sync step, locals == master exactly
+    np.testing.assert_allclose(
+        np.asarray(state.local["w"][0]), np.asarray(state.master["w"]),
+        rtol=1e-6, atol=1e-6)

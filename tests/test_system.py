@@ -1,0 +1,115 @@
+"""End-to-end behaviour tests: the paper's headline claims reproduced at
+test scale on the convex objective (Section 5.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.operators import (
+    Identity,
+    QuantizedSparsifier,
+    Sign,
+    SignSparsifier,
+    TopK,
+)
+from repro.data import mnist_like, worker_batches
+from repro.models import softmax
+from repro.optim import inverse_time, sgd
+from repro.train import RunConfig, train
+
+R, B = 4, 16
+
+
+@pytest.fixture(scope="module")
+def convex_setup():
+    x, y = mnist_like(4000, seed=0)
+    cfg = softmax.SoftmaxConfig(l2=1.0 / len(x))
+    params = softmax.init_params(jax.random.PRNGKey(0), cfg)
+
+    def grad_fn(p, batch):
+        return jax.value_and_grad(
+            lambda pp: softmax.loss_fn(pp, batch, cfg)[0])(p)
+
+    return x, y, cfg, params, grad_fn
+
+
+def run_with(grad_fn, params, op, H, T, x, y, target=None, seed=0):
+    lr = inverse_time(xi=60.0, a=100.0)
+    batches = worker_batches(x, y, R, B, T, seed=seed)
+    run = RunConfig(total_steps=T, R=R, H=H, log_every=25,
+                    target_loss=target, seed=seed)
+    state, hist = train(grad_fn, params, sgd(), op, lr, batches, run)
+    return state, hist
+
+
+def test_all_methods_reach_target_loss(convex_setup):
+    """Every operator (vanilla / TopK / Sign / QTopK / SignTopK / +local)
+    converges to the same loss neighbourhood — the paper's 'compression
+    is nearly free in convergence' claim."""
+    x, y, cfg, params, grad_fn = convex_setup
+    T = 250
+    final = {}
+    for name, op, H in [
+        ("vanilla", Identity(), 1),
+        ("topk", TopK(k=0.02), 1),
+        ("ef_sign", Sign(), 1),
+        ("qtopk", QuantizedSparsifier(k=0.02, s=15), 1),
+        ("signtopk", SignSparsifier(k=0.02, m=1), 1),
+        ("qsparse_local", QuantizedSparsifier(k=0.02, s=15), 4),
+    ]:
+        _, hist = run_with(grad_fn, params, op, H, T, x, y)
+        final[name] = hist.loss[-1]
+    base = final["vanilla"]
+    for name, loss in final.items():
+        assert loss < base * 1.6 + 0.35, (name, loss, base)
+
+
+def test_qsparse_saves_bits_vs_baselines(convex_setup):
+    """The paper's headline: Qsparse-local-SGD needs far fewer bits to a
+    target loss than TopK-SGD and orders less than vanilla SGD."""
+    x, y, cfg, params, grad_fn = convex_setup
+    T = 400
+    target = 1.1
+    bits = {}
+    for name, op, H in [
+        ("vanilla", Identity(), 1),
+        ("topk", TopK(k=0.02), 1),
+        ("qsparse_local", SignSparsifier(k=0.02, m=1), 4),
+    ]:
+        _, hist = run_with(grad_fn, params, op, H, T, x, y, target=target)
+        assert hist.bits_to_target is not None, (name, hist.loss)
+        bits[name] = hist.bits_to_target
+    assert bits["topk"] < bits["vanilla"] / 5
+    assert bits["qsparse_local"] < bits["topk"] / 2
+    assert bits["qsparse_local"] < bits["vanilla"] / 50
+
+
+def test_error_feedback_necessity(convex_setup):
+    """Without memory, aggressive TopK stalls; with the paper's error
+    compensation it keeps descending (Section 3.2)."""
+    x, y, cfg, params, grad_fn = convex_setup
+    T = 250
+    _, hist_ef = run_with(grad_fn, params, TopK(k=0.01), 1, T, x, y)
+
+    # plain sparsified SGD: compress the gradient, throw the residual away
+    lr = inverse_time(xi=60.0, a=100.0)
+    p = params
+    opk = TopK(k=0.01)
+    losses = []
+    for t, batch in enumerate(worker_batches(x, y, R, B, T, seed=0)):
+        batch = jax.tree_util.tree_map(jnp.asarray, batch)
+        gs, ls = [], []
+        for r in range(R):
+            sub = jax.tree_util.tree_map(lambda v: v[r], batch)
+            loss, g = grad_fn(p, sub)
+            cg, _ = opk(None, g["x"])
+            gs.append({"x": cg, "z": g["z"]})
+            ls.append(float(loss))
+        gmean = jax.tree_util.tree_map(lambda *v: sum(v) / len(v), *gs)
+        eta = float(lr(jnp.asarray(t)))
+        p = jax.tree_util.tree_map(lambda a, b: a - eta * b, p, gmean)
+        losses.append(np.mean(ls))
+    no_ef = float(np.mean(losses[-20:]))
+    with_ef = hist_ef.loss[-1]
+    assert with_ef < no_ef * 0.9, (with_ef, no_ef)
