@@ -1,5 +1,7 @@
 """Figure-1a/4a companion: per-operator compression quality, wire bits
-per round and compression-op throughput on a ResNet-50-sized tensor."""
+per round and compression-op throughput on a ResNet-50-sized tensor —
+plus the kernel-dispatch path (kernels/dispatch.py) vs the dense
+references on the same operators."""
 
 from __future__ import annotations
 
@@ -10,8 +12,20 @@ import jax.numpy as jnp
 
 from benchmarks.common import BenchRow
 from repro.core import operators as ops
+from repro.kernels import dispatch as dsp
 
-D = 1_000_000  # ~ one large layer
+D = 1_000_000   # ~ one large layer
+D_GLOBAL = 1 << 18  # single-kernel-row budget for the global operators
+
+
+def _time(fn, *args, n=5):
+    out = fn(*args)
+    jax.tree_util.tree_leaves(out)[0].block_until_ready()
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    jax.tree_util.tree_leaves(out)[0].block_until_ready()
+    return out, (time.time() - t0) / n * 1e6
 
 
 def run():
@@ -30,18 +44,37 @@ def run():
     ]
     for name, op in table:
         fn = jax.jit(lambda k, v, o=op: o(k, v))
-        out, bits = fn(jax.random.PRNGKey(1), x)
-        out.block_until_ready()
-        t0 = time.time()
-        n = 5
-        for i in range(n):
-            out, bits = fn(jax.random.PRNGKey(i), x)
-        out.block_until_ready()
-        us = (time.time() - t0) / n * 1e6
+        (out, bits), us = _time(fn, jax.random.PRNGKey(1), x)
         rel_err = float(jnp.sum((x - out) ** 2) / jnp.sum(x ** 2))
         ratio = float(bits) / (32 * D)
         rows.append(BenchRow(
             f"op/{name}", us,
             f"rel_err={rel_err:.4f};wire_ratio={ratio:.5f};"
             f"gamma={op.gamma(D):.5f}"))
+
+    # kernel-dispatch path vs reference on the dispatchable operators
+    # (interpret mode off-TPU: a correctness/rel-err companion there,
+    #  a speed comparison on real TPU backends)
+    xg = x[:D_GLOBAL]
+    dispatch_table = [
+        ("topk_1pct", ops.TopK(k=0.01), xg),
+        ("signtopk_1pct_m2", ops.SignSparsifier(k=0.01, m=2), xg),
+        ("row_topk", ops.RowTopK(k=0.01, row_len=8192), x),
+        ("row_signtopk", ops.RowSignTopK(k=0.01, row_len=8192), x),
+        ("qsgd_4bit", ops.QSGDQuantizer(s=15), xg),
+    ]
+    for name, op, data in dispatch_table:
+        d = int(data.size)
+        assert dsp.would_dispatch(op, data.shape,
+                                  cfg=dsp.DispatchConfig(mode="kernel")), name
+        for mode in ("kernel", "reference"):
+            cfg = dsp.DispatchConfig(mode=mode)
+            fn = jax.jit(lambda k, v, o=op, c=cfg: dsp.compress_leaf(
+                o, k, v, c)[:2])
+            (out, bits), us = _time(fn, jax.random.PRNGKey(1), data)
+            rel_err = float(jnp.sum((data - out) ** 2) / jnp.sum(data ** 2))
+            rows.append(BenchRow(
+                f"dispatch/{name}/{mode}", us,
+                f"rel_err={rel_err:.4f};"
+                f"wire_ratio={float(bits) / (32 * d):.5f}"))
     return rows

@@ -1,0 +1,76 @@
+"""jax version-compatibility shims (mesh context + shard_map).
+
+The repo targets the modern jax surface — ``jax.shard_map`` with
+``axis_names``/``check_vma`` and the ``jax.set_mesh`` context — while
+still running on jax 0.4.x, where those live in
+``jax.experimental.shard_map`` (``check_rep``/``auto``) and the legacy
+``Mesh`` context manager.  Import from here instead of from jax.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+#: modern jax surface (jax.shard_map & friends).  On 0.4.x partial-manual
+#: shard_map regions additionally cannot lower axis_index, all_gather or
+#: all_to_all (psum/pmean/psum_scatter are fine) — callers with such
+#: collectives must restructure when this is False.
+MODERN = hasattr(jax, "shard_map")
+
+if MODERN:
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma: bool = True):
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kw)
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma: bool = True):
+        manual = (frozenset(axis_names) if axis_names is not None
+                  else frozenset(mesh.axis_names))
+        auto = frozenset(mesh.axis_names) - manual
+        # 0.4.x replication checking does not understand auto axes
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs,
+                          check_rep=bool(check_vma) and not auto, auto=auto)
+
+
+def sharding_constraints_usable() -> bool:
+    """Can with_sharding_constraint be emitted *here*?  Modern jax: always.
+    0.4.x: not while tracing inside a shard_map/pmap body — a constraint
+    naming auto axes inside a partial-manual region crashes the SPMD
+    partitioner, so constraint helpers should no-op there (the pins are
+    perf hints, not correctness)."""
+    if MODERN:
+        return True
+    try:
+        return not jax.core.nonempty_axis_env_DO_NOT_USE()
+    except Exception:
+        return True
+
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+
+    def axis_size(name):
+        # constant-folds to the static axis size under shard_map
+        return jax.lax.psum(1, name)
+
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        with mesh:
+            yield mesh

@@ -1,8 +1,10 @@
 """Qsparse-local-SGD core: compression operators, error-feedback
-memory, sync/async engines, bit accounting, distributed production
+memory, the unified sync/async engine (core/engine.py) with its
+Algorithm-1/2 wrappers, bit accounting, distributed production
 engine."""
 
-from repro.core import bits, operators, schedule
+from repro.core import bits, engine, operators, schedule
+from repro.core.engine import EngineState
 from repro.core.operators import (
     CompressionOp,
     Identity,
@@ -22,6 +24,8 @@ from repro.core.operators import (
 
 __all__ = [
     "bits",
+    "engine",
+    "EngineState",
     "operators",
     "schedule",
     "CompressionOp",

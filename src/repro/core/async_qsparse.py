@@ -1,5 +1,10 @@
 """Qsparse-local-SGD with asynchronous updates (paper Algorithm 2).
 
+Thin wrapper over the unified engine (``core/engine.py``), which
+implements the per-worker sync mask natively — Algorithm 2 *is* the
+engine's general case, so this module only preserves the historical
+state/API names.
+
 Faithful to the paper's asynchrony model: all workers advance local
 iterates on a common global clock, but synchronize with the master at
 *per-worker* times I_T^{(r)} with gap(I_T^{(r)}) <= H.  The additional
@@ -20,13 +25,13 @@ Per step t (Algorithm 2 lines 4-20), with s_r = [t+1 in I_T^{(r)}]:
 
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.operators import compress_tree
-from repro.optim.transforms import GradientTransform, apply_updates
+from repro.core import engine
+from repro.kernels.dispatch import DispatchConfig
+from repro.optim.transforms import GradientTransform
 
 
 class AsyncQsparseState(NamedTuple):
@@ -41,23 +46,11 @@ class AsyncQsparseState(NamedTuple):
 
 
 def _replicate(tree, R: int):
-    return jax.tree_util.tree_map(
-        lambda x: jnp.broadcast_to(x[None], (R,) + x.shape), tree
-    )
+    return engine.replicate(tree, R)
 
 
 def init(params, inner_opt: GradientTransform, R: int) -> AsyncQsparseState:
-    local = _replicate(params, R)
-    return AsyncQsparseState(
-        master=params,
-        master_view=local,
-        local=local,
-        memory=jax.tree_util.tree_map(jnp.zeros_like, local),
-        inner=jax.vmap(inner_opt.init)(local),
-        step=jnp.zeros((), jnp.int32),
-        bits=jnp.zeros((), jnp.float32),
-        rounds=jnp.zeros((), jnp.int32),
-    )
+    return AsyncQsparseState(*engine.init(params, inner_opt, R))
 
 
 def make_step(
@@ -66,86 +59,29 @@ def make_step(
     operator,
     lr_schedule: Callable,
     R: int,
+    *,
+    dispatch: Optional[DispatchConfig] = None,
 ):
     """sync_flags: bool[R] — which workers hit a sync index at t+1.
 
-    Unlike the synchronous engine we cannot lax.cond the whole sync away
-    (different workers branch differently), so the update is computed
-    with per-worker masks; masked-out workers contribute zero to the
-    master psum and keep their state.  This is also exactly the shape the
-    production shard_map engine uses.
+    The engine computes the update with per-worker masks (masked-out
+    workers contribute zero to the master sum and keep their state) —
+    exactly the shape the production shard_map engine uses.  Steps
+    where no worker syncs skip the compression phase entirely.
     """
+    engine_step = engine.make_step(
+        grad_fn, inner_opt, operator, lr_schedule, R,
+        dispatch=dispatch, global_rounds=False,
+    )
 
     def step_fn(state: AsyncQsparseState, batch, sync_flags, key):
-        lr = lr_schedule(state.step)
-
-        def one(params, inner, data):
-            loss, grads = grad_fn(params, data)
-            updates, inner = inner_opt.update(grads, inner, params, lr)
-            return apply_updates(params, updates), inner, loss
-
-        half, inner, losses = jax.vmap(one)(state.local, state.inner, batch)
-
-        def worker_update(m_r, view_r, half_r, key_r, s_r):
-            delta = jax.tree_util.tree_map(
-                lambda m, x, h: m + x.astype(jnp.float32) - h.astype(jnp.float32),
-                m_r, view_r, half_r,
-            )
-            g, bits = compress_tree(operator, key_r, delta)
-            # masked: non-syncing workers transmit nothing
-            g = jax.tree_util.tree_map(
-                lambda gg: jnp.where(s_r, gg, jnp.zeros_like(gg)), g
-            )
-            new_m = jax.tree_util.tree_map(
-                lambda m, d, gg: jnp.where(s_r, d - gg, m), m_r, delta, g
-            )
-            bits = jnp.where(s_r, bits, 0.0)
-            return g, new_m, bits
-
-        keys = jax.random.split(key, R)
-        g_all, new_mem, bits_all = jax.vmap(worker_update)(
-            state.memory, state.master_view, half, keys, sync_flags
-        )
-        # master applies 1/R * sum over the syncing subset S
-        g_sum = jax.tree_util.tree_map(lambda g: jnp.sum(g, axis=0) / R, g_all)
-        new_master = jax.tree_util.tree_map(
-            lambda x, g: (x.astype(jnp.float32) - g).astype(x.dtype),
-            state.master, g_sum,
-        )
-        # only workers in S receive the broadcast
-        bcast = _replicate(new_master, R)
-
-        def select(s):  # per-leaf worker select on axis 0
-            def f(new, old):
-                shape = (R,) + (1,) * (new.ndim - 1)
-                return jnp.where(s.reshape(shape), new, old)
-            return f
-
-        sel = select(sync_flags)
-        new_view = jax.tree_util.tree_map(sel, bcast, state.master_view)
-        new_local = jax.tree_util.tree_map(sel, bcast, half)
-
-        new_state = AsyncQsparseState(
-            master=new_master,
-            master_view=new_view,
-            local=new_local,
-            memory=new_mem,
-            inner=inner,
-            step=state.step + 1,
-            bits=state.bits + jnp.sum(bits_all),
-            rounds=state.rounds + jnp.sum(sync_flags.astype(jnp.int32)),
-        )
-        return new_state, jnp.mean(losses)
+        new, loss = engine_step(
+            engine.EngineState(*state), batch, sync_flags, key)
+        return AsyncQsparseState(*new), loss
 
     return step_fn
 
 
 def run(state, step_fn, batches, sync_mask, key, jit: bool = True):
     """sync_mask: bool[T, R] from schedule.async_schedule."""
-    fn = jax.jit(step_fn) if jit else step_fn
-    losses = []
-    for t, batch in enumerate(batches):
-        key, sub = jax.random.split(key)
-        state, loss = fn(state, batch, jnp.asarray(sync_mask[t]), sub)
-        losses.append(float(loss))
-    return state, losses
+    return engine.run(state, step_fn, batches, sync_mask, key, jit=jit)

@@ -65,6 +65,22 @@ def bits_qsgd(d: int, s: int, nnz) -> jnp.ndarray:
     return jnp.asarray(32 + 32, jnp.float32) + jnp.asarray(nnz, jnp.float32) * per
 
 
+def bits_topk_counted(d: int, nnz, value_bits: int = 32) -> jnp.ndarray:
+    """Top_k wire cost from the *actual* survivor count (traced).
+
+    Identical to :func:`bits_topk` when nnz == k; the threshold-select
+    kernels report their true count, which can exceed k under ties.
+    """
+    per = _idx_bits(d) + value_bits
+    return jnp.asarray(32, jnp.float32) + jnp.asarray(nnz, jnp.float32) * per
+
+
+def bits_signtopk_counted(d: int, nnz) -> jnp.ndarray:
+    """SignTop_k wire cost from the actual survivor count (traced)."""
+    per = _idx_bits(d) + 1
+    return jnp.asarray(32, jnp.float32) + jnp.asarray(nnz, jnp.float32) * per
+
+
 def bits_qtopk(d: int, k: int, s: int, nnz) -> jnp.ndarray:
     """TopK then QSGD on the k survivors: indices for k, levels only for
     the quantizer's non-zeros (QSGD may zero some survivors)."""

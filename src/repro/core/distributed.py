@@ -42,6 +42,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import (MODERN, axis_size, shard_map,
+                          sharding_constraints_usable)
 from repro.core import bits as bitlib
 from repro.core.operators import resolve_k
 from repro.optim.transforms import GradientTransform, apply_updates
@@ -88,6 +90,12 @@ def axis_topk_compact(x: jnp.ndarray, k_frac: float, axis: int,
     Returns (idx [..., k] int32, sel [..., k] f32, wire_bits, moved_shape)
     where idx/sel live on the moved-to-last layout.  Shard-local by
     construction when ``axis`` is unsharded.
+
+    NOTE: the compact form needs explicit indices, hence ``lax.top_k``
+    — which 0.4.x XLA cannot partition inside a partial-manual region,
+    so the sparse-allgather aggregation that consumes this is
+    modern-jax only.  The dense path (:func:`axis_topk`) uses the
+    sort-free threshold select instead.
     """
     n = x.shape[axis]
     k = resolve_k(k_frac, n)
@@ -111,11 +119,37 @@ def _densify(idx, sel, moved_shape, axis):
     return jnp.moveaxis(out, -1, axis)
 
 
+def _threshold_axis_topk(x: jnp.ndarray, k_frac: float, axis: int,
+                         sign_bits: bool, select):
+    """Shared dense Top_k-along-axis plumbing: move ``axis`` last, shape
+    [rows, n], run ``select(rows2d, k, sign) -> (sel, mem, cnt)`` (the
+    Pallas kernel or its jnp oracle), move back, charge counted bits."""
+    n = x.shape[axis]
+    k = resolve_k(k_frac, n)
+    xm = jnp.moveaxis(x.astype(jnp.float32), axis, -1)
+    rows = xm.reshape(-1, n)
+    sel, _mem, cnt = select(rows, k, sign_bits)
+    out = jnp.moveaxis(sel.reshape(xm.shape), -1, axis)
+    nrows = rows.shape[0]
+    counted = (bitlib.bits_signtopk_counted if sign_bits
+               else bitlib.bits_topk_counted)
+    bits = (jnp.float32(32 * nrows) + counted(n, jnp.sum(cnt))
+            - jnp.float32(32))
+    return out, bits
+
+
 def axis_topk(x: jnp.ndarray, k_frac: float, axis: int,
               sign_bits: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Dense variant of ``axis_topk_compact`` (reference semantics)."""
-    idx, sel, bits, moved = axis_topk_compact(x, k_frac, axis, sign_bits)
-    return _densify(idx, sel, moved, axis), bits
+    """Dense Top_k along ``axis`` via the bisection *threshold select*
+    (kernels/ref.py; exact-k generically — DESIGN.md §3.1).
+
+    Sort- and scatter-free on purpose: ``lax.top_k`` hard-crashes the
+    0.4.x SPMD partitioner inside a partial-manual shard_map region,
+    and on TPU the threshold form is the fast path anyway (§3)."""
+    from repro.kernels.ref import topk_compress_ref
+    return _threshold_axis_topk(
+        x, k_frac, axis, sign_bits,
+        lambda rows, k, sign: topk_compress_ref(rows, k, sign=sign))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,12 +159,33 @@ class ShardCompressor:
     mode: 'topk' (full-precision survivors) | 'signtopk' (1-bit survivors)
           | 'none' (Identity — vanilla/local-SGD baselines)
     k_frac: survivor fraction along the chosen axis per leaf.
+    dispatch: kernel routing policy (see kernels/dispatch.py) — 'auto'
+          runs the fused Pallas Top_k kernel on TPU for lane-aligned
+          compression rows, 'kernel' forces it (interpret off-TPU),
+          'reference' keeps the pure lax.top_k path.  The compact wire
+          form (``compact``) always uses the reference path: the kernel
+          emits dense survivors, not (idx, sel) pairs.
     """
 
     mode: str = "topk"
     k_frac: float = 0.01
+    dispatch: str = "auto"
+
+    def _dispatch_cfg(self):
+        from repro.kernels.dispatch import DispatchConfig
+        return DispatchConfig(mode=self.dispatch)
+
+    def _kernel_leaf(self, g, ax):
+        """Fused-kernel variant of ``axis_topk`` (dense survivors)."""
+        from repro.kernels import dispatch as dsp
+        cfg = self._dispatch_cfg()
+        return _threshold_axis_topk(
+            g, self.k_frac, ax, self.mode == "signtopk",
+            lambda rows, k, sign: dsp.topk_rows(rows, k, sign=sign, cfg=cfg))
 
     def __call__(self, grads, param_specs):
+        from repro.kernels import dispatch as dsp
+        dcfg = self._dispatch_cfg()
         leaves, treedef = jax.tree_util.tree_flatten(grads)
         specs = self._leaf_specs(param_specs, len(leaves))
         outs, bit_terms = [], []
@@ -140,11 +195,18 @@ class ShardCompressor:
                 bit_terms.append(jnp.asarray(bitlib.bits_dense(g.size), jnp.float32))
                 continue
             ax = _pick_axis(g.shape, spec)
-            o, b = axis_topk(g, self.k_frac, ax, sign_bits=(self.mode == "signtopk"))
-            if spec is not None:
+            if dsp.rows_eligible(g.shape[ax], dcfg, leaf_size=g.size):
+                o, b = self._kernel_leaf(g, ax)
+            else:
+                o, b = axis_topk(g, self.k_frac, ax,
+                                 sign_bits=(self.mode == "signtopk"))
+            if spec is not None and sharding_constraints_usable():
                 # pin the densified update to the leaf's TP sharding: the
                 # top_k/scatter pair otherwise makes XLA re-shard (an
-                # all-gather per leaf — §Perf iteration 2 finding)
+                # all-gather per leaf — §Perf iteration 2 finding).  A
+                # constraint naming auto axes inside a partial-manual
+                # region crashes the 0.4.x SPMD partitioner, so the pin
+                # is modern-jax only (pure perf, not correctness).
                 entries = list(spec) + [None] * (g.ndim - len(tuple(spec)))
                 o = jax.lax.with_sharding_constraint(o, P(*entries))
             outs.append(o)
@@ -300,14 +362,16 @@ def make_dist_steps(
         return _expand(half), _expand(inner_new), loss
 
     # ---- sync step ------------------------------------------------------
-    def make_sync_body(z1):
+    def make_sync_body(z1, pregathered: bool = False):
       def sync_body(master, local, memory, inner, step, batch, key):
         lr = lr_schedule(step)
         half, inner_new, loss = _local(master, local, memory, inner, step, batch, lr)
         mem = _squeeze(memory)
         # zero1 masters are sharded on axis 0 over the worker axes:
-        # materialize the full master for the delta via all_gather.
-        full_master = _gather_master(master, z1)
+        # materialize the full master for the delta via all_gather —
+        # unless the caller already replicated it in the auto region
+        # (0.4.x cannot partition all_gather inside partial-manual).
+        full_master = master if pregathered else _gather_master(master, z1)
         delta = jax.tree_util.tree_map(
             lambda m, x, h: m + x.astype(jnp.float32) - h.astype(jnp.float32),
             mem, full_master, half,
@@ -344,7 +408,7 @@ def make_dist_steps(
     batch_spec = P(daxes)
 
     def _shmap(body, master_specs, out_specs):
-        return jax.shard_map(
+        return shard_map(
             body,
             mesh=mesh,
             in_specs=(
@@ -376,11 +440,21 @@ def make_dist_steps(
     def sync_step_dense(state: DistQsparseState, batch, key):
         z1 = _z1mask(state.master)
         mspecs = _master_in_specs(z1)
+        master_in = state.master
+        in_mspecs = mspecs
+        pregather = zero1 and not MODERN
+        if pregather:
+            # replicate the zero1 master in the auto region (XLA inserts
+            # the all-gather there); the body then skips its own gather
+            master_in = jax.tree_util.tree_map(
+                lambda x: jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P())), state.master)
+            in_mspecs = P()
         sync_mapped = _shmap(
-            make_sync_body(z1), mspecs,
+            make_sync_body(z1, pregather), in_mspecs,
             (mspecs, worker_specs, worker_specs, worker_specs, P(), P()))
         master, local, memory, inner_new, wire_bits, loss = sync_mapped(
-            state.master, state.local, state.memory, state.inner,
+            master_in, state.local, state.memory, state.inner,
             state.step, batch, key,
         )
         return (
@@ -450,7 +524,7 @@ def make_dist_steps(
         z1 = _z1mask(state.master)
         meta = _leaf_meta(state.master)
         n_arrays = sum(1 if m[0] == "dense" else 2 for m in meta)
-        mapped = jax.shard_map(
+        mapped = shard_map(
             make_sparse_sync_body(z1), mesh=mesh,
             in_specs=(_master_in_specs(z1), worker_specs, worker_specs,
                       worker_specs, P(), batch_spec, P()),
@@ -526,13 +600,15 @@ def make_dist_steps(
             master = _scatter_master(p, z1)
             return master, local, memory, inner
 
-        mapped = jax.shard_map(
+        mapped = shard_map(
             body, mesh=mesh, in_specs=(P(),),
             out_specs=(_master_in_specs(z1), worker_specs, worker_specs,
                        worker_specs),
             axis_names=manual, check_vma=True,
         )
-        master, local, memory, inner = mapped(params)
+        # eager shard_map with auto (non-manual) axes is unimplemented on
+        # older jax; under jit it lowers fine on every version
+        master, local, memory, inner = jax.jit(mapped)(params)
         return DistQsparseState(
             master=master, local=local, memory=memory, inner=inner,
             step=jnp.zeros((), jnp.int32),
@@ -566,11 +642,24 @@ def _allgather_axis(x, daxes, axis):
 
 def _shard_axis(x, daxes, axis):
     """Keep only this worker's slice along ``axis`` (inverse gather)."""
-    n = 1
-    idx = 0
+    if MODERN:
+        n = 1
+        idx = 0
+        for a in daxes:
+            size = axis_size(a)
+            idx = idx * size + jax.lax.axis_index(a)
+            n *= size
+        shard = x.shape[axis] // n
+        return jax.lax.dynamic_slice_in_dim(x, idx * shard, shard, axis=axis)
+    # 0.4.x partial-manual regions cannot lower axis_index (PartitionId
+    # is unsupported under SPMD).  The operand is replicated over the
+    # worker axes here, so psum_scatter per axis (summing `size`
+    # identical copies) then one division recovers this worker's slice.
+    # Exact for power-of-two axis sizes; otherwise the single division
+    # costs at most 1 ulp per element per axis.
+    g = x
     for a in daxes:
-        size = jax.lax.axis_size(a)
-        idx = idx * size + jax.lax.axis_index(a)
-        n *= size
-    shard = x.shape[axis] // n
-    return jax.lax.dynamic_slice_in_dim(x, idx * shard, shard, axis=axis)
+        size = axis_size(a)
+        g = jax.lax.psum_scatter(
+            g, a, scatter_dimension=axis, tiled=True) / size
+    return g

@@ -1,0 +1,237 @@
+"""Unified Qsparse-local-SGD engine (paper Algorithms 1 and 2 as one
+state machine; see DESIGN.md §1).
+
+The paper presents a synchronous algorithm (one shared sync index set
+I_T) and an asynchronous one (per-worker I_T^{(r)}); the repo used to
+implement them twice.  This engine keeps ONE step function over the
+generalized per-worker sync mask
+
+    s ∈ {0,1}^R,   s_r = [t+1 ∈ I_T^{(r)}],
+
+with per-worker master *views* x_t^{(r)} (the last broadcast worker r
+received).  Algorithm 1 is the special case where all s_r agree — then
+every view equals the true master at all times and the masked update
+reduces exactly to the shared-I_T math.  Algorithm 2 is the general
+case.  Per step t:
+
+  x̂_{t+1/2}^{(r)} = x̂_t^{(r)} - eta_t d_t^{(r)}            (local phase)
+  r with s_r = 0:  keep (x^{(r)}, m^{(r)});  x̂_{t+1}^{(r)} = x̂_{t+1/2}^{(r)}
+  r with s_r = 1:  g_t^{(r)} = QComp_k(m_t^{(r)} + x_t^{(r)} - x̂_{t+1/2}^{(r)})
+                   m_{t+1}^{(r)} = m_t^{(r)} + x_t^{(r)} - x̂_{t+1/2}^{(r)} - g
+  master:          x̄_{t+1} = x̄_t - (1/R) Σ_{r: s_r} g_t^{(r)}
+  r with s_r = 1:  x_{t+1}^{(r)} = x̂_{t+1}^{(r)} = x̄_{t+1}       (broadcast)
+
+Compression routes through ``kernels.dispatch``: eligible (operator,
+leaf) pairs execute the fused Pallas kernels, everything else the dense
+reference operators — same outputs, same wire-bit ledger.
+
+When no worker syncs (any(s) == False) the whole sync phase is skipped
+via ``lax.cond``, so pure-local steps never pay for compression.
+
+``core/qsparse.py`` and ``core/async_qsparse.py`` are thin wrappers
+over this engine preserving their historical APIs; ``train/trainer.py``
+drives it directly with a [T, R] mask.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.operators import CompressionOp
+from repro.kernels import dispatch as dsp
+from repro.optim.transforms import GradientTransform, apply_updates
+
+
+class EngineState(NamedTuple):
+    master: Any           # x̄_t — the true master parameters
+    master_view: Any      # x_t^{(r)}: last master copy worker r received [R]
+    local: Any            # x̂_t^{(r)} [R]
+    memory: Any           # m_t^{(r)} error-feedback memory [R]
+    inner: Any            # inner-optimizer state per worker [R]
+    step: jnp.ndarray     # int32 global clock t
+    bits: jnp.ndarray     # float32 cumulative wire bits (sum over workers)
+    rounds: jnp.ndarray   # int32 — see ``global_rounds`` in make_step
+
+
+def replicate(tree, R: int):
+    """Broadcast a pytree to a leading worker axis of size R."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (R,) + x.shape), tree
+    )
+
+
+def init(params, inner_opt: GradientTransform, R: int) -> EngineState:
+    local = replicate(params, R)
+    return EngineState(
+        master=params,
+        master_view=local,
+        local=local,
+        memory=jax.tree_util.tree_map(jnp.zeros_like, local),
+        inner=jax.vmap(inner_opt.init)(local),
+        step=jnp.zeros((), jnp.int32),
+        bits=jnp.zeros((), jnp.float32),
+        rounds=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_step(
+    grad_fn: Callable,               # (params, batch) -> (loss, grads)
+    inner_opt: GradientTransform,
+    operator: CompressionOp | Any,   # op or tree-of-ops (Corollary 1)
+    lr_schedule: Callable,
+    R: int,
+    *,
+    dispatch: Optional[dsp.DispatchConfig] = None,
+    global_rounds: bool = False,
+):
+    """Build the jittable unified step.
+
+    grad_fn must accept per-worker params and a per-worker batch and
+    return (loss, grads) — it is vmapped over the R axis.
+
+    The built step takes ``(state, batch, sync_mask, key)`` where
+    ``sync_mask`` is bool[R] (a scalar broadcasts): which workers hit a
+    sync index at t+1.
+
+    global_rounds: what ``state.rounds`` counts — True: master rounds
+    (+1 whenever any worker syncs; Algorithm-1 bookkeeping), False:
+    worker sync events (+Σ s_r; Algorithm-2 bookkeeping).
+    """
+
+    def local_phase(state: EngineState, batch):
+        lr = lr_schedule(state.step)
+
+        def one(params, inner, data):
+            loss, grads = grad_fn(params, data)
+            updates, inner = inner_opt.update(grads, inner, params, lr)
+            return apply_updates(params, updates), inner, loss
+
+        return jax.vmap(one)(state.local, state.inner, batch)
+
+    def sync_phase(state: EngineState, half, inner, sync_mask, key):
+        """Masked compress-and-aggregate (Algorithm 1/2 lines 8-20)."""
+
+        def worker_update(m_r, view_r, half_r, key_r, s_r):
+            delta = jax.tree_util.tree_map(
+                lambda m, x, h: m + x.astype(jnp.float32)
+                - h.astype(jnp.float32),
+                m_r, view_r, half_r,
+            )
+            g, bits = dsp.compress_tree(operator, key_r, delta, dispatch)
+            # masked: non-syncing workers transmit nothing and keep state
+            g = jax.tree_util.tree_map(
+                lambda gg: jnp.where(s_r, gg, jnp.zeros_like(gg)), g
+            )
+            new_m = jax.tree_util.tree_map(
+                lambda m, d, gg: jnp.where(s_r, d - gg, m), m_r, delta, g
+            )
+            return g, new_m, jnp.where(s_r, bits, 0.0)
+
+        keys = jax.random.split(key, R)
+        g_all, new_mem, bits_all = jax.vmap(worker_update)(
+            state.memory, state.master_view, half, keys, sync_mask
+        )
+        # master applies (1/R) Σ over the syncing subset S
+        g_sum = jax.tree_util.tree_map(
+            lambda g: jnp.sum(g, axis=0) / R, g_all
+        )
+        new_master = jax.tree_util.tree_map(
+            lambda x, g: (x.astype(jnp.float32) - g).astype(x.dtype),
+            state.master, g_sum,
+        )
+        # only workers in S receive the broadcast
+        bcast = replicate(new_master, R)
+
+        def sel(new, old):
+            shape = (R,) + (1,) * (new.ndim - 1)
+            return jnp.where(sync_mask.reshape(shape), new, old)
+
+        new_view = jax.tree_util.tree_map(sel, bcast, state.master_view)
+        new_local = jax.tree_util.tree_map(sel, bcast, half)
+        inc = (jnp.any(sync_mask).astype(jnp.int32) if global_rounds
+               else jnp.sum(sync_mask.astype(jnp.int32)))
+        return EngineState(
+            master=new_master,
+            master_view=new_view,
+            local=new_local,
+            memory=new_mem,
+            inner=inner,
+            step=state.step + 1,
+            bits=state.bits + jnp.sum(bits_all),
+            rounds=state.rounds + inc,
+        )
+
+    def step_fn(state: EngineState, batch, sync_mask, key):
+        sync_mask = jnp.broadcast_to(
+            jnp.asarray(sync_mask, bool).reshape(-1), (R,)
+        )
+        half, inner, losses = local_phase(state, batch)
+
+        def no_sync(_):
+            return EngineState(
+                master=state.master,
+                master_view=state.master_view,
+                local=half,
+                memory=state.memory,
+                inner=inner,
+                step=state.step + 1,
+                bits=state.bits,
+                rounds=state.rounds,
+            )
+
+        new_state = jax.lax.cond(
+            jnp.any(sync_mask),
+            lambda _: sync_phase(state, half, inner, sync_mask, key),
+            no_sync,
+            operand=None,
+        )
+        return new_state, jnp.mean(losses)
+
+    return step_fn
+
+
+def run(
+    state: EngineState,
+    step_fn,
+    batches,                      # iterable of [R, ...] batches
+    sync_mask,                    # bool[T] (all-agree) or bool[T, R]
+    key,
+    jit: bool = True,
+) -> tuple[EngineState, list[float]]:
+    """Drive T steps (host loop; step_fn jitted once)."""
+    fn = jax.jit(step_fn) if jit else step_fn
+    losses = []
+    for t, batch in enumerate(batches):
+        key, sub = jax.random.split(key)
+        state, loss = fn(state, batch, jnp.asarray(sync_mask[t]), sub)
+        losses.append(float(loss))
+    return state, losses
+
+
+# ---------------------------------------------------------------------------
+# diagnostics (Lemma 4/5/7/8 empirical quantities)
+# ---------------------------------------------------------------------------
+
+
+def memory_sq_norms(state) -> jnp.ndarray:
+    """||m_t^{(r)}||_2^2 per worker (flattened over the whole pytree)."""
+    leaves = jax.tree_util.tree_leaves(state.memory)
+    return sum(
+        jnp.sum(jnp.square(l.astype(jnp.float32)),
+                axis=tuple(range(1, l.ndim)))
+        for l in leaves
+    )
+
+
+def local_deviation_sq(state) -> jnp.ndarray:
+    """(1/R) Σ_r ||x̄ - x̂^{(r)}||^2 (Lemma 7/8 quantity)."""
+    def dev(leaf):
+        mean = jnp.mean(leaf.astype(jnp.float32), axis=0, keepdims=True)
+        return jnp.sum(jnp.square(leaf.astype(jnp.float32) - mean))
+
+    total = sum(dev(l) for l in jax.tree_util.tree_leaves(state.local))
+    R = jax.tree_util.tree_leaves(state.local)[0].shape[0]
+    return total / R

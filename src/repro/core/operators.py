@@ -435,6 +435,22 @@ class RowSignTopK(CompressionOp):
 # ---------------------------------------------------------------------------
 
 
+def ops_for_leaves(op_tree, n_leaves: int) -> list:
+    """Resolve a single op (broadcast) or a pytree-prefix of ops to one
+    operator per gradient leaf (shared by the reference and the
+    kernel-dispatch compression paths)."""
+    if isinstance(op_tree, CompressionOp):
+        return [op_tree] * n_leaves
+    ops = jax.tree_util.tree_leaves(
+        op_tree, is_leaf=lambda z: isinstance(z, CompressionOp)
+    )
+    if len(ops) != n_leaves:
+        raise ValueError(
+            f"operator tree has {len(ops)} leaves, grads have {n_leaves}"
+        )
+    return ops
+
+
 def compress_tree(op_tree, key: Optional[Array], grads):
     """Apply a (tree of) compression operator(s) leafwise.
 
@@ -444,16 +460,7 @@ def compress_tree(op_tree, key: Optional[Array], grads):
     operator with gamma = min_i gamma_i.
     """
     leaves, treedef = jax.tree_util.tree_flatten(grads)
-    if isinstance(op_tree, CompressionOp):
-        ops = [op_tree] * len(leaves)
-    else:
-        ops = jax.tree_util.tree_leaves(
-            op_tree, is_leaf=lambda z: isinstance(z, CompressionOp)
-        )
-        if len(ops) != len(leaves):
-            raise ValueError(
-                f"operator tree has {len(ops)} leaves, grads have {len(leaves)}"
-            )
+    ops = ops_for_leaves(op_tree, len(leaves))
     if key is not None:
         keys = jax.random.split(key, len(leaves))
     else:

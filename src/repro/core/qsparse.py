@@ -1,9 +1,11 @@
-"""Qsparse-local-SGD, synchronous (paper Algorithm 1) — reference engine.
+"""Qsparse-local-SGD, synchronous (paper Algorithm 1) — reference API.
 
-This engine is *structurally faithful* to Algorithm 1: R workers are an
-explicit leading axis (vmapped), each holding its own local parameters
-``x̂_t^{(r)}``, error memory ``m_t^{(r)}`` and inner-optimizer state.
-The master parameter ``x_t`` is a single shared pytree.
+Thin wrapper over the unified engine (``core/engine.py``): Algorithm 1
+is the engine's special case where every worker shares one sync index
+set I_T, i.e. the per-worker sync mask is ``s_r = sync`` for all r and
+every worker's master view equals the true master at all times.  All
+sync-phase math lives in the engine; this module only adapts the
+historical state/API shape:
 
 Per step t (Algorithm 1 lines 4-20):
 
@@ -27,7 +29,7 @@ The same engine doubles as every baseline in the paper:
   * EF-QSGD  [WHHZ18]:        operator=QSGDQuantizer, H=1
   * QTopK / SignTopK (+ local): composed operators, any H.
 
-This engine runs on a single device (tests, benchmarks, examples) or
+This wrapper runs on a single device (tests, benchmarks, examples) or
 under pjit with the worker axis sharded.  The production multi-pod
 engine with the identical math lives in ``core/distributed.py``.
 """
@@ -36,11 +38,12 @@ from __future__ import annotations
 
 from typing import Any, Callable, NamedTuple, Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.operators import CompressionOp, compress_tree
-from repro.optim.transforms import GradientTransform, apply_updates
+from repro.core import engine
+from repro.core.operators import CompressionOp
+from repro.kernels.dispatch import DispatchConfig
+from repro.optim.transforms import GradientTransform
 
 
 class QsparseState(NamedTuple):
@@ -54,24 +57,29 @@ class QsparseState(NamedTuple):
 
 
 def _replicate(tree, R: int):
-    return jax.tree_util.tree_map(
-        lambda x: jnp.broadcast_to(x[None], (R,) + x.shape), tree
+    return engine.replicate(tree, R)
+
+
+def _from_engine(e: engine.EngineState) -> QsparseState:
+    return QsparseState(
+        master=e.master, local=e.local, memory=e.memory, inner=e.inner,
+        step=e.step, bits=e.bits, rounds=e.rounds,
+    )
+
+
+def _to_engine(state: QsparseState, R: int) -> engine.EngineState:
+    # all-agree masks keep every view identical to the master, so the
+    # view axis is reconstructed as a (free) broadcast
+    return engine.EngineState(
+        master=state.master,
+        master_view=_replicate(state.master, R),
+        local=state.local, memory=state.memory, inner=state.inner,
+        step=state.step, bits=state.bits, rounds=state.rounds,
     )
 
 
 def init(params, inner_opt: GradientTransform, R: int) -> QsparseState:
-    local = _replicate(params, R)
-    memory = jax.tree_util.tree_map(jnp.zeros_like, local)
-    inner = jax.vmap(inner_opt.init)(local)
-    return QsparseState(
-        master=params,
-        local=local,
-        memory=memory,
-        inner=inner,
-        step=jnp.zeros((), jnp.int32),
-        bits=jnp.zeros((), jnp.float32),
-        rounds=jnp.zeros((), jnp.int32),
-    )
+    return _from_engine(engine.init(params, inner_opt, R))
 
 
 def make_step(
@@ -80,73 +88,24 @@ def make_step(
     operator: CompressionOp | Any,  # op or tree-of-ops (Corollary 1)
     lr_schedule: Callable,
     R: int,
+    *,
+    dispatch: Optional[DispatchConfig] = None,
 ):
-    """Build the jittable Algorithm-1 step.
+    """Build the jittable Algorithm-1 step (engine with an all-equal mask).
 
     grad_fn must accept per-worker params and a per-worker batch and
     return (loss, grads) — it is vmapped over the R axis.
     ``sync`` is a traced bool: whether t+1 ∈ I_T.
     """
-
-    def local_phase(state: QsparseState, batch):
-        lr = lr_schedule(state.step)
-
-        def one(params, inner, data):
-            loss, grads = grad_fn(params, data)
-            updates, inner = inner_opt.update(grads, inner, params, lr)
-            return apply_updates(params, updates), inner, loss
-
-        half, inner, losses = jax.vmap(one)(state.local, state.inner, batch)
-        return half, inner, losses
+    engine_step = engine.make_step(
+        grad_fn, inner_opt, operator, lr_schedule, R,
+        dispatch=dispatch, global_rounds=True,
+    )
 
     def step_fn(state: QsparseState, batch, sync, key):
-        half, inner, losses = local_phase(state, batch)
-
-        def no_sync(_):
-            return QsparseState(
-                master=state.master,
-                local=half,
-                memory=state.memory,
-                inner=inner,
-                step=state.step + 1,
-                bits=state.bits,
-                rounds=state.rounds,
-            )
-
-        def do_sync(_):
-            def worker_update(m_r, half_r, key_r):
-                delta = jax.tree_util.tree_map(
-                    lambda m, x, h: m + x.astype(jnp.float32) - h.astype(jnp.float32),
-                    m_r, state.master, half_r,
-                )
-                g, bits = compress_tree(operator, key_r, delta)
-                new_m = jax.tree_util.tree_map(lambda d, gg: d - gg, delta, g)
-                return g, new_m, bits
-
-            keys = jax.random.split(key, R)
-            g_all, new_mem, bits_all = jax.vmap(worker_update)(
-                state.memory, half, keys
-            )
-            g_mean = jax.tree_util.tree_map(
-                lambda g: jnp.mean(g, axis=0), g_all
-            )
-            new_master = jax.tree_util.tree_map(
-                lambda x, g: (x.astype(jnp.float32) - g).astype(x.dtype),
-                state.master, g_mean,
-            )
-            new_local = _replicate(new_master, R)
-            return QsparseState(
-                master=new_master,
-                local=new_local,
-                memory=new_mem,
-                inner=inner,
-                step=state.step + 1,
-                bits=state.bits + jnp.sum(bits_all),
-                rounds=state.rounds + 1,
-            )
-
-        new_state = jax.lax.cond(sync, do_sync, no_sync, operand=None)
-        return new_state, jnp.mean(losses)
+        mask = jnp.broadcast_to(jnp.asarray(sync, bool), (R,))
+        new, loss = engine_step(_to_engine(state, R), batch, mask, key)
+        return _from_engine(new), loss
 
     return step_fn
 
@@ -160,13 +119,7 @@ def run(
     jit: bool = True,
 ) -> tuple[QsparseState, list[float]]:
     """Drive T steps (host loop; step_fn jitted once)."""
-    fn = jax.jit(step_fn) if jit else step_fn
-    losses = []
-    for t, batch in enumerate(batches):
-        key, sub = jax.random.split(key)
-        state, loss = fn(state, batch, bool(sync_mask[t]), sub)
-        losses.append(float(loss))
-    return state, losses
+    return engine.run(state, step_fn, batches, sync_mask, key, jit=jit)
 
 
 # ---------------------------------------------------------------------------
@@ -176,20 +129,9 @@ def run(
 
 def memory_sq_norms(state: QsparseState) -> jnp.ndarray:
     """||m_t^{(r)}||_2^2 per worker (flattened over the whole pytree)."""
-    leaves = jax.tree_util.tree_leaves(state.memory)
-    per_worker = sum(
-        jnp.sum(jnp.square(l.astype(jnp.float32)), axis=tuple(range(1, l.ndim)))
-        for l in leaves
-    )
-    return per_worker
+    return engine.memory_sq_norms(state)
 
 
 def local_deviation_sq(state: QsparseState) -> jnp.ndarray:
     """(1/R) sum_r ||x̄ - x̂^{(r)}||^2 (Lemma 7/8 quantity)."""
-    def dev(leaf):
-        mean = jnp.mean(leaf.astype(jnp.float32), axis=0, keepdims=True)
-        return jnp.sum(jnp.square(leaf.astype(jnp.float32) - mean))
-
-    total = sum(dev(l) for l in jax.tree_util.tree_leaves(state.local))
-    R = jax.tree_util.tree_leaves(state.local)[0].shape[0]
-    return total / R
+    return engine.local_deviation_sq(state)

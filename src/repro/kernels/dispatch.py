@@ -1,0 +1,368 @@
+"""Operator → Pallas-kernel dispatch for the unified Qsparse engine.
+
+The engine (core/engine.py) compresses the error-compensated
+accumulator ``m + x - x̂`` once per sync round; on production shapes
+that is the per-round hot spot.  This module maps ``CompressionOp``
+instances to the fused Pallas kernels when shape/dtype/platform allow,
+and falls back *transparently* to the dense reference operators in
+``core/operators.py`` otherwise — same dense output, same wire-bit
+accounting, so callers never see which path ran (except through
+:func:`would_dispatch`, used by tests and benchmarks).
+
+Dispatch rules (see DESIGN.md §3.2):
+
+  ========================  =======================================
+  operator                  kernel
+  ========================  =======================================
+  ``TopK``                  ``topk_compress`` on a single padded row
+  ``RowTopK``               ``topk_compress``, one row per block-row
+  ``SignSparsifier`` (top,  ``topk_compress(sign=True)`` single row
+  m=2)
+  ``RowSignTopK`` (m=2)     ``topk_compress(sign=True)`` per row
+  ``QSGDQuantizer``         ``qsgd`` single bucket, external uniforms
+  ========================  =======================================
+
+Everything else (RandK, Sign, k-level, the composed quantized
+sparsifiers, SignTopK with the L1 scale) runs the reference operator.
+
+Eligibility (``mode="auto"``): the backend is TPU (off-TPU the kernels
+only exist in interpret mode, which is for validation, not speed), the
+leaf has at least ``min_size`` elements, rows are lane-aligned (128)
+and a row fits the VMEM budget (``max_row``).  ``mode="kernel"``
+forces the kernel path (interpret off-TPU) for parity tests and
+benchmarks; ``mode="reference"`` disables dispatch entirely.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bits as bitlib
+from repro.core.operators import (
+    CompressionOp,
+    QSGDQuantizer,
+    RowSignTopK,
+    RowTopK,
+    SignSparsifier,
+    TopK,
+    ops_for_leaves,
+    resolve_k,
+)
+from repro.kernels import qsgd as _qsgd
+from repro.kernels import topk_compress as _topk
+
+LANES = 128  # TPU vector lane width: kernel rows are padded to this
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchConfig:
+    """Where and when compression runs through the Pallas kernels.
+
+    mode: "auto"      — kernels on TPU, references elsewhere (default)
+          "kernel"    — force the kernel path (interpret mode off-TPU);
+                        bypasses min_size but not structural limits
+          "reference" — never dispatch (pure core/operators.py)
+    min_size: smallest leaf (elements) worth a kernel launch in "auto"
+    max_row:  longest kernel row (elements); bounds VMEM residency —
+              3 f32 blocks of (block_rows, max_row) must fit in ~16 MB
+    block_rows: grid block height handed to the kernels
+    interpret: None — auto (interpret off-TPU); bool to force
+    """
+
+    mode: str = "auto"
+    min_size: int = 1 << 16
+    max_row: int = 1 << 19
+    block_rows: int = 8
+    interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.mode not in ("auto", "kernel", "reference"):
+            raise ValueError(f"unknown dispatch mode {self.mode!r}")
+
+    def kernels_enabled(self) -> bool:
+        if self.mode == "reference":
+            return False
+        if self.mode == "kernel":
+            return True
+        return jax.default_backend() == "tpu"
+
+    def _interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+
+DEFAULT = DispatchConfig()
+
+
+def _resolve(cfg: Optional[DispatchConfig]) -> DispatchConfig:
+    return cfg if cfg is not None else DEFAULT
+
+
+# ---------------------------------------------------------------------------
+# shape plumbing
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(flat: jnp.ndarray, multiple: int) -> jnp.ndarray:
+    pad = (-flat.shape[0]) % multiple
+    return jnp.pad(flat, (0, pad)) if pad else flat
+
+
+def _as_single_row(x: jnp.ndarray) -> jnp.ndarray:
+    """Flatten + zero-pad to a lane-aligned [1, n] row.  Zero padding is
+    select-safe: |0| never beats a real survivor, and a zero survivor
+    contributes zero to the dense output either way."""
+    flat = _pad_to(x.reshape(-1).astype(jnp.float32), LANES)
+    return flat[None, :]
+
+
+def _as_rows(x: jnp.ndarray, row_len: int) -> jnp.ndarray:
+    flat = _pad_to(x.reshape(-1).astype(jnp.float32), row_len)
+    return flat.reshape(-1, row_len)
+
+
+def _restore(out2d: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    return out2d.reshape(-1)[: x.size].reshape(x.shape).astype(x.dtype)
+
+
+def _padded_len(d: int, multiple: int) -> int:
+    return d + ((-d) % multiple)
+
+
+# ---------------------------------------------------------------------------
+# kernel rules
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelRule:
+    """One operator-family → kernel mapping."""
+
+    name: str
+    matches: Callable[[CompressionOp], bool]
+    eligible: Callable[[CompressionOp, tuple, DispatchConfig], bool]
+    run: Callable  # (op, key, x, cfg) -> (dense_out, wire_bits)
+
+
+def _size(shape: tuple) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+def _global_row_ok(shape, cfg) -> bool:
+    return _padded_len(_size(shape), LANES) <= cfg.max_row
+
+
+def _row_len_of(op, shape) -> int:
+    return min(op.row_len, _size(shape))
+
+
+def _rows_ok(op, shape, cfg) -> bool:
+    row = _row_len_of(op, shape)
+    return row % LANES == 0 and row <= cfg.max_row
+
+
+def _run_topk_global(op: TopK, key, x, cfg):
+    d = x.size
+    k = resolve_k(op.k, d)
+    sel, _mem, cnt = _topk.topk_compress(
+        _as_single_row(x), k, block_rows=cfg.block_rows,
+        interpret=cfg._interpret())
+    bits = bitlib.bits_topk_counted(d, jnp.sum(cnt), op.value_bits)
+    return _restore(sel, x), bits
+
+
+def _run_signtopk_global(op: SignSparsifier, key, x, cfg):
+    d = x.size
+    k = resolve_k(op.k, d)
+    sel, _mem, cnt = _topk.topk_compress(
+        _as_single_row(x), k, sign=True, block_rows=cfg.block_rows,
+        interpret=cfg._interpret())
+    bits = bitlib.bits_signtopk_counted(d, jnp.sum(cnt))
+    return _restore(sel, x), bits
+
+
+def _run_row_topk(op: RowTopK, key, x, cfg):
+    d = x.size
+    row = _row_len_of(op, x.shape)
+    k = resolve_k(op.k, row)
+    acc = _as_rows(x, row)
+    sel, _mem, cnt = _topk.topk_compress(
+        acc, k, block_rows=cfg.block_rows, interpret=cfg._interpret())
+    nrows = acc.shape[0]
+    bits = (jnp.float32(32 * nrows)
+            + bitlib.bits_topk_counted(row, jnp.sum(cnt), op.value_bits)
+            - jnp.float32(32))
+    return _restore(sel, x), bits
+
+
+def _run_row_signtopk(op: RowSignTopK, key, x, cfg):
+    d = x.size
+    row = _row_len_of(op, x.shape)
+    k = resolve_k(op.k, row)
+    acc = _as_rows(x, row)
+    sel, _mem, cnt = _topk.topk_compress(
+        acc, k, sign=True, block_rows=cfg.block_rows,
+        interpret=cfg._interpret())
+    nrows = acc.shape[0]
+    bits = (jnp.float32(32 * nrows)
+            + bitlib.bits_signtopk_counted(row, jnp.sum(cnt))
+            - jnp.float32(32))
+    return _restore(sel, x), bits
+
+
+def _run_qsgd(op: QSGDQuantizer, key, x, cfg):
+    d = x.size
+    flat = x.reshape(-1).astype(jnp.float32)
+    # uniforms drawn exactly like the reference operator (same key, same
+    # flat shape) keep the stochastic rounding bit-identical
+    u = jax.random.uniform(key, flat.shape)
+    out = _qsgd.qsgd_quantize(
+        _pad_to(flat, LANES)[None, :], _pad_to(u, LANES)[None, :], op.s,
+        block_rows=cfg.block_rows, interpret=cfg._interpret())
+    out = _restore(out, x)
+    nz = jnp.sum(out != 0.0)
+    return out, bitlib.bits_qsgd(d, op.s, nz)
+
+
+RULES: tuple[KernelRule, ...] = (
+    KernelRule(
+        "topk_global",
+        lambda op: type(op) is TopK,
+        lambda op, shape, cfg: _global_row_ok(shape, cfg),
+        _run_topk_global,
+    ),
+    KernelRule(
+        "row_topk",
+        lambda op: type(op) is RowTopK,
+        lambda op, shape, cfg: _rows_ok(op, shape, cfg),
+        _run_row_topk,
+    ),
+    KernelRule(
+        "signtopk_global",
+        lambda op: (type(op) is SignSparsifier and op.sparsifier == "top"
+                    and op.m == 2),
+        lambda op, shape, cfg: _global_row_ok(shape, cfg),
+        _run_signtopk_global,
+    ),
+    KernelRule(
+        "row_signtopk",
+        lambda op: type(op) is RowSignTopK and op.m == 2,
+        lambda op, shape, cfg: _rows_ok(op, shape, cfg),
+        _run_row_signtopk,
+    ),
+    KernelRule(
+        "qsgd_global",
+        lambda op: type(op) is QSGDQuantizer,
+        lambda op, shape, cfg: _global_row_ok(shape, cfg),
+        _run_qsgd,
+    ),
+)
+
+
+def select_rule(op: CompressionOp, shape: tuple,
+                dtype=jnp.float32,
+                cfg: Optional[DispatchConfig] = None) -> Optional[KernelRule]:
+    """The kernel rule that would serve this (op, leaf), or None."""
+    cfg = _resolve(cfg)
+    if not cfg.kernels_enabled():
+        return None
+    if not jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        return None
+    if cfg.mode == "auto" and _size(shape) < cfg.min_size:
+        return None
+    for rule in RULES:
+        if rule.matches(op) and rule.eligible(op, shape, cfg):
+            return rule
+    return None
+
+
+def would_dispatch(op: CompressionOp, shape: tuple, dtype=jnp.float32,
+                   cfg: Optional[DispatchConfig] = None) -> bool:
+    """Introspection probe: True iff compress_leaf would use a kernel."""
+    return select_rule(op, shape, dtype, cfg) is not None
+
+
+# ---------------------------------------------------------------------------
+# raw row-kernel entry (shard-local compressors in core/distributed.py)
+# ---------------------------------------------------------------------------
+
+
+def rows_eligible(row_len: int, cfg: Optional[DispatchConfig] = None,
+                  leaf_size: Optional[int] = None) -> bool:
+    """Can [rows, row_len] blocks go through the Top_k kernel?
+
+    Mirrors select_rule's auto-mode policy: pass ``leaf_size`` so tiny
+    leaves (below min_size) stay on the reference path instead of
+    paying a kernel launch; mode="kernel" bypasses the floor.
+    """
+    cfg = _resolve(cfg)
+    if not (cfg.kernels_enabled() and row_len % LANES == 0
+            and row_len <= cfg.max_row):
+        return False
+    if (cfg.mode == "auto" and leaf_size is not None
+            and leaf_size < cfg.min_size):
+        return False
+    return True
+
+
+def topk_rows(rows: jnp.ndarray, k: int, *, sign: bool = False,
+              cfg: Optional[DispatchConfig] = None):
+    """Kernel Top_k/SignTop_k over pre-shaped [rows, n] blocks.
+
+    Returns (selected, new_memory, count_per_row) — the fused kernel
+    outputs.  Callers are responsible for :func:`rows_eligible`.
+    """
+    cfg = _resolve(cfg)
+    return _topk.topk_compress(
+        rows, k, sign=sign, block_rows=cfg.block_rows,
+        interpret=cfg._interpret())
+
+
+# ---------------------------------------------------------------------------
+# public compression entry points (engine-facing)
+# ---------------------------------------------------------------------------
+
+
+def compress_leaf(op: CompressionOp, key, x: jnp.ndarray,
+                  cfg: Optional[DispatchConfig] = None):
+    """Compress one leaf: (dense_out, wire_bits, used_kernel).
+
+    Kernel path when a rule matches and the leaf is eligible; otherwise
+    the reference operator — identical output contract either way.
+    """
+    cfg = _resolve(cfg)
+    rule = select_rule(op, x.shape, x.dtype, cfg)
+    if rule is None:
+        out, bits = op(key, x)
+        return out, jnp.asarray(bits, jnp.float32), False
+    out, bits = rule.run(op, key, x, cfg)
+    return out, jnp.asarray(bits, jnp.float32), True
+
+
+def compress_tree(op_tree, key, grads,
+                  cfg: Optional[DispatchConfig] = None):
+    """Kernel-aware counterpart of ``operators.compress_tree``: same
+    operator-broadcast, key-splitting and bits-summing semantics, with
+    each leaf routed through :func:`compress_leaf`."""
+    cfg = _resolve(cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    ops = ops_for_leaves(op_tree, len(leaves))
+    if key is not None:
+        keys = jax.random.split(key, len(leaves))
+    else:
+        keys = [None] * len(leaves)
+    outs, bit_terms = [], []
+    for op, k, g in zip(ops, keys, leaves):
+        o, b, _ = compress_leaf(op, k, g, cfg)
+        outs.append(o)
+        bit_terms.append(b)
+    total = jnp.sum(jnp.stack(bit_terms)) if bit_terms else jnp.float32(0)
+    return jax.tree_util.tree_unflatten(treedef, outs), total

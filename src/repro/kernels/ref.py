@@ -20,10 +20,17 @@ def topk_compress_ref(acc: jnp.ndarray, k: int, *, iters: int = 24,
                       sign: bool = False):
     """acc: [rows, n] error-compensated accumulator (m + x - x̂).
 
-    Per row: find (by bisection, ``iters`` rounds) the largest threshold
-    keeping >= k entries of |acc|; select those entries (full precision,
-    or sign * ||sel||_2/count when ``sign``); the fused error update is
+    Per row: bisect (``iters`` rounds) for the magnitude threshold of the
+    k-th largest entry of |acc|; select the survivors (full precision, or
+    sign * ||sel||_2/count when ``sign``); the fused error update is
     m' = acc - selected.
+
+    Selection is *exactly* k generically: the bisection invariant is
+    cnt(a >= lo) > k >= cnt(a >= hi), so the hi threshold keeps exactly
+    k entries once the interval is narrower than the k-th/(k+1)-th
+    magnitude gap.  Under ties or an exhausted iteration budget it falls
+    back to the lo threshold (>= k survivors, a strictly better
+    sparsifier; the error memory absorbs the difference either way).
 
     Returns (selected, new_memory, count_per_row).
     """
@@ -41,8 +48,11 @@ def topk_compress_ref(acc: jnp.ndarray, k: int, *, iters: int = 24,
         return lo, hi
 
     lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
-    thr = lo  # keeps >= k entries (conservative side)
-    mask = a >= thr
+    c_hi = jnp.sum(a >= hi, axis=1, keepdims=True)
+    thr = jnp.where(c_hi >= k, hi, lo)
+    # exact zeros are never survivors: an all-zero (or zero-padded) row
+    # must not count toward the wire-bits ledger
+    mask = (a >= thr) & (a > 0.0)
     cnt = jnp.sum(mask, axis=1)
     sel = jnp.where(mask, acc.astype(jnp.float32), 0.0)
     if sign:

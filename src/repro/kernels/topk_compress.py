@@ -40,7 +40,16 @@ def _kernel(acc_ref, sel_ref, mem_ref, cnt_ref, *, k: int, iters: int,
         return lo, hi
 
     lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
-    mask = a >= lo
+    # Exact-k selection: the bisection invariant is cnt(a >= lo) > k and
+    # cnt(a >= hi) <= k, so generically (distinct magnitudes, interval
+    # narrower than the k-th/k+1-th gap) the hi threshold keeps exactly k
+    # entries.  If ties or the iteration budget leave cnt(a >= hi) < k,
+    # fall back to lo, which keeps >= k (a strictly better sparsifier).
+    c_hi = jnp.sum((a >= hi).astype(jnp.int32), axis=1, keepdims=True)
+    thr = jnp.where(c_hi >= k, hi, lo)
+    # exact zeros are never survivors (zero-padded / all-zero rows must
+    # not count toward the wire-bits ledger)
+    mask = (a >= thr) & (a > 0.0)
     cnt = jnp.sum(mask.astype(jnp.int32), axis=1)
     sel = jnp.where(mask, acc, 0.0)
     if sign:

@@ -30,6 +30,8 @@ import traceback
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.compat import set_mesh
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import (
@@ -216,7 +218,7 @@ def lower_train(cfg, mesh, *, zero1: bool = False, compressor_mode: str = "topk"
     key_sds = _sds((2,), jnp.uint32, mesh, P())
     results = {}
     for name, fn in (("sync_step", sync_step), ("local_step", local_step)):
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             # donate the state: steady-state training aliases the Qsparse
             # state buffers in place (alias_bytes in memory_analysis)
             lowered = jax.jit(fn, donate_argnums=(0,)).lower(
@@ -241,7 +243,7 @@ def lower_serve(cfg, mesh, shape_name: str):
             return model.prefill(params, batch, cfg, policy,
                                  max_len=sh.seq_len)
 
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             results["prefill"] = jax.jit(prefill_fn).lower(params_sds, batch_sds)
         return results
     # decode: one new token against a seq_len cache
@@ -256,7 +258,7 @@ def lower_serve(cfg, mesh, shape_name: str):
         return model.decode_step(params, cache, token, sh.seq_len - 1, cfg,
                                  policy)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         results["decode"] = jax.jit(decode_fn).lower(
             params_sds, cache_sharded, token_sds)
     return results

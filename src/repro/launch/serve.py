@@ -13,6 +13,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.compat import set_mesh
 from repro.configs import ARCHS, get_config
 from repro.launch.mesh import data_axes, worker_count
 from repro.models import get_model
@@ -54,7 +55,7 @@ def main():
             jax.random.PRNGKey(2), (B, cfg.n_frontend_tokens, cfg.d_model))
     max_len = S + args.new_tokens + (cfg.n_frontend_tokens if cfg.modality else 0)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = jax.device_put(params, put)
         t0 = time.time()
         logits, cache, n = jax.jit(

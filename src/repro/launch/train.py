@@ -8,7 +8,11 @@ testing:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
-      --mesh 4x2 --steps 20 --H 4
+      --mesh 8x1 --steps 20 --H 4
+
+On 0.4.x jax use a TP=1 mesh (e.g. 8x1): a >1 tensor-parallel auto
+axis cannot partition the scanned layer stacks inside the partial-
+manual region there (see repro/compat.py).  Modern jax takes any mesh.
 """
 
 from __future__ import annotations
@@ -20,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import set_mesh
 from repro.configs import ARCHS, get_config
 from repro.core.distributed import ShardCompressor, make_dist_steps
 from repro.data import LMTokenStream
@@ -44,6 +49,11 @@ def main():
     ap.add_argument("--k-frac", type=float, default=0.01)
     ap.add_argument("--compressor", default="topk",
                     choices=["topk", "signtopk", "none"])
+    ap.add_argument("--dispatch", default="auto",
+                    choices=["auto", "kernel", "reference"],
+                    help="compression kernel routing (kernels/dispatch.py): "
+                         "auto = fused Pallas Top_k on TPU, reference "
+                         "elsewhere")
     ap.add_argument("--zero1", action="store_true")
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--ckpt", default=None)
@@ -67,7 +77,7 @@ def main():
 
     init_fn, local_step, sync_step = make_dist_steps(
         grad_fn, momentum_sgd(0.9),
-        ShardCompressor(args.compressor, args.k_frac),
+        ShardCompressor(args.compressor, args.k_frac, dispatch=args.dispatch),
         warmup_piecewise(args.lr, 5, [int(args.steps * 0.8)]),
         mesh, daxes, specs, zero1=args.zero1,
     )
@@ -79,7 +89,7 @@ def main():
         params, specs,
         is_leaf=lambda z: hasattr(z, "shape") and not isinstance(z, dict),
     )
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = jax.device_put(params, put_specs)
         state = init_fn(params)
         ls, ss = jax.jit(local_step), jax.jit(sync_step)

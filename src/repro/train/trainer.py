@@ -1,4 +1,10 @@
-"""Training loop driving Qsparse-local-SGD (reference engines).
+"""Training loop driving the unified Qsparse-local-SGD engine.
+
+Both paper algorithms run through ``core/engine.py``: the synchronous
+schedule (Algorithm 1) is a [T] mask broadcast to all workers, the
+asynchronous one (Algorithm 2) a [T, R] per-worker mask.  Compression
+dispatches to the Pallas kernels per ``RunConfig.dispatch``
+("auto" | "kernel" | "reference"; see kernels/dispatch.py).
 
 Handles: sync/async schedules, LR schedules, the bits ledger (the
 paper's evaluation axis), periodic eval, target-loss early stats (bits
@@ -15,8 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import async_qsparse, qsparse, schedule as sched
+from repro.core import engine, schedule as sched
 from repro.core.operators import CompressionOp
+from repro.kernels.dispatch import DispatchConfig
 from repro.optim.transforms import GradientTransform
 from repro.train import checkpoint as ckpt
 
@@ -33,6 +40,7 @@ class RunConfig:
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 0
     target_loss: Optional[float] = None
+    dispatch: str = "auto"  # "auto" | "kernel" | "reference"
 
 
 @dataclasses.dataclass
@@ -58,6 +66,15 @@ class History:
         }
 
 
+def make_mask(run: RunConfig) -> np.ndarray:
+    """The engine's [T, R] sync mask for this run's schedule."""
+    if run.asynchronous:
+        return sched.async_schedule(run.total_steps, run.R, run.H,
+                                    seed=run.seed)
+    fixed = sched.fixed_schedule(run.total_steps, run.H)
+    return np.broadcast_to(fixed[:, None], (run.total_steps, run.R)).copy()
+
+
 def train(
     grad_fn: Callable,                       # (params, batch)->(loss, grads)
     params: Any,
@@ -69,22 +86,17 @@ def train(
     eval_fn: Optional[Callable] = None,      # (master_params) -> metrics dict
     smooth: int = 20,
 ) -> tuple[Any, History]:
-    """Runs Algorithm 1 (or Algorithm 2 when run.asynchronous)."""
+    """Runs Algorithm 1 (or Algorithm 2 when run.asynchronous) via the
+    unified engine."""
     key = jax.random.PRNGKey(run.seed)
     hist = History()
     t0 = time.time()
-    if run.asynchronous:
-        state = async_qsparse.init(params, inner_opt, run.R)
-        step_fn = jax.jit(async_qsparse.make_step(
-            grad_fn, inner_opt, operator, lr_schedule, run.R))
-        mask = sched.async_schedule(run.total_steps, run.R, run.H,
-                                    seed=run.seed)
-    else:
-        state = qsparse.init(params, inner_opt, run.R)
-        step_fn = jax.jit(qsparse.make_step(
-            grad_fn, inner_opt, operator, lr_schedule, run.R),
-            static_argnames=("sync",))
-        mask = sched.fixed_schedule(run.total_steps, run.H)
+    dispatch = DispatchConfig(mode=run.dispatch)
+    state = engine.init(params, inner_opt, run.R)
+    step_fn = jax.jit(engine.make_step(
+        grad_fn, inner_opt, operator, lr_schedule, run.R,
+        dispatch=dispatch, global_rounds=not run.asynchronous))
+    mask = make_mask(run)
 
     recent = []
     for t, batch in enumerate(batches):
@@ -92,10 +104,7 @@ def train(
             break
         key, sub = jax.random.split(key)
         batch = jax.tree_util.tree_map(jnp.asarray, batch)
-        if run.asynchronous:
-            state, loss = step_fn(state, batch, jnp.asarray(mask[t]), sub)
-        else:
-            state, loss = step_fn(state, batch, sync=bool(mask[t]), key=sub)
+        state, loss = step_fn(state, batch, jnp.asarray(mask[t]), sub)
         lossf = float(loss)
         recent.append(lossf)
         if len(recent) > smooth:

@@ -1,0 +1,215 @@
+"""Kernel-dispatch parity: compression routed through the Pallas
+kernels (kernels/dispatch.py, interpret mode on CPU) must match the
+dense reference operators in core/operators.py — selected values,
+error-memory update and wire-bit counts — and fall back transparently
+where kernels don't apply.
+
+Top_k inputs are tie-free by construction: threshold selection keeps
+*all* coordinates tied at the k-th magnitude while lax.top_k breaks
+ties by index, so parity is only exact on distinct magnitudes (see
+DESIGN.md §3.1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, operators as ops, qsparse
+from repro.core.distributed import ShardCompressor
+from repro.kernels import dispatch as dsp
+from repro.optim import constant, sgd
+
+KERNEL = dsp.DispatchConfig(mode="kernel")
+REFERENCE = dsp.DispatchConfig(mode="reference")
+
+
+def tie_free(key, shape, lo=0.05, hi=4.0):
+    """Random-looking tensor with strictly distinct |values|."""
+    d = int(np.prod(shape))
+    mags = jnp.linspace(lo, hi, d)
+    ks, kp = jax.random.split(key)
+    signs = jnp.where(jax.random.bernoulli(ks, 0.5, (d,)), 1.0, -1.0)
+    return (mags * signs)[jax.random.permutation(kp, d)].reshape(shape)
+
+
+def assert_leaf_parity(op, x, *, atol=1e-5):
+    """Dispatched output == reference output: values, memory, bits."""
+    key = jax.random.PRNGKey(3)
+    out_k, bits_k, used = dsp.compress_leaf(op, key, x, KERNEL)
+    assert used, f"{type(op).__name__} did not take the kernel path"
+    out_r, bits_r = op(key, x)
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32),
+                               rtol=1e-5, atol=atol)
+    # fused error-memory update m' = acc - selected
+    np.testing.assert_allclose(np.asarray(x - out_k, np.float32),
+                               np.asarray(x - out_r, np.float32),
+                               rtol=1e-5, atol=atol)
+    np.testing.assert_allclose(float(bits_k), float(bits_r))
+
+
+def test_topk_kernel_parity():
+    x = tie_free(jax.random.PRNGKey(0), (96, 1024))
+    assert dsp.would_dispatch(ops.TopK(k=0.01), x.shape, cfg=KERNEL)
+    assert_leaf_parity(ops.TopK(k=0.01), x)
+
+
+def test_signtopk_kernel_parity():
+    x = tie_free(jax.random.PRNGKey(1), (96, 1024))
+    assert_leaf_parity(ops.SignSparsifier(k=0.01, m=2), x)
+
+
+def test_row_topk_kernel_parity():
+    x = tie_free(jax.random.PRNGKey(2), (64, 512))
+    assert_leaf_parity(ops.RowTopK(k=0.05, row_len=512), x)
+
+
+def test_row_signtopk_kernel_parity():
+    x = tie_free(jax.random.PRNGKey(3), (64, 512))
+    assert_leaf_parity(ops.RowSignTopK(k=0.05, row_len=512, m=2), x)
+
+
+def test_qsgd_kernel_parity():
+    # same key => same uniforms => identical stochastic rounding
+    x = jax.random.normal(jax.random.PRNGKey(4), (300, 128))
+    assert_leaf_parity(ops.QSGDQuantizer(s=15), x, atol=1e-4)
+
+
+def test_fallback_paths():
+    """Unsupported (op, shape) pairs run the reference — bit-identical."""
+    key = jax.random.PRNGKey(5)
+    cases = [
+        # auto mode off-TPU: platform rule keeps everything on reference
+        (ops.TopK(k=0.2), jax.random.normal(key, (4096,)),
+         dsp.DispatchConfig(mode="auto")),
+        # tiny leaf in auto mode on any platform: below min_size
+        (ops.TopK(k=0.2), jax.random.normal(key, (50,)),
+         dsp.DispatchConfig(mode="auto", interpret=True)),
+        # L1-scaled SignTopK has no kernel (kernel normalizes by L2)
+        (ops.SignSparsifier(k=0.01, m=1), tie_free(key, (96, 1024)), KERNEL),
+        # non-lane-aligned compression row
+        (ops.RowTopK(k=0.1, row_len=100), jax.random.normal(key, (2000,)),
+         KERNEL),
+        # a row too long for the VMEM budget
+        (ops.TopK(k=0.01), jax.random.normal(key, (1 << 20,)), KERNEL),
+        # reference mode disables dispatch outright
+        (ops.TopK(k=0.01), tie_free(key, (96, 1024)), REFERENCE),
+    ]
+    for op, x, cfg in cases:
+        assert not dsp.would_dispatch(op, x.shape, cfg=cfg)
+        out, bits, used = dsp.compress_leaf(op, key, x, cfg)
+        assert not used
+        out_r, bits_r = op(key, x)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(out_r))
+        np.testing.assert_allclose(float(bits), float(bits_r))
+
+
+def test_compress_tree_mixed_dispatch():
+    """Leafwise routing: eligible leaves take the kernel, the rest fall
+    back, totals add up."""
+    grads = {
+        "big": tie_free(jax.random.PRNGKey(6), (96, 1024)),
+        "small": jax.random.normal(jax.random.PRNGKey(7), (50,)),
+    }
+    op = ops.TopK(k=0.02)
+    assert dsp.would_dispatch(op, grads["big"].shape, cfg=KERNEL)
+    key = jax.random.PRNGKey(8)
+    tree_k, bits_k = dsp.compress_tree(op, key, grads, KERNEL)
+    tree_r, bits_r = ops.compress_tree(op, key, grads)
+    for name in grads:
+        np.testing.assert_allclose(np.asarray(tree_k[name]),
+                                   np.asarray(tree_r[name]),
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(bits_k), float(bits_r))
+
+
+# ---------------------------------------------------------------------------
+# engine through the kernel path
+# ---------------------------------------------------------------------------
+
+
+def _engine_problem(shape=(96, 1024), R=2):
+    c = tie_free(jax.random.PRNGKey(9), (R,) + shape, lo=0.05, hi=4.0)
+
+    def grad_fn(params, data):
+        g = params["w"] - data
+        return 0.5 * jnp.sum(g ** 2), {"w": g}
+
+    return c, grad_fn
+
+
+def _run_one_sync(dispatch_cfg):
+    R = 2
+    c, grad_fn = _engine_problem(R=R)
+    params = {"w": jnp.zeros(c.shape[1:])}
+    state = engine.init(params, sgd(), R)
+    step = jax.jit(engine.make_step(
+        grad_fn, sgd(), ops.TopK(k=0.01), constant(0.1), R,
+        dispatch=dispatch_cfg, global_rounds=True))
+    return step(state, c, jnp.ones((R,), bool), jax.random.PRNGKey(0))
+
+
+def test_engine_sync_step_kernel_vs_reference():
+    """Acceptance: a TopK compression executes through the Pallas kernel
+    inside the jitted engine step with output parity vs the dense
+    reference — master update, error memory and bits ledger."""
+    op = ops.TopK(k=0.01)
+    assert dsp.would_dispatch(op, (96, 1024), cfg=KERNEL)
+    ks, loss_k = _run_one_sync(KERNEL)
+    rs, loss_r = _run_one_sync(REFERENCE)
+    np.testing.assert_allclose(np.asarray(ks.master["w"]),
+                               np.asarray(rs.master["w"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ks.memory["w"]),
+                               np.asarray(rs.memory["w"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(ks.bits), float(rs.bits))
+    np.testing.assert_allclose(float(loss_k), float(loss_r))
+    assert int(ks.rounds) == 1
+
+
+def test_qsparse_wrapper_matches_engine():
+    """The Algorithm-1 wrapper is the engine under an all-equal mask."""
+    R, D = 4, 64
+    c = jax.random.normal(jax.random.PRNGKey(10), (R, D))
+
+    def grad_fn(params, data):
+        g = params["w"] - data
+        return 0.5 * jnp.sum(g ** 2), {"w": g}
+
+    params = {"w": jnp.zeros(D)}
+    op = ops.TopK(k=8)
+    w_state = qsparse.init(params, sgd(), R)
+    w_step = jax.jit(qsparse.make_step(grad_fn, sgd(), op, constant(0.1), R),
+                     static_argnames=("sync",))
+    e_state = engine.init(params, sgd(), R)
+    e_step = jax.jit(engine.make_step(grad_fn, sgd(), op, constant(0.1), R,
+                                      global_rounds=True))
+    key = jax.random.PRNGKey(11)
+    for t in range(6):
+        key, sub = jax.random.split(key)
+        sync = t % 3 == 2
+        w_state, _ = w_step(w_state, c, sync=sync, key=sub)
+        e_state, _ = e_step(e_state, c, jnp.full((R,), sync), sub)
+    np.testing.assert_array_equal(np.asarray(w_state.master["w"]),
+                                  np.asarray(e_state.master["w"]))
+    np.testing.assert_array_equal(np.asarray(w_state.memory["w"]),
+                                  np.asarray(e_state.memory["w"]))
+    assert float(w_state.bits) == float(e_state.bits)
+    assert int(w_state.rounds) == int(e_state.rounds)
+
+
+def test_shard_compressor_kernel_parity():
+    """The distributed engine's shard-local compressor takes the same
+    kernel path with identical outputs and wire bits."""
+    g = {"w": tie_free(jax.random.PRNGKey(12), (256, 512))}
+    for mode in ("topk", "signtopk"):
+        ck = ShardCompressor(mode=mode, k_frac=0.05, dispatch="kernel")
+        cr = ShardCompressor(mode=mode, k_frac=0.05, dispatch="reference")
+        out_k, bits_k = ck(g, None)
+        out_r, bits_r = cr(g, None)
+        np.testing.assert_allclose(np.asarray(out_k["w"]),
+                                   np.asarray(out_r["w"]),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(float(bits_k), float(bits_r))

@@ -9,6 +9,7 @@ pytestmark = pytest.mark.slow
 DIST_MATCHES_REFERENCE = r"""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.compat import set_mesh
 from repro.core.distributed import make_dist_steps, ShardCompressor
 from repro.core import qsparse, operators as ops, schedule
 from repro.optim import sgd, constant
@@ -50,7 +51,7 @@ state_ref = qsparse.init(params, inner, R)
 step_ref = jax.jit(qsparse.make_step(grad_fn, inner, op_ref, constant(0.1), R),
                    static_argnames=("sync",))
 
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     state = init_fn(params_dev)
     ls, ss = jax.jit(local_step), jax.jit(sync_step)
     key = jax.random.PRNGKey(1)
@@ -82,6 +83,7 @@ def test_dist_engine_matches_reference(subproc):
 ZERO1_EQUIV = r"""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.compat import set_mesh
 from repro.core.distributed import make_dist_steps, ShardCompressor
 from repro.optim import sgd, constant
 
@@ -104,7 +106,7 @@ for zero1 in (False, True):
     init_fn, local_step, sync_step = make_dist_steps(
         grad_fn, sgd(), ShardCompressor("topk", 0.25), constant(0.1),
         mesh, ("data",), specs, zero1=zero1)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         state = init_fn(params)
         ls, ss = jax.jit(local_step), jax.jit(sync_step)
         key = jax.random.PRNGKey(1)
@@ -132,6 +134,7 @@ def test_zero1_equivalent(subproc):
 MULTIPOD = r"""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.compat import set_mesh
 from repro.core.distributed import make_dist_steps, ShardCompressor
 from repro.optim import sgd, constant
 
@@ -153,7 +156,7 @@ def grad_fn(p, batch):
 init_fn, local_step, sync_step = make_dist_steps(
     grad_fn, sgd(), ShardCompressor("topk", 0.5), constant(0.1),
     mesh, ("pod", "data"), specs)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     state = init_fn(params)
     ls, ss = jax.jit(local_step), jax.jit(sync_step)
     key = jax.random.PRNGKey(1)
