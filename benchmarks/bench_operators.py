@@ -1,7 +1,10 @@
 """Figure-1a/4a companion: per-operator compression quality, wire bits
 per round and compression-op throughput on a ResNet-50-sized tensor —
 plus the kernel-dispatch path (kernels/dispatch.py) vs the dense
-references on the same operators."""
+references, the compact wire path (kernel (idx, val) emission vs the
+scatter-free reference oracle), and the megabuffer packing of a full
+sync round (kernel launches per round + rounds/sec, packed vs
+leaf-by-leaf)."""
 
 from __future__ import annotations
 
@@ -50,7 +53,8 @@ def run():
         rows.append(BenchRow(
             f"op/{name}", us,
             f"rel_err={rel_err:.4f};wire_ratio={ratio:.5f};"
-            f"gamma={op.gamma(D):.5f}"))
+            f"gamma={op.gamma(D):.5f}",
+            wire_bits=float(bits), path="reference"))
 
     # kernel-dispatch path vs reference on the dispatchable operators
     # (interpret mode off-TPU: a correctness/rel-err companion there,
@@ -76,5 +80,66 @@ def run():
             rows.append(BenchRow(
                 f"dispatch/{name}/{mode}", us,
                 f"rel_err={rel_err:.4f};"
-                f"wire_ratio={float(bits) / (32 * d):.5f}"))
+                f"wire_ratio={float(bits) / (32 * d):.5f}",
+                wire_bits=float(bits), path=mode))
+
+    # compact wire path: the kernel's direct (idx, val) emission vs the
+    # scatter-free reference oracle (the sparse_allgather hot loop).
+    # Global rows sized so kcap fits the kernel's capacity bound.
+    xc = x[: 1 << 17]
+    compact_table = [
+        ("topk_1pct", ops.TopK(k=0.01), xc),
+        ("signtopk_1pct_m2", ops.SignSparsifier(k=0.01, m=2), xc),
+        ("row_topk", ops.RowTopK(k=0.01, row_len=8192), x),
+        ("row_signtopk", ops.RowSignTopK(k=0.01, row_len=8192), x),
+    ]
+    for name, op, data in compact_table:
+        d = int(data.size)
+        for mode in ("kernel", "reference"):
+            cfg = dsp.DispatchConfig(mode=mode)
+            fn = jax.jit(lambda k, v, o=op, c=cfg: dsp.compact_compress(
+                o, k, v, c)[0])
+            used = dsp.would_compact(op, data.shape, cfg=cfg)
+            assert used == (mode == "kernel"), (name, mode)
+            leaf, us = _time(fn, jax.random.PRNGKey(1), data)
+            bits = float(leaf.bits)
+            rows.append(BenchRow(
+                f"compact/{name}/{mode}", us,
+                f"wire_ratio={bits / (32 * d):.5f};kcap={leaf.kcap}",
+                wire_bits=bits,
+                path="kernel" if used else "reference"))
+
+    rows.extend(_bench_packing())
+    return rows
+
+
+def _bench_packing():
+    """Megabuffer packing: one multi-leaf sync-round compression, packed
+    (one kernel launch per operator-family bucket) vs leaf-by-leaf.
+    Launches are counted at trace time; rounds/sec is the steady-state
+    call rate of the jitted round."""
+    tree = {
+        f"layer{i}": jax.random.normal(jax.random.PRNGKey(40 + i),
+                                       (128, 2048))
+        for i in range(6)
+    }
+    tree["emb"] = jax.random.normal(jax.random.PRNGKey(50), (64, 4096))
+    tree["head"] = jax.random.normal(jax.random.PRNGKey(51), (64, 4096))
+    op = ops.TopK(k=0.01)
+    d = int(sum(v.size for v in tree.values()))
+    rows = []
+    for pack in (True, False):
+        cfg = dsp.DispatchConfig(mode="kernel", pack=pack)
+        fn = jax.jit(lambda k, t, c=cfg: dsp.compress_tree(op, k, t, c))
+        dsp.reset_launches()
+        fn.lower(jax.random.PRNGKey(1), tree)  # trace -> count launches
+        launches = dsp.total_launches()
+        (out, bits), us = _time(fn, jax.random.PRNGKey(1), tree)
+        rows.append(BenchRow(
+            f"pack/sync_round/{'packed' if pack else 'per_leaf'}", us,
+            f"launches_per_round={launches};"
+            f"rounds_per_s={1e6 / max(us, 1e-9):.2f};"
+            f"wire_ratio={float(bits) / (32 * d):.5f}",
+            wire_bits=float(bits),
+            path="packed" if pack else "per_leaf"))
     return rows

@@ -1,0 +1,108 @@
+"""CI benchmark-regression gate.
+
+Compares a freshly generated ``BENCH_<suite>.json`` (``run.py --json``)
+against the committed baseline and fails on per-row ``us_per_call``
+regressions beyond the tolerance.
+
+Raw microseconds are not comparable across machines (the baseline is
+recorded on one container, CI runs on another), so the gate
+self-calibrates: it computes the median current/baseline time ratio
+over all shared rows — the machine-speed factor — and flags only rows
+whose ratio exceeds ``median * tolerance``.  A uniform slowdown (colder
+CI runner) passes; a single row that got slower *relative to its
+peers* — the signature of a real dispatch/kernel regression — fails.
+
+Rows whose baseline is faster than ``--min-us`` are reported but never
+judged: at microsecond scale the 5-sample bench is jitter, not signal.
+
+Wire bits are machine-independent and compared to 1% relative — wide
+enough for stochastic-quantizer nonzero counts to drift with the
+(unpinned) jax PRNG version, narrow enough that any real ledger change
+(fixed-k vs counted, a dropped scale field) trips it.
+
+Exit status 0 = pass, 1 = regression or malformed input.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: r for r in data["rows"]}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_<suite>.json")
+    ap.add_argument("--current", required=True,
+                    help="freshly generated BENCH_<suite>.json")
+    ap.add_argument("--tolerance", type=float, default=1.25,
+                    help="max allowed per-row slowdown vs the "
+                         "median-calibrated baseline (1.25 = +25%%)")
+    ap.add_argument("--min-us", type=float, default=200.0,
+                    help="baseline rows faster than this are informative "
+                         "only (too noisy to gate)")
+    args = ap.parse_args()
+
+    base = load_rows(args.baseline)
+    cur = load_rows(args.current)
+    missing = sorted(set(base) - set(cur))
+    if missing:
+        print(f"FAIL: {len(missing)} baseline rows missing from current "
+              f"run: {missing}")
+        return 1
+
+    shared = sorted(set(base) & set(cur))
+    ratios = {}
+    for name in shared:
+        b, c = base[name]["us_per_call"], cur[name]["us_per_call"]
+        if b and b > 0 and c is not None:
+            ratios[name] = c / b
+    if not ratios:
+        print("FAIL: no comparable rows")
+        return 1
+    speed = statistics.median(ratios.values())
+    print(f"machine-speed factor (median us ratio over {len(ratios)} "
+          f"rows): {speed:.3f}")
+
+    failed = []
+    for name, r in sorted(ratios.items()):
+        rel = r / speed
+        gated = base[name]["us_per_call"] >= args.min_us
+        slow = rel > args.tolerance
+        mark = ("REGRESSION" if slow and gated
+                else "slow (ungated: below --min-us)" if slow else "ok")
+        print(f"  {name}: {base[name]['us_per_call']:.1f}us -> "
+              f"{cur[name]['us_per_call']:.1f}us  "
+              f"(x{r:.2f} raw, x{rel:.2f} calibrated)  {mark}")
+        if slow and gated:
+            failed.append(name)
+
+    bit_fails = []
+    for name in shared:
+        b, c = base[name].get("wire_bits"), cur[name].get("wire_bits")
+        if b is None or c is None:
+            continue
+        if abs(c - b) > 1e-2 * max(abs(b), 1.0):
+            bit_fails.append(f"{name}: wire_bits {b} -> {c}")
+    for msg in bit_fails:
+        print(f"  LEDGER CHANGE  {msg}")
+
+    if failed or bit_fails:
+        print(f"FAIL: {len(failed)} timing regression(s) beyond "
+              f"x{args.tolerance} calibrated, {len(bit_fails)} wire-bit "
+              f"change(s)")
+        return 1
+    print("PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

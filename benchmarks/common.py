@@ -24,9 +24,24 @@ class BenchRow:
     name: str
     us_per_call: float
     derived: str
+    #: exact wire cost of one call (bits), when the row measures a
+    #: compression; None for rows where bits make no sense
+    wire_bits: Optional[float] = None
+    #: which dispatch route ran: "kernel" | "reference" | "packed" | ...
+    path: Optional[str] = None
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+    def to_json(self, suite: str) -> dict:
+        return {
+            "suite": suite,
+            "name": self.name,
+            "us_per_call": round(self.us_per_call, 1),
+            "wire_bits": self.wire_bits,
+            "dispatch_path": self.path,
+            "derived": self.derived,
+        }
 
 
 def convex_problem(n=4000, seed=0):

@@ -3,12 +3,20 @@
 Prints ``name,us_per_call,derived`` CSV (plus a header comment per
 suite).  Roofline rows appear when artifacts/dryrun/ exists (run
 ``python -m repro.launch.dryrun --all`` first).
+
+``--json [DIR]`` additionally writes one machine-readable
+``BENCH_<suite>.json`` per suite run — {suite, name, us_per_call,
+wire_bits, dispatch_path, derived} rows — the format the committed
+``benchmarks/BENCH_operators.json`` baseline and the CI regression
+gate (``benchmarks/check_regression.py``) consume.
 """
 
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
+import os
 import sys
 import time
 
@@ -26,6 +34,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default=None,
                     choices=[s for s, _ in SUITES])
+    ap.add_argument("--json", nargs="?", const=".", default=None,
+                    metavar="DIR",
+                    help="also write BENCH_<suite>.json into DIR "
+                         "(default: current directory)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failures = 0
@@ -40,6 +52,15 @@ def main() -> None:
                 print(r.csv(), flush=True)
             print(f"# suite {name} done in {time.time() - t0:.1f}s",
                   flush=True)
+            if args.json is not None:
+                os.makedirs(args.json, exist_ok=True)
+                path = os.path.join(args.json, f"BENCH_{name}.json")
+                with open(path, "w") as f:
+                    json.dump({"suite": name,
+                               "rows": [r.to_json(name) for r in rows]},
+                              f, indent=1)
+                    f.write("\n")
+                print(f"# wrote {path}", flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"# suite {name} FAILED: {type(e).__name__}: {e}",

@@ -84,39 +84,53 @@ def _pick_axis(shape: tuple[int, ...], spec: Optional[P]) -> int:
 
 
 def axis_topk_compact(x: jnp.ndarray, k_frac: float, axis: int,
-                      sign_bits: bool = False):
-    """Top-k along ``axis`` in *compact* form.
+                      sign_bits: bool = False, dispatch_cfg=None):
+    """Top-k along ``axis`` in *compact* form (DESIGN.md §3.3).
 
-    Returns (idx [..., k] int32, sel [..., k] f32, wire_bits, moved_shape)
-    where idx/sel live on the moved-to-last layout.  Shard-local by
+    Returns (idx [..., kcap] int32, val [..., kcap] f32, mem — the
+    fused error memory in ``x``'s layout (f32) —, wire_bits,
+    moved_shape) where idx/val live on the moved-to-last layout, with
+    per-row indices relative to that last axis and empty slots holding
+    the out-of-row sentinel (idx = n, val = 0).  Shard-local by
     construction when ``axis`` is unsharded.
 
-    NOTE: the compact form needs explicit indices, hence ``lax.top_k``
-    — which 0.4.x XLA cannot partition inside a partial-manual region,
-    so the sparse-allgather aggregation that consumes this is
-    modern-jax only.  The dense path (:func:`axis_topk`) uses the
-    sort-free threshold select instead.
+    Sort-free on both routes: the compact Pallas kernel when the row
+    is eligible (``dispatch_cfg``), else the scatter-free jnp oracle —
+    either traces without ``lax.top_k``, which the 0.4.x SPMD
+    partitioner cannot partition inside partial-manual regions, so the
+    sparse-allgather aggregation runs on this container too.
+
+    Wire bits are *counted* from the actual survivors (exact zeros
+    excluded), matching the dense path's ledger convention.
     """
+    from repro.kernels import dispatch as dsp
     n = x.shape[axis]
     k = resolve_k(k_frac, n)
+    kcap = dsp.capacity(k, n)
     xm = jnp.moveaxis(x.astype(jnp.float32), axis, -1)
-    _, idx = jax.lax.top_k(jnp.abs(xm), k)
-    sel = jnp.take_along_axis(xm, idx, axis=-1)
-    if sign_bits:
-        norm = jnp.linalg.norm(sel, axis=-1, keepdims=True)
-        sel = norm / k * jnp.where(sel >= 0, 1.0, -1.0)
-        per_row = bitlib.bits_signtopk(n, k)
-    else:
-        per_row = bitlib.bits_topk(n, k, 32)
-    nrows = x.size // n
-    bits = jnp.asarray(nrows * per_row, jnp.float32)
-    return idx.astype(jnp.int32), sel, bits, xm.shape
+    rows = xm.reshape(-1, n)
+    idx, val, mem, cnt = dsp.compact_rows(
+        rows, k, kcap, sign=sign_bits, cfg=dispatch_cfg, leaf_size=x.size)
+    nrows = rows.shape[0]
+    counted = (bitlib.bits_signtopk_counted if sign_bits
+               else bitlib.bits_topk_counted)
+    bits = (jnp.float32(32 * nrows) + counted(n, jnp.sum(cnt))
+            - jnp.float32(32))
+    idx = idx.reshape(xm.shape[:-1] + (kcap,))
+    val = val.reshape(xm.shape[:-1] + (kcap,))
+    mem = jnp.moveaxis(mem.reshape(xm.shape), -1, axis)
+    return idx, val, mem, bits, xm.shape
 
 
 def _densify(idx, sel, moved_shape, axis):
-    out = jnp.zeros(moved_shape, jnp.float32)
-    out = jnp.put_along_axis(out, idx, sel, axis=-1, inplace=False)
-    return jnp.moveaxis(out, -1, axis)
+    """Dense decode of compact (idx, sel) buffers on the moved layout —
+    dispatch.decode_rows per compression row (sentinel slots drop, so
+    fixed-capacity buffers decode without a length field)."""
+    from repro.kernels.dispatch import decode_rows
+    kcap = idx.shape[-1]
+    out = decode_rows(idx.reshape(-1, kcap), sel.reshape(-1, kcap),
+                      moved_shape[-1])
+    return jnp.moveaxis(out.reshape(moved_shape), -1, axis)
 
 
 def _threshold_axis_topk(x: jnp.ndarray, k_frac: float, axis: int,
@@ -160,11 +174,14 @@ class ShardCompressor:
           | 'none' (Identity — vanilla/local-SGD baselines)
     k_frac: survivor fraction along the chosen axis per leaf.
     dispatch: kernel routing policy (see kernels/dispatch.py) — 'auto'
-          runs the fused Pallas Top_k kernel on TPU for lane-aligned
-          compression rows, 'kernel' forces it (interpret off-TPU),
-          'reference' keeps the pure lax.top_k path.  The compact wire
-          form (``compact``) always uses the reference path: the kernel
-          emits dense survivors, not (idx, sel) pairs.
+          runs the fused Pallas Top_k kernels on TPU for lane-aligned
+          compression rows, 'kernel' forces them (interpret off-TPU),
+          'reference' keeps the pure-jnp threshold path.  Both the
+          dense form (``__call__``) and the compact wire form
+          (``compact``) dispatch: the compact-emitting kernel writes
+          (idx, val) survivor buffers plus the fused error memory
+          directly (DESIGN.md §3.3), with the scatter-free jnp oracle
+          as its transparent fallback.
     """
 
     mode: str = "topk"
@@ -224,25 +241,36 @@ class ShardCompressor:
     def compact(self, grads, param_specs):
         """Compress to the compact wire form (§Perf beyond-paper
         aggregation): per leaf either ("dense", g) for skipped leaves or
-        ("sparse", idx, sel, axis, moved_shape).
+        ("sparse", idx, val, axis, moved_shape), with indices row-local
+        to the moved-to-last compression axis (shard-local offsets —
+        the model-sharded axes never enter the index space) and empty
+        slots carrying the out-of-row sentinel.  The fused error
+        memories ride along so the sync body never densifies.
 
-        Returns (list_of_leaf_payloads, treedef, wire_bits)."""
+        Returns (list_of_leaf_payloads, treedef, wire_bits, mem_tree).
+        """
+        dcfg = self._dispatch_cfg()
         leaves, treedef = jax.tree_util.tree_flatten(grads)
         specs = self._leaf_specs(param_specs, len(leaves))
-        payloads, bit_terms = [], []
+        payloads, bit_terms, mems = [], [], []
         for g, spec in zip(leaves, specs):
             if self.mode == "none" or g.ndim == 0 or g.size <= 8:
-                payloads.append(("dense", g.astype(jnp.float32)))
+                g32 = g.astype(jnp.float32)
+                payloads.append(("dense", g32))
+                mems.append(jnp.zeros_like(g32))
                 bit_terms.append(
                     jnp.asarray(bitlib.bits_dense(g.size), jnp.float32))
                 continue
             ax = _pick_axis(g.shape, spec)
-            idx, sel, b, moved = axis_topk_compact(
-                g, self.k_frac, ax, sign_bits=(self.mode == "signtopk"))
-            payloads.append(("sparse", idx, sel, ax, moved))
+            idx, val, mem, b, moved = axis_topk_compact(
+                g, self.k_frac, ax, sign_bits=(self.mode == "signtopk"),
+                dispatch_cfg=dcfg)
+            payloads.append(("sparse", idx, val, ax, moved))
+            mems.append(mem)
             bit_terms.append(b)
         bits = jnp.sum(jnp.stack(bit_terms))
-        return payloads, treedef, bits
+        mem_tree = jax.tree_util.tree_unflatten(treedef, mems)
+        return payloads, treedef, bits, mem_tree
 
     def gamma(self) -> float:
         return 1.0 if self.mode == "none" else self.k_frac
@@ -467,10 +495,14 @@ def make_dist_steps(
         )
 
     # ---- sparse-allgather sync (§Perf beyond-paper aggregation) ---------
-    # The manual region emits each worker's *compact* (idx, sel) survivors
-    # with a leading worker axis; the dense mean is reconstructed in the
-    # auto region, so the wire carries W*k entries per row instead of a
-    # dense-f32 ring all-reduce.
+    # The manual region emits each worker's *compact* (idx, val) survivor
+    # buffers with a leading worker axis — written directly by the
+    # compact Pallas kernel (DESIGN.md §3.3), which also hands back the
+    # fused error memory, so no densify/scatter runs inside the manual
+    # region.  The dense mean is reconstructed in the auto region, so
+    # the wire carries W*kcap entries per row instead of a dense-f32
+    # ring all-reduce.  Sort-free end to end: the traced step contains
+    # no lax.top_k, so it partitions under 0.4.x too.
     def _leaf_meta(master_tree):
         leaves = jax.tree_util.tree_flatten(master_tree)[0]
         is_spec = lambda z: isinstance(z, P) or z is None
@@ -499,19 +531,16 @@ def make_dist_steps(
             lambda m, x, h: m + x.astype(jnp.float32) - h.astype(jnp.float32),
             mem, full_master, half,
         )
-        payloads, treedef, wire_bits = compressor.compact(delta, param_specs)
-        arrays, g_self = [], []
+        payloads, _treedef, wire_bits, new_mem = compressor.compact(
+            delta, param_specs)
+        arrays = []
         for pl in payloads:
             if pl[0] == "dense":
                 arrays.append(pl[1])
-                g_self.append(pl[1])
             else:
-                _, idx, sel, ax, moved = pl
+                _, idx, sel, _ax, _moved = pl
                 arrays.append(idx)
                 arrays.append(sel)
-                g_self.append(_densify(idx, sel, moved, ax))
-        g_self = jax.tree_util.tree_unflatten(treedef, g_self)
-        new_mem = jax.tree_util.tree_map(lambda d, gg: d - gg, delta, g_self)
         total_bits = jax.lax.psum(wire_bits, daxes)
         loss = jax.lax.pmean(loss, daxes)
         return (
@@ -548,15 +577,17 @@ def make_dist_steps(
             if kind == "dense":
                 means.append(jnp.mean(next(it), axis=0))
                 continue
-            idx_all = next(it)      # [W, ..., k]
+            idx_all = next(it)      # [W, ..., kcap]
             sel_all = next(it)
             W_ = idx_all.shape[0]
+            # all W workers' buffers for a row decode in one scatter-add
+            # (row-local indices are worker-independent; sentinels drop)
+            from repro.kernels.dispatch import decode_rows
             ii = jnp.moveaxis(idx_all, 0, -2).reshape(
                 (-1, W_ * idx_all.shape[-1]))
             ss = jnp.moveaxis(sel_all, 0, -2).reshape(
                 (-1, W_ * sel_all.shape[-1]))
-            acc = jnp.zeros((ii.shape[0], moved[-1]), jnp.float32)
-            dense = jax.vmap(lambda o, i, v: o.at[i].add(v))(acc, ii, ss)
+            dense = decode_rows(ii, ss, moved[-1])
             dense = jnp.moveaxis(dense.reshape(moved), -1, ax)
             if z1m >= 0:
                 dense = jax.lax.with_sharding_constraint(

@@ -22,8 +22,10 @@ case.  Per step t:
   r with s_r = 1:  x_{t+1}^{(r)} = x̂_{t+1}^{(r)} = x̄_{t+1}       (broadcast)
 
 Compression routes through ``kernels.dispatch``: eligible (operator,
-leaf) pairs execute the fused Pallas kernels, everything else the dense
-reference operators — same outputs, same wire-bit ledger.
+leaf) pairs execute the fused Pallas kernels — megabuffer-packed so a
+sync round costs one kernel launch per operator family, not one per
+leaf (DESIGN.md §3.4) — everything else the dense reference operators;
+same outputs, same wire-bit ledger either way.
 
 When no worker syncs (any(s) == False) the whole sync phase is skipped
 via ``lax.cond``, so pure-local steps never pay for compression.

@@ -3,6 +3,9 @@
   * topk_compress — fused blockwise Top_k select (bisection threshold)
     + optional Sign quantize + error-memory update (the per-sync
     compression of ~25M-element accumulators).
+  * topk_compact — same selection, compact (idx, val) survivor-buffer
+    emission via in-kernel prefix-sum compaction (the sparse wire
+    format of aggregate="sparse_allgather") + the fused error memory.
   * flash_attention — causal/sliding-window online-softmax attention
     used by the transformer substrate.
   * qsgd — bucketed stochastic s-level quantization.

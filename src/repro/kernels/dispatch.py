@@ -9,6 +9,22 @@ and falls back *transparently* to the dense reference operators in
 accounting, so callers never see which path ran (except through
 :func:`would_dispatch`, used by tests and benchmarks).
 
+Three entry layers (see DESIGN.md §3.2-§3.4):
+
+  * :func:`compress_tree` — the engine's per-round entry.  With
+    ``pack=True`` (default) same-operator leaves are packed into one
+    padded ``[rows, n]`` megabuffer per (row length, k, sign) bucket —
+    lane-aligned, zero-padded — so a whole pytree costs **one kernel
+    launch per operator family** instead of one per leaf.  The kernels
+    are row-independent, so packing is output-identical to the
+    leaf-by-leaf path.
+  * :func:`compress_leaf` / :func:`compact_compress` — per-leaf dense /
+    compact form.  The compact form returns ``(idx, val)`` survivor
+    buffers plus the fused error memory (the sparse wire format of
+    ``aggregate="sparse_allgather"``, DESIGN.md §3.3).
+  * :func:`topk_rows` / :func:`compact_rows` — raw pre-shaped row
+    entries for the distributed shard compressor.
+
 Dispatch rules (see DESIGN.md §3.2):
 
   ========================  =======================================
@@ -22,8 +38,11 @@ Dispatch rules (see DESIGN.md §3.2):
   ``QSGDQuantizer``         ``qsgd`` single bucket, external uniforms
   ========================  =======================================
 
-Everything else (RandK, Sign, k-level, the composed quantized
-sparsifiers, SignTopK with the L1 scale) runs the reference operator.
+The Top_k family additionally supports the compact emission mode
+(``topk_compact``) with the scatter-free jnp oracle as its transparent
+reference fallback.  Everything else (RandK, Sign, k-level, the
+composed quantized sparsifiers, SignTopK with the L1 scale) runs the
+reference operator.
 
 Eligibility (``mode="auto"``): the backend is TPU (off-TPU the kernels
 only exist in interpret mode, which is for validation, not speed), the
@@ -36,7 +55,8 @@ benchmarks; ``mode="reference"`` disables dispatch entirely.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+import functools
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +74,9 @@ from repro.core.operators import (
 )
 from repro.kernels import qsgd as _qsgd
 from repro.kernels import topk_compress as _topk
+from repro.kernels.launch_stats import (  # re-exported for benchmarks
+    LAUNCHES, reset_launches, total_launches,
+)
 
 LANES = 128  # TPU vector lane width: kernel rows are padded to this
 
@@ -69,14 +92,21 @@ class DispatchConfig:
     min_size: smallest leaf (elements) worth a kernel launch in "auto"
     max_row:  longest kernel row (elements); bounds VMEM residency —
               3 f32 blocks of (block_rows, max_row) must fit in ~16 MB
+    max_cap:  largest compact survivor capacity (elements per row) the
+              compact kernel accepts; bounds the (block_rows, chunk,
+              kcap) one-hot intermediate of the slot scatter
     block_rows: grid block height handed to the kernels
+    pack: megabuffer-pack same-bucket leaves in compress_tree (one
+          kernel launch per operator family per sync round)
     interpret: None — auto (interpret off-TPU); bool to force
     """
 
     mode: str = "auto"
     min_size: int = 1 << 16
     max_row: int = 1 << 19
+    max_cap: int = 1 << 11
     block_rows: int = 8
+    pack: bool = True
     interpret: Optional[bool] = None
 
     def __post_init__(self):
@@ -134,6 +164,11 @@ def _padded_len(d: int, multiple: int) -> int:
     return d + ((-d) % multiple)
 
 
+def capacity(k: int, n: int) -> int:
+    """Lane-aligned compact survivor-buffer capacity for (k, row n)."""
+    return min(_padded_len(max(k, 1), LANES), _padded_len(n, LANES))
+
+
 # ---------------------------------------------------------------------------
 # kernel rules
 # ---------------------------------------------------------------------------
@@ -145,7 +180,7 @@ class KernelRule:
 
     name: str
     matches: Callable[[CompressionOp], bool]
-    eligible: Callable[[CompressionOp, tuple, DispatchConfig], bool]
+    eligible: Callable[[CompressionOp, tuple, "DispatchConfig"], bool]
     run: Callable  # (op, key, x, cfg) -> (dense_out, wire_bits)
 
 
@@ -169,53 +204,49 @@ def _rows_ok(op, shape, cfg) -> bool:
     return row % LANES == 0 and row <= cfg.max_row
 
 
-def _run_topk_global(op: TopK, key, x, cfg):
+TOPK_FAMILY = ("topk_global", "row_topk", "signtopk_global", "row_signtopk")
+
+
+def _plan_topk(rule_name: str, op, x):
+    """Per-leaf Top_k-family launch plan: the pre-shaped [rows, n] f32
+    buffer, static k, sign flag, and the counted-bits ledger closure.
+    Shared by the per-leaf runners, megabuffer packing, and the compact
+    emission path, so every route charges identical bits."""
     d = x.size
-    k = resolve_k(op.k, d)
+    if rule_name in ("topk_global", "signtopk_global"):
+        sign = rule_name == "signtopk_global"
+        k = resolve_k(op.k, d)
+        rows = _as_single_row(x)
+        if sign:
+            bits_of = lambda c: bitlib.bits_signtopk_counted(d, c)
+        else:
+            bits_of = lambda c: bitlib.bits_topk_counted(d, c, op.value_bits)
+    else:
+        sign = rule_name == "row_signtopk"
+        row = _row_len_of(op, x.shape)
+        k = resolve_k(op.k, row)
+        rows = _as_rows(x, row)
+        nrows = rows.shape[0]
+        # one 32-bit length/scale field per compression row; the counted
+        # helpers already include one, hence the -32
+        if sign:
+            bits_of = lambda c: (jnp.float32(32 * nrows)
+                                 + bitlib.bits_signtopk_counted(row, c)
+                                 - jnp.float32(32))
+        else:
+            bits_of = lambda c: (jnp.float32(32 * nrows)
+                                 + bitlib.bits_topk_counted(
+                                     row, c, op.value_bits)
+                                 - jnp.float32(32))
+    return rows, k, sign, bits_of
+
+
+def _run_topk_family(rule_name: str, op, key, x, cfg):
+    rows, k, sign, bits_of = _plan_topk(rule_name, op, x)
     sel, _mem, cnt = _topk.topk_compress(
-        _as_single_row(x), k, block_rows=cfg.block_rows,
+        rows, k, sign=sign, block_rows=cfg.block_rows,
         interpret=cfg._interpret())
-    bits = bitlib.bits_topk_counted(d, jnp.sum(cnt), op.value_bits)
-    return _restore(sel, x), bits
-
-
-def _run_signtopk_global(op: SignSparsifier, key, x, cfg):
-    d = x.size
-    k = resolve_k(op.k, d)
-    sel, _mem, cnt = _topk.topk_compress(
-        _as_single_row(x), k, sign=True, block_rows=cfg.block_rows,
-        interpret=cfg._interpret())
-    bits = bitlib.bits_signtopk_counted(d, jnp.sum(cnt))
-    return _restore(sel, x), bits
-
-
-def _run_row_topk(op: RowTopK, key, x, cfg):
-    d = x.size
-    row = _row_len_of(op, x.shape)
-    k = resolve_k(op.k, row)
-    acc = _as_rows(x, row)
-    sel, _mem, cnt = _topk.topk_compress(
-        acc, k, block_rows=cfg.block_rows, interpret=cfg._interpret())
-    nrows = acc.shape[0]
-    bits = (jnp.float32(32 * nrows)
-            + bitlib.bits_topk_counted(row, jnp.sum(cnt), op.value_bits)
-            - jnp.float32(32))
-    return _restore(sel, x), bits
-
-
-def _run_row_signtopk(op: RowSignTopK, key, x, cfg):
-    d = x.size
-    row = _row_len_of(op, x.shape)
-    k = resolve_k(op.k, row)
-    acc = _as_rows(x, row)
-    sel, _mem, cnt = _topk.topk_compress(
-        acc, k, sign=True, block_rows=cfg.block_rows,
-        interpret=cfg._interpret())
-    nrows = acc.shape[0]
-    bits = (jnp.float32(32 * nrows)
-            + bitlib.bits_signtopk_counted(row, jnp.sum(cnt))
-            - jnp.float32(32))
-    return _restore(sel, x), bits
+    return _restore(sel, x), bits_of(jnp.sum(cnt))
 
 
 def _run_qsgd(op: QSGDQuantizer, key, x, cfg):
@@ -237,26 +268,26 @@ RULES: tuple[KernelRule, ...] = (
         "topk_global",
         lambda op: type(op) is TopK,
         lambda op, shape, cfg: _global_row_ok(shape, cfg),
-        _run_topk_global,
+        functools.partial(_run_topk_family, "topk_global"),
     ),
     KernelRule(
         "row_topk",
         lambda op: type(op) is RowTopK,
         lambda op, shape, cfg: _rows_ok(op, shape, cfg),
-        _run_row_topk,
+        functools.partial(_run_topk_family, "row_topk"),
     ),
     KernelRule(
         "signtopk_global",
         lambda op: (type(op) is SignSparsifier and op.sparsifier == "top"
                     and op.m == 2),
         lambda op, shape, cfg: _global_row_ok(shape, cfg),
-        _run_signtopk_global,
+        functools.partial(_run_topk_family, "signtopk_global"),
     ),
     KernelRule(
         "row_signtopk",
         lambda op: type(op) is RowSignTopK and op.m == 2,
         lambda op, shape, cfg: _rows_ok(op, shape, cfg),
-        _run_row_signtopk,
+        functools.partial(_run_topk_family, "row_signtopk"),
     ),
     KernelRule(
         "qsgd_global",
@@ -291,7 +322,7 @@ def would_dispatch(op: CompressionOp, shape: tuple, dtype=jnp.float32,
 
 
 # ---------------------------------------------------------------------------
-# raw row-kernel entry (shard-local compressors in core/distributed.py)
+# raw row-kernel entries (shard-local compressors in core/distributed.py)
 # ---------------------------------------------------------------------------
 
 
@@ -313,6 +344,15 @@ def rows_eligible(row_len: int, cfg: Optional[DispatchConfig] = None,
     return True
 
 
+def compact_rows_eligible(row_len: int, kcap: int,
+                          cfg: Optional[DispatchConfig] = None,
+                          leaf_size: Optional[int] = None) -> bool:
+    """Can [rows, row_len] blocks go through the *compact* kernel?
+    The dense row policy plus the survivor-capacity VMEM bound."""
+    cfg = _resolve(cfg)
+    return rows_eligible(row_len, cfg, leaf_size) and kcap <= cfg.max_cap
+
+
 def topk_rows(rows: jnp.ndarray, k: int, *, sign: bool = False,
               cfg: Optional[DispatchConfig] = None):
     """Kernel Top_k/SignTop_k over pre-shaped [rows, n] blocks.
@@ -324,6 +364,130 @@ def topk_rows(rows: jnp.ndarray, k: int, *, sign: bool = False,
     return _topk.topk_compress(
         rows, k, sign=sign, block_rows=cfg.block_rows,
         interpret=cfg._interpret())
+
+
+def compact_rows(rows: jnp.ndarray, k: int, kcap: int, *,
+                 sign: bool = False,
+                 cfg: Optional[DispatchConfig] = None,
+                 leaf_size: Optional[int] = None):
+    """Compact Top_k/SignTop_k over pre-shaped [rows, n] blocks.
+
+    Kernel when :func:`compact_rows_eligible`, else the scatter-free
+    jnp oracle (``ref.topk_compact_ref``) — identical outputs either
+    way, and both forms are sort-free (they trace without ``lax.top_k``,
+    which the 0.4.x SPMD partitioner cannot partition inside
+    partial-manual shard_map regions).
+
+    Returns (idx [rows, kcap] int32, val [rows, kcap] f32,
+    new_mem [rows, n] f32, cnt [rows] int32); empty slots carry the
+    out-of-row sentinel (idx = n, val = 0) — see DESIGN.md §3.3.
+    """
+    cfg = _resolve(cfg)
+    n = rows.shape[1]
+    if compact_rows_eligible(n, kcap, cfg, leaf_size=leaf_size):
+        return _topk.topk_compact(
+            rows, k, kcap, sign=sign, block_rows=cfg.block_rows,
+            interpret=cfg._interpret())
+    from repro.kernels.ref import topk_compact_ref
+    return topk_compact_ref(rows.astype(jnp.float32), k, kcap, sign=sign)
+
+
+# ---------------------------------------------------------------------------
+# compact leaf compression (the sparse wire format)
+# ---------------------------------------------------------------------------
+
+
+class CompactLeaf(NamedTuple):
+    """One leaf in compact wire form (DESIGN.md §3.3).
+
+    idx/val are [rows, kcap] survivor buffers (rows = 1 for the global
+    operators); slot j of row r holds the j-th surviving coordinate of
+    that compression row in ascending index order, indices row-local.
+    Slots past the row's survivor count hold (idx = row_len, val = 0) —
+    the out-of-row sentinel a scatter-add decoder drops, so fixed-size
+    buffers allgather without a decoded length.  ``mem`` is the fused
+    error memory (leaf shape, f32) and ``bits`` the counted wire cost.
+    """
+
+    idx: jnp.ndarray
+    val: jnp.ndarray
+    mem: jnp.ndarray
+    bits: jnp.ndarray
+    row_len: int
+    kcap: int
+
+
+def decode_rows(idx: jnp.ndarray, val: jnp.ndarray,
+                row_len: int) -> jnp.ndarray:
+    """THE compact-buffer decoder: per-row scatter-add of [rows, kcap]
+    (idx, val) into dense [rows, row_len] f32.  Out-of-row sentinel
+    indices (empty slots, §3.3) drop; every consumer of the wire format
+    decodes through here so the convention lives in one place."""
+    out = jnp.zeros((idx.shape[0], row_len), jnp.float32)
+    return jax.vmap(lambda o, i, v: o.at[i].add(v, mode="drop"))(
+        out, idx, val)
+
+
+def densify_compact(leaf: CompactLeaf, shape, dtype=jnp.float32):
+    """Dense decode of a CompactLeaf: scatter-add rows, unpad, reshape
+    to the original leaf shape."""
+    out = decode_rows(leaf.idx, leaf.val, leaf.row_len)
+    return out.reshape(-1)[: _size(tuple(shape))].reshape(shape).astype(dtype)
+
+
+def would_compact(op: CompressionOp, shape: tuple, dtype=jnp.float32,
+                  cfg: Optional[DispatchConfig] = None) -> bool:
+    """True iff compact_compress would use the compact *kernel* (the
+    fallback oracle produces the same wire form either way)."""
+    cfg = _resolve(cfg)
+    rule = next((r for r in RULES
+                 if r.name in TOPK_FAMILY and r.matches(op)), None)
+    if rule is None or not jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        return False
+    d = _size(shape)
+    if rule.name in ("topk_global", "signtopk_global"):
+        n = _padded_len(d, LANES)
+        k = resolve_k(op.k, d)
+    else:
+        n = _row_len_of(op, shape)
+        k = resolve_k(op.k, n)
+    return compact_rows_eligible(n, capacity(k, n), cfg, leaf_size=d)
+
+
+def compact_compress(op: CompressionOp, key, x: jnp.ndarray,
+                     cfg: Optional[DispatchConfig] = None
+                     ) -> tuple[CompactLeaf, bool]:
+    """Compact-form counterpart of :func:`compress_leaf` for the Top_k
+    family (TopK / SignTopK(m=2) / RowTopK / RowSignTopK).
+
+    Returns (CompactLeaf, used_kernel).  The fallback is the
+    scatter-free reference oracle, not a dense compress: callers always
+    get the compact wire form.  Ops outside the family raise TypeError
+    (they have no sparse wire format — use compress_leaf).
+    """
+    cfg = _resolve(cfg)
+    rule = next((r for r in RULES
+                 if r.name in TOPK_FAMILY and r.matches(op)), None)
+    if rule is None:
+        raise TypeError(
+            f"{type(op).__name__} has no compact wire form; "
+            "compact_compress serves the Top_k family only")
+    rows, k, sign, bits_of = _plan_topk(rule.name, op, x)
+    n = rows.shape[1]
+    kcap = capacity(k, n)
+    # route on would_compact so the probe and the execution agree
+    # (its dtype guard included — compact_rows alone never sees x.dtype)
+    used = would_compact(op, x.shape, x.dtype, cfg)
+    if used:
+        idx, val, mem, cnt = _topk.topk_compact(
+            rows, k, kcap, sign=sign, block_rows=cfg.block_rows,
+            interpret=cfg._interpret())
+    else:
+        from repro.kernels.ref import topk_compact_ref
+        idx, val, mem, cnt = topk_compact_ref(rows, k, kcap, sign=sign)
+    mem_leaf = mem.reshape(-1)[: x.size].reshape(x.shape)
+    bits = jnp.asarray(bits_of(jnp.sum(cnt)), jnp.float32)
+    return CompactLeaf(idx, val, mem_leaf, bits, n, kcap), used
 
 
 # ---------------------------------------------------------------------------
@@ -347,11 +511,74 @@ def compress_leaf(op: CompressionOp, key, x: jnp.ndarray,
     return out, jnp.asarray(bits, jnp.float32), True
 
 
+def _compress_leaves_packed(ops, keys, leaves, cfg):
+    """Megabuffer-packed leaf compression (DESIGN.md §3.4).
+
+    Kernel-eligible leaves are bucketed by launch signature —
+    (row length, k, sign) for the Top_k family, (row length, s) for
+    QSGD — and each bucket's pre-shaped rows are concatenated into one
+    padded megabuffer for a single kernel launch.  The kernels are
+    row-independent, so per-leaf outputs, error memories and counted
+    bits are identical to the leaf-by-leaf path; only the launch count
+    changes (one per populated bucket instead of one per leaf).
+    """
+    n = len(leaves)
+    outs: list = [None] * n
+    bit_terms: list = [None] * n
+    topk_buckets: dict = {}
+    qsgd_buckets: dict = {}
+    for i, (op, key, x) in enumerate(zip(ops, keys, leaves)):
+        rule = select_rule(op, x.shape, x.dtype, cfg)
+        if rule is None:
+            out, bits = op(key, x)
+            outs[i] = out
+            bit_terms[i] = jnp.asarray(bits, jnp.float32)
+        elif rule.name == "qsgd_global":
+            flat = x.reshape(-1).astype(jnp.float32)
+            u = jax.random.uniform(key, flat.shape)
+            row = _pad_to(flat, LANES)[None, :]
+            urow = _pad_to(u, LANES)[None, :]
+            qsgd_buckets.setdefault((row.shape[1], op.s), []).append(
+                (i, row, urow, op, x))
+        else:
+            rows, k, sign, bits_of = _plan_topk(rule.name, op, x)
+            topk_buckets.setdefault((rows.shape[1], k, sign), []).append(
+                (i, rows, bits_of, x))
+    for (_, k, sign), entries in topk_buckets.items():
+        mega = (entries[0][1] if len(entries) == 1
+                else jnp.concatenate([e[1] for e in entries], axis=0))
+        sel, _mem, cnt = _topk.topk_compress(
+            mega, k, sign=sign, block_rows=cfg.block_rows,
+            interpret=cfg._interpret())
+        off = 0
+        for i, rows, bits_of, x in entries:
+            r = rows.shape[0]
+            outs[i] = _restore(sel[off:off + r], x)
+            bit_terms[i] = jnp.asarray(
+                bits_of(jnp.sum(cnt[off:off + r])), jnp.float32)
+            off += r
+    for (_, s), entries in qsgd_buckets.items():
+        mega = (entries[0][1] if len(entries) == 1
+                else jnp.concatenate([e[1] for e in entries], axis=0))
+        megau = (entries[0][2] if len(entries) == 1
+                 else jnp.concatenate([e[2] for e in entries], axis=0))
+        out = _qsgd.qsgd_quantize(mega, megau, s, block_rows=cfg.block_rows,
+                                  interpret=cfg._interpret())
+        for off, (i, _row, _urow, op, x) in enumerate(entries):
+            o = _restore(out[off:off + 1], x)
+            outs[i] = o
+            bit_terms[i] = jnp.asarray(
+                bitlib.bits_qsgd(x.size, op.s, jnp.sum(o != 0.0)),
+                jnp.float32)
+    return outs, bit_terms
+
+
 def compress_tree(op_tree, key, grads,
                   cfg: Optional[DispatchConfig] = None):
     """Kernel-aware counterpart of ``operators.compress_tree``: same
     operator-broadcast, key-splitting and bits-summing semantics, with
-    each leaf routed through :func:`compress_leaf`."""
+    each leaf routed through the kernels (megabuffer-packed per
+    operator family when ``cfg.pack``) or :func:`compress_leaf`."""
     cfg = _resolve(cfg)
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     ops = ops_for_leaves(op_tree, len(leaves))
@@ -359,10 +586,13 @@ def compress_tree(op_tree, key, grads,
         keys = jax.random.split(key, len(leaves))
     else:
         keys = [None] * len(leaves)
-    outs, bit_terms = [], []
-    for op, k, g in zip(ops, keys, leaves):
-        o, b, _ = compress_leaf(op, k, g, cfg)
-        outs.append(o)
-        bit_terms.append(b)
+    if cfg.pack and cfg.kernels_enabled():
+        outs, bit_terms = _compress_leaves_packed(ops, keys, leaves, cfg)
+    else:
+        outs, bit_terms = [], []
+        for op, k, g in zip(ops, keys, leaves):
+            o, b, _ = compress_leaf(op, k, g, cfg)
+            outs.append(o)
+            bit_terms.append(b)
     total = jnp.sum(jnp.stack(bit_terms)) if bit_terms else jnp.float32(0)
     return jax.tree_util.tree_unflatten(treedef, outs), total

@@ -1,0 +1,21 @@
+"""Trace-time kernel-launch accounting, shared by all kernel families.
+
+Each python-level kernel-wrapper call is one ``pallas_call`` site in
+the traced program (vmap/grid batching does not multiply it), so
+benchmarks measure launches-per-sync-round by resetting, tracing, and
+reading.  Kept in its own module so kernel families don't import each
+other just to count.
+"""
+
+from __future__ import annotations
+
+LAUNCHES = {"topk_compress": 0, "topk_compact": 0, "qsgd": 0}
+
+
+def reset_launches() -> None:
+    for k in LAUNCHES:
+        LAUNCHES[k] = 0
+
+
+def total_launches() -> int:
+    return sum(LAUNCHES.values())

@@ -30,6 +30,14 @@ def topk_compress(acc, k: int, *, iters: int = 24, sign: bool = False,
                                interpret=_auto_interpret(interpret))
 
 
+@partial(jax.jit, static_argnames=("k", "kcap", "iters", "sign",
+                                   "interpret"))
+def topk_compact(acc, k: int, kcap: int, *, iters: int = 24,
+                 sign: bool = False, interpret: bool | None = None):
+    return _topk.topk_compact(acc, k, kcap, iters=iters, sign=sign,
+                              interpret=_auto_interpret(interpret))
+
+
 @partial(jax.jit, static_argnames=("window", "q_block", "kv_block",
                                    "interpret"))
 def flash_attention(q, k, v, *, window: int = -1, q_block: int = 128,

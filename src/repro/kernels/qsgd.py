@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.launch_stats import LAUNCHES
+
 
 def _kernel(x_ref, u_ref, o_ref, *, s: int):
     x = x_ref[...].astype(jnp.float32)
@@ -34,6 +36,7 @@ def _kernel(x_ref, u_ref, o_ref, *, s: int):
 def qsgd_quantize(x: jax.Array, u: jax.Array, s: int, *,
                   block_rows: int = 8, interpret: bool = False):
     """x, u: [buckets, n] -> dequantized [buckets, n] (f32)."""
+    LAUNCHES["qsgd"] += 1
     rows, n = x.shape
     br = min(block_rows, rows)
     pad = (-rows) % br

@@ -63,6 +63,85 @@ def topk_compress_ref(acc: jnp.ndarray, k: int, *, iters: int = 24,
     return sel, new_mem, cnt
 
 
+def topk_compact_ref(acc: jnp.ndarray, k: int, kcap: int, *,
+                     iters: int = 24, sign: bool = False, chunk: int = 256):
+    """Oracle for the compact-emitting kernel (``topk_compact``).
+
+    Same threshold selection as :func:`topk_compress_ref`; survivors are
+    then compacted into ``(idx, val)`` buffers of capacity ``kcap`` per
+    row, slots filled in ascending index order, empty slots carrying the
+    out-of-row sentinel ``(idx=n, val=0)`` that a scatter-add decoder
+    drops.  Survivors past ``kcap`` (heavy ties only) stay in the error
+    memory instead of crossing the wire.
+
+    Deliberately sort- and scatter-free (prefix-sum slots + chunked
+    one-hot contraction): this is also the *fallback* compact path
+    inside 0.4.x partial-manual shard_map regions, where ``lax.top_k``
+    and scatters crash the SPMD partitioner (DESIGN.md §4.1).
+
+    Returns (idx [rows, kcap] int32, val [rows, kcap] f32,
+    new_mem [rows, n] f32, cnt [rows] int32).
+    """
+    acc = acc.astype(jnp.float32)
+    rows, n = acc.shape
+    a = jnp.abs(acc)
+    hi = jnp.max(a, axis=1, keepdims=True)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum(a >= mid, axis=1, keepdims=True)
+        lo = jnp.where(cnt > k, mid, lo)
+        hi = jnp.where(cnt > k, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    c_hi = jnp.sum(a >= hi, axis=1, keepdims=True)
+    thr = jnp.where(c_hi >= k, hi, lo)
+    mask = (a >= thr) & (a > 0.0)
+    pos = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1
+    emit = mask & (pos < kcap)
+    cnt = jnp.sum(emit, axis=1).astype(jnp.int32)
+    sel = jnp.where(emit, acc, 0.0)
+    if sign:
+        norm = jnp.sqrt(jnp.sum(jnp.square(sel), axis=1, keepdims=True))
+        denom = jnp.maximum(cnt[:, None].astype(jnp.float32), 1.0)
+        sel = jnp.where(emit, jnp.sign(acc) * norm / denom, 0.0)
+    new_mem = acc - sel
+    # chunked one-hot contraction bounds the [rows, chunk, kcap]
+    # intermediate; rows are zero-padded to a chunk multiple (padding
+    # never emits).
+    pad = (-n) % chunk
+    if pad:
+        pos = jnp.pad(pos, ((0, 0), (0, pad)))
+        emit = jnp.pad(emit, ((0, 0), (0, pad)))
+        sel_p = jnp.pad(sel, ((0, 0), (0, pad)))
+    else:
+        sel_p = sel
+    cols = jnp.arange(kcap)[None, None, :]
+    lane = jnp.arange(chunk)[None, :]
+
+    def cbody(g, carry):
+        idx_acc, val_acc = carry
+        p = jax.lax.dynamic_slice(pos, (0, g * chunk), (rows, chunk))
+        e = jax.lax.dynamic_slice(emit, (0, g * chunk), (rows, chunk))
+        v = jax.lax.dynamic_slice(sel_p, (0, g * chunk), (rows, chunk))
+        oh = ((p[:, :, None] == cols) & e[:, :, None]).astype(jnp.float32)
+        gidx = jnp.broadcast_to((g * chunk + lane).astype(jnp.float32),
+                                (rows, chunk))
+        val_acc = val_acc + jnp.einsum("rc,rcj->rj", v, oh)
+        idx_acc = idx_acc + jnp.einsum("rc,rcj->rj", gidx, oh)
+        return idx_acc, val_acc
+
+    zeros = jnp.zeros((rows, kcap), jnp.float32)
+    idx_acc, val_acc = jax.lax.fori_loop(0, (n + pad) // chunk, cbody,
+                                         (zeros, zeros))
+    slot = jnp.arange(kcap)[None, :]
+    idx = jnp.where(slot < cnt[:, None], idx_acc.astype(jnp.int32), n)
+    return idx, val_acc, new_mem, cnt
+
+
 # ---------------------------------------------------------------------------
 # flash attention (causal, optional sliding window), GQA
 # ---------------------------------------------------------------------------

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused blockwise top-k compression + error update.
+"""Pallas TPU kernels: fused blockwise top-k compression + error update.
 
 The paper's per-sync hot spot: compressing a ~25M-element accumulator
 (m + x - x̂) with Top_k.  A GPU implementation radix-selects; on TPU we
@@ -8,6 +8,19 @@ and no MXU involvement — then a masked select, the optional 1-bit
 Sign quantization of the survivors (SignTop_k, Lemma 3), and the fused
 error-memory update ``m' = acc - selected``, all in one VMEM residency
 of the block.  See DESIGN.md §3 (hardware adaptation).
+
+Two emission modes share the threshold search:
+
+  * :func:`topk_compress` — *dense* survivors (zeros elsewhere), the
+    input to a dense psum/pmean aggregation;
+  * :func:`topk_compact` — *compact* ``(idx int32, val f32)`` survivor
+    buffers of capacity ``kcap`` per row, written directly via an
+    in-kernel prefix-sum compaction (cumsum of the survivor mask gives
+    each survivor its output slot; a chunked one-hot matmul performs
+    the slot scatter on the MXU — TPUs have no vector scatter).  This
+    is the wire form of ``aggregate="sparse_allgather"`` and is sort-
+    free, so it also partitions under the 0.4.x SPMD partitioner where
+    ``lax.top_k`` hard-crashes (DESIGN.md §3.3, §4.1).
 
 Grid: one program per row-block.  Block shape (ROWS, n) where n is the
 row length (the shard-local compression row, typically 1-8k) — (8, 512)
@@ -22,11 +35,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.launch_stats import LAUNCHES
 
-def _kernel(acc_ref, sel_ref, mem_ref, cnt_ref, *, k: int, iters: int,
-            sign: bool):
-    acc = acc_ref[...].astype(jnp.float32)        # [ROWS, N]
-    a = jnp.abs(acc)
+
+def _bisect_threshold(a: jnp.ndarray, k: int, iters: int) -> jnp.ndarray:
+    """Per-row magnitude threshold keeping ~k entries of ``a`` (= |acc|).
+
+    Maintains cnt(a >= lo) > k >= cnt(a >= hi); generically (distinct
+    magnitudes, interval narrower than the k-th/k+1-th gap) the hi bound
+    keeps exactly k.  If ties or the iteration budget leave
+    cnt(a >= hi) < k, fall back to lo, which keeps >= k (a strictly
+    better sparsifier).
+    """
     hi = jnp.max(a, axis=1, keepdims=True)
     lo = jnp.zeros_like(hi)
 
@@ -40,13 +60,15 @@ def _kernel(acc_ref, sel_ref, mem_ref, cnt_ref, *, k: int, iters: int,
         return lo, hi
 
     lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
-    # Exact-k selection: the bisection invariant is cnt(a >= lo) > k and
-    # cnt(a >= hi) <= k, so generically (distinct magnitudes, interval
-    # narrower than the k-th/k+1-th gap) the hi threshold keeps exactly k
-    # entries.  If ties or the iteration budget leave cnt(a >= hi) < k,
-    # fall back to lo, which keeps >= k (a strictly better sparsifier).
     c_hi = jnp.sum((a >= hi).astype(jnp.int32), axis=1, keepdims=True)
-    thr = jnp.where(c_hi >= k, hi, lo)
+    return jnp.where(c_hi >= k, hi, lo)
+
+
+def _kernel(acc_ref, sel_ref, mem_ref, cnt_ref, *, k: int, iters: int,
+            sign: bool):
+    acc = acc_ref[...].astype(jnp.float32)        # [ROWS, N]
+    a = jnp.abs(acc)
+    thr = _bisect_threshold(a, k, iters)
     # exact zeros are never survivors (zero-padded / all-zero rows must
     # not count toward the wire-bits ledger)
     mask = (a >= thr) & (a > 0.0)
@@ -70,6 +92,7 @@ def topk_compress(acc: jax.Array, k: int, *, iters: int = 24,
     block_rows = 8 that is ~0.8 MB, comfortably inside the ~16 MB VMEM
     budget with double buffering.
     """
+    LAUNCHES["topk_compress"] += 1
     rows, n = acc.shape
     br = min(block_rows, rows)
     pad = (-rows) % br
@@ -96,3 +119,109 @@ def topk_compress(acc: jax.Array, k: int, *, iters: int = 24,
     if pad:
         sel, mem, cnt = sel[:rows], mem[:rows], cnt[:rows]
     return sel, mem, cnt
+
+
+# ---------------------------------------------------------------------------
+# compact emission (the sparse wire format)
+# ---------------------------------------------------------------------------
+
+
+def _compact_kernel(acc_ref, idx_ref, val_ref, mem_ref, cnt_ref, *, k: int,
+                    kcap: int, iters: int, sign: bool, chunk: int):
+    acc = acc_ref[...].astype(jnp.float32)        # [ROWS, N]
+    rows, n = acc.shape
+    a = jnp.abs(acc)
+    thr = _bisect_threshold(a, k, iters)
+    mask = (a >= thr) & (a > 0.0)
+    # prefix-sum compaction: each survivor's output slot is the count of
+    # survivors strictly before it in the row.  Survivors past the
+    # buffer capacity (only possible under heavy ties) are dropped from
+    # the wire; the fused memory update below absorbs them.
+    pos = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1
+    emit = mask & (pos < kcap)
+    cnt = jnp.sum(emit.astype(jnp.int32), axis=1)
+    sel = jnp.where(emit, acc, 0.0)
+    if sign:
+        norm = jnp.sqrt(jnp.sum(sel * sel, axis=1, keepdims=True))
+        denom = jnp.maximum(cnt[:, None].astype(jnp.float32), 1.0)
+        sel = jnp.where(emit, jnp.sign(acc) * norm / denom, 0.0)
+    mem_ref[...] = (acc - sel).astype(mem_ref.dtype)
+    cnt_ref[...] = cnt.astype(jnp.int32)
+    # slot scatter as a chunked one-hot matmul: TPUs have no vector
+    # scatter, but onehot[r, c, j] = [pos == j & emit] contracted
+    # against the values (and against the global indices) on the MXU
+    # writes every chunk's survivors to their slots.  f32 holds indices
+    # exactly up to 2^24 >> max_row.
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, 1, kcap), 2)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, chunk), 1)
+
+    def body(g, carry):
+        idx_acc, val_acc = carry
+        p = jax.lax.dynamic_slice(pos, (0, g * chunk), (rows, chunk))
+        e = jax.lax.dynamic_slice(emit, (0, g * chunk), (rows, chunk))
+        v = jax.lax.dynamic_slice(sel, (0, g * chunk), (rows, chunk))
+        oh = ((p[:, :, None] == cols) & e[:, :, None]).astype(jnp.float32)
+        gidx = jnp.broadcast_to((g * chunk + lane).astype(jnp.float32),
+                                (rows, chunk))
+        val_acc = val_acc + jnp.einsum(
+            "rc,rcj->rj", v, oh, preferred_element_type=jnp.float32)
+        idx_acc = idx_acc + jnp.einsum(
+            "rc,rcj->rj", gidx, oh, preferred_element_type=jnp.float32)
+        return idx_acc, val_acc
+
+    zeros = jnp.zeros((rows, kcap), jnp.float32)
+    idx_acc, val_acc = jax.lax.fori_loop(0, n // chunk, body, (zeros, zeros))
+    # empty slots carry the sentinel index n (one past the row): the
+    # decoder's scatter-add drops out-of-bounds writes, so a gathered
+    # buffer never needs its count to be decoded.
+    slot = jax.lax.broadcasted_iota(jnp.int32, (rows, kcap), 1)
+    idx_ref[...] = jnp.where(slot < cnt[:, None],
+                             idx_acc.astype(jnp.int32), n)
+    val_ref[...] = val_acc.astype(val_ref.dtype)
+
+
+def topk_compact(acc: jax.Array, k: int, kcap: int, *, iters: int = 24,
+                 sign: bool = False, block_rows: int = 8, chunk: int = 128,
+                 interpret: bool = False):
+    """Compact Top_k: [rows, n] -> (idx [rows, kcap] int32,
+    val [rows, kcap] f32, new_mem [rows, n] f32, cnt [rows] int32).
+
+    Survivor slots are filled in ascending index order; slots past
+    ``cnt[r]`` hold ``(idx=n, val=0)`` — the out-of-row sentinel that a
+    scatter-add decoder drops.  ``n`` must be a multiple of ``chunk``
+    (the dispatch layer lane-aligns rows).  VMEM per program adds the
+    (block_rows, chunk, kcap) one-hot to the dense-kernel budget —
+    ~4 MB at (8, 128, 1024) f32, so dispatch caps kcap (``max_cap``).
+    """
+    LAUNCHES["topk_compact"] += 1
+    rows, n = acc.shape
+    if n % chunk:
+        raise ValueError(f"row length {n} not a multiple of chunk {chunk}")
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        acc = jnp.pad(acc, ((0, pad), (0, 0)))
+    grid = (acc.shape[0] // br,)
+    kern = functools.partial(_compact_kernel, k=k, kcap=kcap, iters=iters,
+                             sign=sign, chunk=chunk)
+    idx, val, mem, cnt = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((br, kcap), lambda i: (i, 0)),
+            pl.BlockSpec((br, kcap), lambda i: (i, 0)),
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((acc.shape[0], kcap), jnp.int32),
+            jax.ShapeDtypeStruct((acc.shape[0], kcap), jnp.float32),
+            jax.ShapeDtypeStruct(acc.shape, jnp.float32),
+            jax.ShapeDtypeStruct((acc.shape[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(acc)
+    if pad:
+        idx, val, mem, cnt = idx[:rows], val[:rows], mem[:rows], cnt[:rows]
+    return idx, val, mem, cnt

@@ -315,6 +315,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             compiled = low.compile()
             mem = compiled.memory_analysis()
             ca = compiled.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):  # 0.4.x: list of one dict
+                ca = ca[0] if ca else {}
             coll = collective_bytes(compiled.as_text())
             record["steps"][name] = {
                 "compile_s": round(time.time() - t1, 1),

@@ -54,6 +54,10 @@ def main():
                     help="compression kernel routing (kernels/dispatch.py): "
                          "auto = fused Pallas Top_k on TPU, reference "
                          "elsewhere")
+    ap.add_argument("--aggregate", default="dense_psum",
+                    choices=["dense_psum", "sparse_allgather"],
+                    help="sync aggregation: dense psum, or compact "
+                         "(idx, val) allgather (the sparse wire format)")
     ap.add_argument("--zero1", action="store_true")
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--ckpt", default=None)
@@ -79,7 +83,7 @@ def main():
         grad_fn, momentum_sgd(0.9),
         ShardCompressor(args.compressor, args.k_frac, dispatch=args.dispatch),
         warmup_piecewise(args.lr, 5, [int(args.steps * 0.8)]),
-        mesh, daxes, specs, zero1=args.zero1,
+        mesh, daxes, specs, zero1=args.zero1, aggregate=args.aggregate,
     )
     from jax.sharding import NamedSharding
     params = model.init_params(jax.random.PRNGKey(0), cfg)

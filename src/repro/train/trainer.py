@@ -4,7 +4,9 @@ Both paper algorithms run through ``core/engine.py``: the synchronous
 schedule (Algorithm 1) is a [T] mask broadcast to all workers, the
 asynchronous one (Algorithm 2) a [T, R] per-worker mask.  Compression
 dispatches to the Pallas kernels per ``RunConfig.dispatch``
-("auto" | "kernel" | "reference"; see kernels/dispatch.py).
+("auto" | "kernel" | "reference"; see kernels/dispatch.py), with
+same-operator leaves megabuffer-packed into one kernel launch per
+family per sync round (``RunConfig.pack``, DESIGN.md §3.4).
 
 Handles: sync/async schedules, LR schedules, the bits ledger (the
 paper's evaluation axis), periodic eval, target-loss early stats (bits
@@ -41,6 +43,7 @@ class RunConfig:
     ckpt_every: int = 0
     target_loss: Optional[float] = None
     dispatch: str = "auto"  # "auto" | "kernel" | "reference"
+    pack: bool = True       # megabuffer-pack same-operator leaves per round
 
 
 @dataclasses.dataclass
@@ -91,7 +94,7 @@ def train(
     key = jax.random.PRNGKey(run.seed)
     hist = History()
     t0 = time.time()
-    dispatch = DispatchConfig(mode=run.dispatch)
+    dispatch = DispatchConfig(mode=run.dispatch, pack=run.pack)
     state = engine.init(params, inner_opt, run.R)
     step_fn = jax.jit(engine.make_step(
         grad_fn, inner_opt, operator, lr_schedule, run.R,

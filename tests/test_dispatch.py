@@ -200,6 +200,203 @@ def test_qsparse_wrapper_matches_engine():
     assert int(w_state.rounds) == int(e_state.rounds)
 
 
+# ---------------------------------------------------------------------------
+# compact wire path (kernel compact emission, DESIGN.md §3.3)
+# ---------------------------------------------------------------------------
+
+
+def test_compact_rows_matches_lax_topk():
+    """Kernel compact survivors == lax.top_k selection on tie-free rows
+    (same index set, same values; compact fills slots in ascending index
+    order while lax.top_k sorts by magnitude, so compare as sets)."""
+    x = tie_free(jax.random.PRNGKey(20), (8, 512))
+    k, kcap = 32, dsp.capacity(32, 512)
+    idx, val, mem, cnt = dsp.compact_rows(x, k, kcap, cfg=KERNEL)
+    _tv, ti = jax.lax.top_k(jnp.abs(x), k)
+    np.testing.assert_array_equal(np.asarray(cnt), k)
+    for r in range(x.shape[0]):
+        assert set(np.asarray(idx[r, :k])) == set(np.asarray(ti[r]))
+        np.testing.assert_allclose(
+            np.sort(np.asarray(val[r, :k])),
+            np.sort(np.asarray(x[r, np.asarray(idx[r, :k])])), rtol=1e-6)
+    # empty slots: out-of-row sentinel index, zero value
+    np.testing.assert_array_equal(np.asarray(idx[:, k:]), x.shape[1])
+    np.testing.assert_array_equal(np.asarray(val[:, k:]), 0.0)
+
+
+@pytest.mark.parametrize("sign", [False, True])
+def test_compact_densify_matches_dense_kernel(sign):
+    """_densify(compact) == the dense kernel's output, and the fused
+    error memories and survivor counts agree — compact emission is the
+    same selection, different wire format."""
+    from repro.core.distributed import _densify
+
+    x = tie_free(jax.random.PRNGKey(21), (16, 384))
+    k, kcap = 24, dsp.capacity(24, 384)
+    idx, val, mem_c, cnt_c = dsp.compact_rows(x, k, kcap, sign=sign,
+                                              cfg=KERNEL)
+    sel_d, mem_d, cnt_d = dsp.topk_rows(x, k, sign=sign, cfg=KERNEL)
+    dense = _densify(idx, val, x.shape, x.ndim - 1)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(sel_d),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(mem_c), np.asarray(mem_d),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(cnt_c), np.asarray(cnt_d))
+
+
+@pytest.mark.parametrize("sign", [False, True])
+def test_compact_kernel_matches_reference_oracle(sign):
+    """Kernel compact == the scatter-free jnp oracle (the transparent
+    fallback), including on rows the kernel would not accept."""
+    from repro.kernels.ref import topk_compact_ref
+
+    x = tie_free(jax.random.PRNGKey(22), (8, 256))
+    k, kcap = 16, dsp.capacity(16, 256)
+    got = dsp.compact_rows(x, k, kcap, sign=sign, cfg=KERNEL)
+    want = topk_compact_ref(x, k, kcap, sign=sign)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+    # non-lane-aligned rows fall back to the oracle and still decode
+    y = tie_free(jax.random.PRNGKey(23), (4, 100))
+    idx, val, mem, cnt = dsp.compact_rows(y, 7, dsp.capacity(7, 100),
+                                          sign=sign, cfg=KERNEL)
+    dense = jax.vmap(lambda o, i, v: o.at[i].add(v, mode="drop"))(
+        jnp.zeros((4, 100)), idx, val)
+    np.testing.assert_allclose(np.asarray(y - dense), np.asarray(mem),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_compact_compress_leaf_parity_and_bits():
+    """Operator-level compact form: densify == the reference operator's
+    dense output and the counted bits equal the reference ledger on
+    tie-free inputs (exactly k survivors, exact zeros excluded)."""
+    cases = [
+        (ops.TopK(k=0.01), (96, 1024)),
+        (ops.SignSparsifier(k=0.01, m=2), (96, 1024)),
+        (ops.RowTopK(k=0.05, row_len=512), (64, 512)),
+        (ops.RowSignTopK(k=0.05, row_len=512, m=2), (64, 512)),
+    ]
+    for i, (op, shape) in enumerate(cases):
+        x = tie_free(jax.random.PRNGKey(24 + i), shape)
+        leaf, used = dsp.compact_compress(op, None, x, KERNEL)
+        assert used, type(op).__name__
+        dense = dsp.densify_compact(leaf, x.shape)
+        out_r, bits_r = op(jax.random.PRNGKey(3), x)
+        np.testing.assert_allclose(np.asarray(dense), np.asarray(out_r),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(float(leaf.bits), float(bits_r))
+        np.testing.assert_allclose(np.asarray(leaf.mem),
+                                   np.asarray(x - dense),
+                                   rtol=1e-5, atol=1e-5)
+    with pytest.raises(TypeError):
+        dsp.compact_compress(ops.QSGDQuantizer(s=15), None,
+                             tie_free(jax.random.PRNGKey(30), (96, 1024)),
+                             KERNEL)
+
+
+def test_shard_compressor_compact_counted_bits():
+    """axis_topk_compact charges counted bits (actual survivors, exact
+    zeros excluded) — the compact ledger equals the dense compressor's
+    on tie-free inputs, on both dispatch routes, and the fused error
+    memory rides along."""
+    from repro.core.distributed import _densify
+
+    g = {"w": tie_free(jax.random.PRNGKey(25), (256, 512))}
+    for mode in ("topk", "signtopk"):
+        for disp in ("kernel", "reference"):
+            c = ShardCompressor(mode=mode, k_frac=0.05, dispatch=disp)
+            payloads, _td, bits, mems = c.compact(g, None)
+            kind, idx, val, ax, moved = payloads[0]
+            assert kind == "sparse"
+            dense = _densify(idx, val, moved, ax)
+            out_d, bits_d = c(g, None)
+            np.testing.assert_allclose(np.asarray(dense),
+                                       np.asarray(out_d["w"]),
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(float(bits), float(bits_d))
+            np.testing.assert_allclose(np.asarray(mems["w"]),
+                                       np.asarray(g["w"] - dense),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_compact_bits_exclude_zero_rows():
+    """All-zero compression rows transmit no survivors: counted bits
+    charge only the per-row scale fields, matching the dense path."""
+    x = jnp.zeros((4, 256))
+    idx, val, mem, cnt = dsp.compact_rows(x, 16, 128, cfg=KERNEL)
+    np.testing.assert_array_equal(np.asarray(cnt), 0)
+    np.testing.assert_array_equal(np.asarray(idx), 256)
+    np.testing.assert_array_equal(np.asarray(val), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# megabuffer packing (one kernel launch per operator family, §3.4)
+# ---------------------------------------------------------------------------
+
+
+def test_megabuffer_pack_roundtrip():
+    """Packed compress_tree == leaf-by-leaf compress_tree, per leaf
+    dtype and shape, with identical bits — and strictly fewer kernel
+    launches (>= 2x here: four same-bucket leaves share one launch)."""
+    key = jax.random.PRNGKey(26)
+    tree = {
+        "w1": tie_free(jax.random.PRNGKey(27), (96, 1024)),
+        "w2": tie_free(jax.random.PRNGKey(28), (96, 1024)),
+        "w3": tie_free(jax.random.PRNGKey(29), (48, 2048)),
+        "w4": tie_free(jax.random.PRNGKey(30), (1024, 96)),
+        "half": tie_free(jax.random.PRNGKey(31),
+                         (64, 512)).astype(jnp.bfloat16),
+        "small": jax.random.normal(jax.random.PRNGKey(32), (50,)),
+    }
+    op = ops.TopK(k=0.02)
+    packed_cfg = dsp.DispatchConfig(mode="kernel", pack=True)
+    unpacked_cfg = dsp.DispatchConfig(mode="kernel", pack=False)
+    dsp.reset_launches()
+    tp, bp = dsp.compress_tree(op, key, tree, packed_cfg)
+    packed_launches = dsp.total_launches()
+    dsp.reset_launches()
+    tu, bu = dsp.compress_tree(op, key, tree, unpacked_cfg)
+    unpacked_launches = dsp.total_launches()
+    for name, leaf in tree.items():
+        assert tp[name].shape == leaf.shape
+        assert tp[name].dtype == tu[name].dtype
+        np.testing.assert_allclose(
+            np.asarray(tp[name], np.float32),
+            np.asarray(tu[name], np.float32), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(bp), float(bu))
+    # w1/w2/w3/w4 all flatten to a 98304-element row -> one bucket; half
+    # (32768) and small (padded to 128 — mode="kernel" bypasses the
+    # min_size floor) get their own.  6 launches -> 3.
+    assert unpacked_launches >= 2 * packed_launches, (
+        packed_launches, unpacked_launches)
+
+
+def test_megabuffer_pack_mixed_families():
+    """Buckets are per (family, row length, k, sign): RowTopK rows,
+    sign variants and QSGD pack separately and correctly."""
+    key = jax.random.PRNGKey(33)
+    tree = {
+        "a": tie_free(jax.random.PRNGKey(34), (16, 512)),
+        "b": tie_free(jax.random.PRNGKey(35), (16, 512)),
+    }
+    for op in (ops.RowTopK(k=0.05, row_len=512),
+               ops.RowSignTopK(k=0.05, row_len=512, m=2),
+               ops.QSGDQuantizer(s=15)):
+        dsp.reset_launches()
+        tp, bp = dsp.compress_tree(
+            op, key, tree, dsp.DispatchConfig(mode="kernel", pack=True))
+        assert dsp.total_launches() == 1, type(op).__name__
+        tu, bu = dsp.compress_tree(
+            op, key, tree, dsp.DispatchConfig(mode="kernel", pack=False))
+        for name in tree:
+            np.testing.assert_allclose(np.asarray(tp[name]),
+                                       np.asarray(tu[name]),
+                                       rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(float(bp), float(bu))
+
+
 def test_shard_compressor_kernel_parity():
     """The distributed engine's shard-local compressor takes the same
     kernel path with identical outputs and wire bits."""

@@ -131,6 +131,80 @@ def test_zero1_equivalent(subproc):
     assert "ZERO1 EQUIV OK" in out
 
 
+SPARSE_ALLGATHER = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.compat import set_mesh
+from repro.core.distributed import make_dist_steps, ShardCompressor
+from repro.optim import sgd, constant
+
+# TP=2 partial-manual mesh: the configuration whose sparse path used to
+# hard-crash the 0.4.x SPMD partitioner through lax.top_k.
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+R, d_in, d_out = 4, 256, 16
+params = {"w": jnp.zeros((d_in, d_out)), "b": jnp.zeros((d_out,))}
+specs = {"w": P(None, "model"), "b": P("model")}
+params = jax.device_put(params, jax.tree.map(
+    lambda s: NamedSharding(mesh, s), specs,
+    is_leaf=lambda z: isinstance(z, P)))
+Wtrue = 0.3 * jax.random.normal(jax.random.PRNGKey(0), (d_in, d_out))
+
+def grad_fn(p, batch):
+    x, y = batch
+    f = lambda pp: jnp.mean((x @ pp["w"] + pp["b"] - y) ** 2)
+    return jax.value_and_grad(f)(p)
+
+masters, bits = [], []
+for aggregate, disp in (("dense_psum", "reference"),
+                        ("sparse_allgather", "kernel")):
+    # the dense baseline keeps reference dispatch: on 0.4.x a kernel
+    # output feeding an in-body pmean over an auto-axis-sharded operand
+    # trips IsManualSubgroup (ROADMAP open item); the sparse path's
+    # compact buffers leave the manual region via out_specs instead,
+    # so the kernel compact path does run inside this traced step.
+    init_fn, local_step, sync_step = make_dist_steps(
+        grad_fn, sgd(), ShardCompressor("topk", 0.05, dispatch=disp),
+        constant(0.05), mesh, ("data",), specs, aggregate=aggregate)
+    with set_mesh(mesh):
+        state = init_fn(params)
+        key = jax.random.PRNGKey(1)
+        kb, _ = jax.random.split(key)
+        x = jax.random.normal(kb, (R, 8, d_in))
+        y = jnp.einsum("rbi,io->rbo", x, Wtrue)
+        lowered = jax.jit(sync_step).lower(state, (x, y), key).as_text()
+        if aggregate == "sparse_allgather":
+            # acceptance: the kernel compact path is sort-free end to
+            # end; nothing in the traced sparse sync step needs the
+            # partitioner support 0.4.x lacks
+            assert "top_k" not in lowered, "lax.top_k leaked into sparse sync"
+            assert "sort(" not in lowered, "sort leaked into sparse sync"
+        ls, ss = jax.jit(local_step), jax.jit(sync_step)
+        for t in range(12):
+            key, s1, s2 = jax.random.split(key, 3)
+            x = jax.random.normal(s1, (R, 8, d_in))
+            y = jnp.einsum("rbi,io->rbo", x, Wtrue)
+            if (t + 1) % 4 == 0:
+                state, loss = ss(state, (x, y), s2)
+            else:
+                state, loss = ls(state, (x, y), s2)
+        masters.append(np.asarray(jax.device_get(state.master["w"])))
+        bits.append(float(state.bits))
+# identical math, different wire format: same masters, same counted bits
+np.testing.assert_allclose(masters[0], masters[1], rtol=1e-4, atol=1e-5)
+np.testing.assert_allclose(bits[0], bits[1])
+print("SPARSE==DENSE OK", bits[0])
+"""
+
+
+def test_sparse_allgather_kernel_compact(subproc):
+    """aggregate="sparse_allgather" runs through the compact kernel path
+    on this container (no lax.top_k in the traced step — sort-free even
+    inside the 0.4.x partial-manual region) and matches the dense-psum
+    aggregation state-for-state and bit-for-bit."""
+    out = subproc(SPARSE_ALLGATHER, devices=8)
+    assert "SPARSE==DENSE OK" in out
+
+
 MULTIPOD = r"""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding

@@ -27,6 +27,33 @@ def test_topk_compress_matches_ref(rows, n, k, dtype, sign):
     assert (np.asarray(cnt) == np.asarray(rcnt)).all()
 
 
+@pytest.mark.parametrize("rows,n,k,kcap", [
+    (4, 256, 16, 128), (8, 512, 50, 128), (1, 1024, 10, 128),
+    (16, 384, 100, 128), (5, 640, 200, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sign", [False, True])
+def test_topk_compact_matches_ref(rows, n, k, kcap, dtype, sign):
+    acc = jax.random.normal(jax.random.PRNGKey(rows + n), (rows, n)) \
+        .astype(dtype)
+    idx, val, mem, cnt = ops.topk_compact(acc, k, kcap, sign=sign)
+    ridx, rval, rmem, rcnt = ref.topk_compact_ref(
+        acc.astype(jnp.float32), k, kcap, sign=sign)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_allclose(np.asarray(val), np.asarray(rval),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(mem), np.asarray(rmem),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(rcnt))
+    # densify identity: scatter-add(compact) + memory == input (sentinel
+    # slots drop out of bounds)
+    dense = jax.vmap(lambda o, i, v: o.at[i].add(v, mode="drop"))(
+        jnp.zeros((rows, n)), idx, val)
+    np.testing.assert_allclose(np.asarray(dense + mem),
+                               np.asarray(acc, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("rows,n,k", [(8, 512, 32), (3, 300, 7)])
 def test_topk_compress_selects_topk(rows, n, k):
     """Bisection selection must contain >= k entries per row and every
