@@ -110,6 +110,7 @@ def run():
                 path="kernel" if used else "reference"))
 
     rows.extend(_bench_packing())
+    rows.extend(_bench_channel_round())
     return rows
 
 
@@ -142,4 +143,55 @@ def _bench_packing():
             f"wire_ratio={float(bits) / (32 * d):.5f}",
             wire_bits=float(bits),
             path="packed" if pack else "per_leaf"))
+    return rows
+
+
+def _bench_channel_round():
+    """Channel model (DESIGN.md §5): one sync round's compression cost
+    and *total* wire bits, uplink-only (the pre-channel ledger, dense
+    broadcast back) vs bidirectional (error-compensated Top_k on the
+    downlink master delta too).  Launches are counted at trace time —
+    megabuffer packing keeps one kernel launch per operator family per
+    direction."""
+    from repro.core.channel import Channel
+
+    tree = {
+        f"layer{i}": jax.random.normal(jax.random.PRNGKey(60 + i),
+                                       (128, 2048))
+        for i in range(6)
+    }
+    delta = {
+        k: 0.1 * jax.random.normal(jax.random.PRNGKey(70 + i), v.shape)
+        for i, (k, v) in enumerate(tree.items())
+    }
+    d = int(sum(v.size for v in tree.values()))
+    cfg = dsp.DispatchConfig(mode="kernel")
+    up = Channel(ops.TopK(k=0.01), "uplink", cfg)
+    down = Channel(ops.TopK(k=0.05), "downlink", cfg)
+    dense_down = float(32 * d)  # exact broadcast cost per receiver
+
+    def uplink_only(key, acc):
+        q, _mem, b = up.apply(key, acc)
+        # the dense broadcast back is free compute but real wire cost
+        return q, b + dense_down
+
+    def bidirectional(key, acc, dacc):
+        q, _mem, b = up.apply(key, acc)
+        q2, _mem2, b2 = down.apply(jax.random.fold_in(key, 1), dacc)
+        return (q, q2), b + b2
+
+    rows = []
+    for name, fn, fnargs in (
+            ("uplink_only", uplink_only, (tree,)),
+            ("bidirectional", bidirectional, (tree, delta))):
+        jfn = jax.jit(fn)
+        dsp.reset_launches()
+        jfn.lower(jax.random.PRNGKey(1), *fnargs)
+        launches = dsp.total_launches()
+        (_, bits), us = _time(jfn, jax.random.PRNGKey(1), *fnargs)
+        rows.append(BenchRow(
+            f"channel/round/{name}", us,
+            f"launches_per_round={launches};"
+            f"wire_ratio={float(bits) / (64 * d):.5f}",
+            wire_bits=float(bits), path="kernel"))
     return rows

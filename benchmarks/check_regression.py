@@ -15,6 +15,10 @@ peers* — the signature of a real dispatch/kernel regression — fails.
 Rows whose baseline is faster than ``--min-us`` are reported but never
 judged: at microsecond scale the 5-sample bench is jitter, not signal.
 
+Rows present in the run but absent from the committed baseline (a PR
+adding new bench coverage) are reported as ``NEW`` and skipped — only
+rows that *disappear* from the run fail the gate.
+
 Wire bits are machine-independent and compared to 1% relative — wide
 enough for stochastic-quantizer nonzero counts to drift with the
 (unpinned) jax PRNG version, narrow enough that any real ledger change
@@ -58,6 +62,14 @@ def main() -> int:
         print(f"FAIL: {len(missing)} baseline rows missing from current "
               f"run: {missing}")
         return 1
+    # rows the run produced that the committed baseline predates (a PR
+    # adding bench coverage): report them, never gate on them — they
+    # become judged once the baseline is regenerated
+    new = sorted(set(cur) - set(base))
+    for name in new:
+        us = cur[name].get("us_per_call")
+        us_txt = f"{us:.1f}us" if us is not None else "-"
+        print(f"  NEW {name}: {us_txt}  (not in baseline; skipped)")
 
     shared = sorted(set(base) & set(cur))
     ratios = {}
@@ -98,7 +110,7 @@ def main() -> int:
     if failed or bit_fails:
         print(f"FAIL: {len(failed)} timing regression(s) beyond "
               f"x{args.tolerance} calibrated, {len(bit_fails)} wire-bit "
-              f"change(s)")
+              "change(s)")
         return 1
     print("PASS")
     return 0

@@ -3,7 +3,6 @@ artifacts/dryrun/*.json (run after repro.launch.dryrun)."""
 
 from __future__ import annotations
 
-import glob
 import json
 import os
 
@@ -68,7 +67,7 @@ def perf_compare(arch: str, shape: str, mesh: str, tags: list[str],
             rec = json.load(f)
         if rec["status"] != "ok":
             lines.append(f"| {tag} | ERROR {rec.get('error', '')[:50]} "
-                         f"| | | | | | |")
+                         "| | | | | | |")
             continue
         a = analyze(rec)
         st = rec["steps"][a["step"]]

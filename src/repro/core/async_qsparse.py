@@ -41,16 +41,23 @@ class AsyncQsparseState(NamedTuple):
     memory: Any           # m_t^{(r)} [R]
     inner: Any            # [R]
     step: jnp.ndarray
-    bits: jnp.ndarray
+    bits: jnp.ndarray     # uplink wire bits
     rounds: jnp.ndarray   # total worker-sync events
+    # downlink channel state (DESIGN.md §5): server-side per-worker
+    # error memory + downlink bits ledger (field order mirrors
+    # EngineState so the splat conversions below stay valid)
+    down_memory: Any = None
+    bits_down: Any = None
 
 
 def _replicate(tree, R: int):
     return engine.replicate(tree, R)
 
 
-def init(params, inner_opt: GradientTransform, R: int) -> AsyncQsparseState:
-    return AsyncQsparseState(*engine.init(params, inner_opt, R))
+def init(params, inner_opt: GradientTransform, R: int,
+         downlink=None) -> AsyncQsparseState:
+    return AsyncQsparseState(*engine.init(params, inner_opt, R,
+                                          downlink=downlink))
 
 
 def make_step(
@@ -61,6 +68,7 @@ def make_step(
     R: int,
     *,
     dispatch: Optional[DispatchConfig] = None,
+    downlink=None,
 ):
     """sync_flags: bool[R] — which workers hit a sync index at t+1.
 
@@ -68,10 +76,15 @@ def make_step(
     workers contribute zero to the master sum and keep their state) —
     exactly the shape the production shard_map engine uses.  Steps
     where no worker syncs skip the compression phase entirely.
+
+    downlink: server→worker compression operator applied to each
+    syncing worker's master delta x̄_{t+1} − x_t^{(r)} with a
+    server-side error memory (None/Identity = exact broadcast).  Pass
+    the same value to :func:`init`.
     """
     engine_step = engine.make_step(
         grad_fn, inner_opt, operator, lr_schedule, R,
-        dispatch=dispatch, global_rounds=False,
+        dispatch=dispatch, global_rounds=False, downlink=downlink,
     )
 
     def step_fn(state: AsyncQsparseState, batch, sync_flags, key):

@@ -15,12 +15,21 @@ Conventions (conservative, matching the paper's setup):
 
 Everything returns float (bits can be data dependent through the
 non-zero count for stochastic quantizers => returned as a traced scalar).
+
+The ledger is **per direction** (DESIGN.md §5): the engines keep
+separate uplink (worker→server, ``state.bits``) and downlink
+(server→worker, ``state.bits_down``) totals — both directions charge
+per transmitting/receiving worker (unicast accounting), and downlink
+Top_k/QSGD entries use the same counted-survivor forms as the uplink.
+``core.channel.wire_ledger(state)`` bundles the pair with a combined
+total.
 """
 
 from __future__ import annotations
 
 import math
 
+import jax
 import jax.numpy as jnp
 
 
@@ -34,6 +43,14 @@ def _level_bits(s: int) -> int:
 
 def bits_dense(d: int, value_bits: int = 32) -> float:
     return float(d * value_bits)
+
+
+def bits_dense_tree(tree, value_bits: int = 32) -> float:
+    """Dense wire cost of transmitting a whole pytree exactly — the
+    per-receiver charge of an uncompressed (Identity) broadcast.  Leaf
+    sizes are static, so this is a python float usable at trace time."""
+    return float(sum(bits_dense(leaf.size, value_bits)
+                     for leaf in jax.tree_util.tree_leaves(tree)))
 
 
 def bits_topk(d: int, k: int, value_bits: int = 32) -> float:

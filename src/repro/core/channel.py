@@ -1,0 +1,166 @@
+"""The compression *channel*: one abstraction for everything that
+crosses the wire, in either direction (DESIGN.md §5).
+
+The paper compresses the worker→server updates; Double Quantization
+[Yu et al., 2019] and Error-Compensated QSGD [Wu et al., 2018] show the
+server→worker broadcast can be compressed the same way, with its own
+error memory on the server side.  This module packages the shared
+structure — a compression operator (or tree of operators, Corollary 1),
+a kernel-dispatch policy, a direction tag for the per-direction bits
+ledger — so the engine instantiates it twice:
+
+  * **uplink**  (worker → server): compresses the error-compensated
+    difference ``m^{(r)} + x^{(r)} − x̂^{(r)}`` per worker;
+  * **downlink** (server → worker): compresses the master *delta*
+    ``x̄_{t+1} − x^{(r)}`` against the server-side per-worker error
+    memory before updating worker r's master view.
+
+The error memory itself is traced engine state (per worker, owned by
+``EngineState`` / ``DistQsparseState``); a Channel holds only the
+static policy plus the error-feedback algebra
+
+    q = C(acc),   memory' = acc − q,   bits = counted wire cost,
+
+routed through ``kernels.dispatch.channel_compress_tree`` so eligible
+leaves run the fused Pallas kernels (megabuffer-packed: one launch per
+operator family per direction per sync round) and the kernel's fused
+error memory is consumed directly.
+
+An Identity channel (``is_identity()``) means "no compression": the
+engine takes the exact-broadcast fast path (bit-for-bit today's
+trajectories) and the ledger charges the dense wire cost — the honest
+accounting the uplink-only ledger used to omit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bits as bitlib
+from repro.core.operators import CompressionOp, Identity, ops_for_leaves
+
+
+class WireLedger(NamedTuple):
+    """Per-direction cumulative wire bits (the paper's x-axis, §1.4)."""
+
+    up: Any    # worker → server
+    down: Any  # server → worker
+
+    @property
+    def total(self):
+        return self.up + self.down
+
+
+def wire_ledger(state) -> WireLedger:
+    """Per-direction ledger of any engine state carrying ``bits`` /
+    ``bits_down`` fields (EngineState, QsparseState, DistQsparseState)."""
+    down = getattr(state, "bits_down", None)
+    if down is None:
+        down = jnp.zeros((), jnp.float32)
+    return WireLedger(up=state.bits, down=down)
+
+
+def _all_identity(op_tree) -> bool:
+    if isinstance(op_tree, CompressionOp):
+        return isinstance(op_tree, Identity)
+    leaves = jax.tree_util.tree_leaves(
+        op_tree, is_leaf=lambda o: isinstance(o, CompressionOp))
+    return all(isinstance(o, Identity) for o in leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class Channel:
+    """Engine-level channel: operator tree + dispatch policy + direction.
+
+    ``operator`` is a ``CompressionOp`` or a pytree of them (broadcast
+    over leaves like ``operators.compress_tree``); ``dispatch`` the
+    kernel routing policy (None = dispatch defaults); ``direction`` a
+    tag ("uplink" | "downlink") for ledgers and launch accounting.
+    """
+
+    operator: Any
+    direction: str = "uplink"
+    dispatch: Optional[Any] = None  # kernels.dispatch.DispatchConfig
+
+    def is_identity(self) -> bool:
+        """True when the channel transmits exactly (no compression)."""
+        return self.operator is None or _all_identity(self.operator)
+
+    def init_memory(self, tree):
+        """Fresh (zero) error memory in ``tree``'s layout, f32."""
+        return jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+    def apply(self, key, acc):
+        """Error-compensated compression of the accumulator ``acc``
+        (caller adds the memory in: acc = memory + payload).
+
+        Returns ``(q, new_memory, bits)`` with ``q + new_memory == acc``
+        exactly (the kernels fuse the memory update; the reference path
+        computes ``acc − q``) and counted wire bits.
+        """
+        from repro.kernels import dispatch as dsp
+        return dsp.channel_compress_tree(
+            self.operator, key, acc, self.dispatch)
+
+    def dense_bits(self, tree, value_bits: int = 32):
+        """Exact-transmission wire cost of one broadcast of ``tree``
+        (the Identity channel's per-worker ledger charge)."""
+        return bitlib.bits_dense_tree(tree, value_bits)
+
+    def ops_for(self, n_leaves: int):
+        return ops_for_leaves(self.operator, n_leaves)
+
+
+def as_channel(op_or_channel, direction: str, dispatch=None
+               ) -> Optional[Channel]:
+    """Normalize a make_step-style argument into a Channel (or None).
+
+    ``None`` and Identity operators normalize to an Identity channel —
+    the exact-broadcast path with dense ledger accounting.
+    """
+    if op_or_channel is None:
+        return Channel(operator=None, direction=direction, dispatch=dispatch)
+    if isinstance(op_or_channel, Channel):
+        return op_or_channel
+    return Channel(operator=op_or_channel, direction=direction,
+                   dispatch=dispatch)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardChannel:
+    """Mesh-level channel for the distributed engine: wraps a
+    ``core.distributed.ShardCompressor`` (shard-local, spec-aware
+    compression) with the same error-feedback algebra and direction
+    tag.  Kept duck-typed to avoid a channel ↔ distributed import
+    cycle; ``compressor`` is a ShardCompressor (or None = Identity).
+    """
+
+    compressor: Any
+    direction: str = "uplink"
+
+    def is_identity(self) -> bool:
+        return self.compressor is None or self.compressor.mode == "none"
+
+    def init_memory(self, tree):
+        return jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+    def apply(self, acc, param_specs):
+        """Dense-form error-compensated compression of ``acc``:
+        ``(q, new_memory, bits)`` with q + new_memory == acc."""
+        q, bits = self.compressor(acc, param_specs)
+        new_mem = jax.tree_util.tree_map(lambda a, g: a - g, acc, q)
+        return q, new_mem, bits
+
+    def compact(self, acc, param_specs):
+        """Compact-wire-form counterpart (DESIGN.md §3.3): defers to
+        ``ShardCompressor.compact`` — (payloads, treedef, bits, mem)."""
+        return self.compressor.compact(acc, param_specs)
+
+    def dense_bits(self, tree, value_bits: int = 32):
+        return bitlib.bits_dense_tree(tree, value_bits)

@@ -30,12 +30,15 @@ State layout (leading axes refer to the *global* array view):
            (beyond-paper optimization, §Perf).
   local / memory / inner : one leading worker axis of size R, sharded
            P(('pod','data')) — physically one replica per worker.
+  view / down_memory : same worker layout; only with a compressed
+           ``downlink=`` channel (DESIGN.md §5) — each worker's lagging
+           master view and the server-side downlink error memory.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 from typing import Any, Callable, NamedTuple, Optional, Sequence
 
 import jax
@@ -45,6 +48,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.compat import (MODERN, axis_size, shard_map,
                           sharding_constraints_usable)
 from repro.core import bits as bitlib
+from repro.core import channel as chn
 from repro.core.operators import resolve_k
 from repro.optim.transforms import GradientTransform, apply_updates
 
@@ -55,8 +59,15 @@ class DistQsparseState(NamedTuple):
     memory: Any           # leading worker axis R
     inner: Any            # leading worker axis R
     step: jnp.ndarray
-    bits: jnp.ndarray
+    bits: jnp.ndarray     # uplink wire bits (worker → server)
     rounds: jnp.ndarray
+    # downlink channel state (DESIGN.md §5) — populated only with a
+    # compressed ``downlink=`` ShardCompressor in make_dist_steps:
+    # view is x_t^{(r)} (each worker's lagging copy of the master),
+    # down_memory the server-side per-worker error memory md^{(r)}
+    view: Any = None          # leading worker axis R
+    down_memory: Any = None   # leading worker axis R
+    bits_down: Any = None     # downlink wire bits (server → worker)
 
 
 # ---------------------------------------------------------------------------
@@ -281,6 +292,46 @@ class ShardCompressor:
 # ---------------------------------------------------------------------------
 
 
+_TP_KERNEL_WARNED = set()
+
+
+def _legacy_tp_kernel_guard(compressor: Optional[ShardCompressor], mesh,
+                            daxes, aggregate: str,
+                            direction: str = "uplink"):
+    """0.4.x partial-manual guard (ROADMAP known issue): on TP>1 legacy
+    meshes the ``dense_psum`` sync body cannot host Pallas kernels —
+    the uplink output feeds an in-body ``pmean`` over an auto-axis-
+    sharded operand, and even the downlink's collective-free kernel
+    launches trip the same ``IsManualSubgroup`` CHECK inside that
+    region (reproduced; only the compact sparse path, whose buffers
+    leave via out_specs, lowers with kernels there).  Auto-downgrade
+    the affected channel to reference dispatch with a one-time warning
+    per direction instead of hard-crashing — outputs and ledger are
+    identical, only speed differs.
+    """
+    if MODERN or aggregate != "dense_psum" or compressor is None:
+        return compressor
+    if compressor.mode == "none" or compressor.dispatch == "reference":
+        return compressor
+    tp = any(mesh.shape[a] > 1 for a in mesh.axis_names if a not in daxes)
+    would_kernel = compressor.dispatch == "kernel" or (
+        compressor.dispatch == "auto" and jax.default_backend() == "tpu")
+    if not (tp and would_kernel):
+        return compressor
+    if direction not in _TP_KERNEL_WARNED:
+        warnings.warn(
+            "ShardCompressor(dispatch=%r) with dense psum aggregation "
+            "cannot run the Pallas kernels inside a 0.4.x partial-manual "
+            "region with a >1 tensor-parallel axis (XLA IsManualSubgroup); "
+            "downgrading the %s to reference dispatch. Use "
+            "aggregate='sparse_allgather' (kernel-capable there) or a "
+            "modern jax to keep the kernel path."
+            % (compressor.dispatch, direction),
+            stacklevel=3)
+        _TP_KERNEL_WARNED.add(direction)
+    return dataclasses.replace(compressor, dispatch="reference")
+
+
 def worker_count(mesh, data_axes: Sequence[str]) -> int:
     out = 1
     for a in data_axes:
@@ -320,15 +371,31 @@ def make_dist_steps(
     param_specs=None,                  # pytree of P for leaves (model axis)
     zero1: bool = False,
     aggregate: str = "dense_psum",     # "dense_psum" | "sparse_allgather"
+    downlink: Optional[ShardCompressor] = None,
 ):
     """Returns (init_fn, local_step, sync_step).
 
     ``batch`` leaves carry a leading worker axis R sharded over
     data_axes.  Inside the manual region every worker sees leading dim 1.
+
+    ``downlink``: server→worker compression channel (DESIGN.md §5) — a
+    second ShardCompressor applied to each worker's master delta
+    ``x̄_{t+1} − x_t^{(r)}`` against a server-side per-worker error
+    memory before the broadcast; the worker's view (= its post-sync
+    local iterate) then advances by the decompressed delta only, and
+    the uplink compresses against that lagging view.  None (or mode
+    "none") keeps the exact dense broadcast — bit-for-bit today's
+    trajectories — while charging its dense cost to ``bits_down``.
     """
     daxes = tuple(data_axes)
     R = worker_count(mesh, daxes)
     manual = set(daxes)
+    compressor = _legacy_tp_kernel_guard(compressor, mesh, daxes, aggregate)
+    downlink = _legacy_tp_kernel_guard(downlink, mesh, daxes, aggregate,
+                                       direction="downlink")
+    up = chn.ShardChannel(compressor, "uplink")
+    down = chn.ShardChannel(downlink, "downlink")
+    down_active = not down.is_identity()
 
     def _spec_leaves_for(tree):
         is_spec = lambda z: isinstance(z, P) or z is None
@@ -390,39 +457,77 @@ def make_dist_steps(
         return _expand(half), _expand(inner_new), loss
 
     # ---- sync step ------------------------------------------------------
-    def make_sync_body(z1, pregathered: bool = False):
-      def sync_body(master, local, memory, inner, step, batch, key):
+    def make_sync_body(z1, pregathered: bool = False,
+                       with_down: bool = False):
+      """Dense sync body.  With ``with_down`` (compressed downlink
+      channel, DESIGN.md §5) the signature gains (view, down_mem): the
+      uplink delta is taken against the worker's lagging *view*
+      x_t^{(r)}, and after the master update the server compresses each
+      worker's master delta against its error memory md^{(r)} — all
+      shard-local threshold selection, sort- and collective-free, so
+      the body stays partition-safe on 0.4.x partial-manual meshes."""
+      def sync_body(master, local, memory, inner, *rest):
+        if with_down:
+            view, down_mem, step, batch, key = rest
+        else:
+            view = down_mem = None
+            step, batch, key = rest
         lr = lr_schedule(step)
-        half, inner_new, loss = _local(master, local, memory, inner, step, batch, lr)
+        half, inner_new, loss = _local(master, local, memory, inner, step,
+                                       batch, lr)
         mem = _squeeze(memory)
         # zero1 masters are sharded on axis 0 over the worker axes:
         # materialize the full master for the delta via all_gather —
         # unless the caller already replicated it in the auto region
         # (0.4.x cannot partition all_gather inside partial-manual).
         full_master = master if pregathered else _gather_master(master, z1)
+        ref = _squeeze(view) if with_down else full_master
         delta = jax.tree_util.tree_map(
             lambda m, x, h: m + x.astype(jnp.float32) - h.astype(jnp.float32),
-            mem, full_master, half,
+            mem, ref, half,
         )
-        g, wire_bits = compressor(delta, param_specs)
+        g, new_mem, wire_bits = up.apply(delta, param_specs)
         g_mean = jax.tree_util.tree_map(
             lambda gg: jax.lax.pmean(gg, daxes), g
         )
-        new_mem = jax.tree_util.tree_map(lambda d, gg: d - gg, delta, g)
         new_full_master = jax.tree_util.tree_map(
             lambda x, gg: (x.astype(jnp.float32) - gg).astype(x.dtype),
             full_master, g_mean,
         )
         new_master = _scatter_master(new_full_master, z1)
-        new_local = new_full_master
         total_bits = jax.lax.psum(wire_bits, daxes)
         loss = jax.lax.pmean(loss, daxes)
+        if not with_down:
+            return (
+                new_master,
+                _expand(new_full_master),   # exact broadcast
+                _expand(new_mem),
+                _expand(inner_new),
+                total_bits,
+                loss,
+            )
+        # downlink: error-compensated compression of the master delta
+        dm = _squeeze(down_mem)
+        dacc = jax.tree_util.tree_map(
+            lambda d, nm, vv: d + nm.astype(jnp.float32)
+            - vv.astype(jnp.float32),
+            dm, new_full_master, ref,
+        )
+        q, new_dm, dbits = down.apply(dacc, param_specs)
+        new_view = jax.tree_util.tree_map(
+            lambda vv, qq: (vv.astype(jnp.float32) + qq).astype(vv.dtype),
+            ref, q,
+        )
+        total_down = jax.lax.psum(dbits, daxes)
         return (
             new_master,
-            _expand(new_local),
+            _expand(new_view),   # x̂_{t+1} = x_{t+1} = view
             _expand(new_mem),
             _expand(inner_new),
+            _expand(new_view),
+            _expand(new_dm),
             total_bits,
+            total_down,
             loss,
         )
       return sync_body
@@ -448,6 +553,30 @@ def make_dist_steps(
             check_vma=True,
         )
 
+    def _shmap_down(body, master_specs, out_specs):
+        """As _shmap but with the downlink channel state (view,
+        down_memory) threaded through as worker-sharded operands."""
+        return shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(
+                master_specs, worker_specs, worker_specs, worker_specs,
+                worker_specs, worker_specs, P(), batch_spec, P(),
+            ),
+            out_specs=out_specs,
+            axis_names=manual,
+            check_vma=True,
+        )
+
+    def _bits_down_of(state):
+        return (state.bits_down if state.bits_down is not None
+                else jnp.zeros((), jnp.float32))
+
+    # dense broadcast cost of one exact sync (per-receiver, Σ workers);
+    # leaf sizes are static so this is a trace-time python float
+    def _exact_down_bits(master):
+        return jnp.float32(R * down.dense_bits(master))
+
     def local_step(state: DistQsparseState, batch, key):
         z1 = _z1mask(state.master)
         local_mapped = _shmap(local_body, _master_in_specs(z1),
@@ -460,7 +589,9 @@ def make_dist_steps(
             DistQsparseState(
                 master=state.master, local=half, memory=state.memory,
                 inner=inner_new, step=state.step + 1, bits=state.bits,
-                rounds=state.rounds,
+                rounds=state.rounds, view=state.view,
+                down_memory=state.down_memory,
+                bits_down=state.bits_down,
             ),
             loss,
         )
@@ -478,6 +609,27 @@ def make_dist_steps(
                 lambda x: jax.lax.with_sharding_constraint(
                     x, NamedSharding(mesh, P())), state.master)
             in_mspecs = P()
+        if down_active:
+            sync_mapped = _shmap_down(
+                make_sync_body(z1, pregather, with_down=True), in_mspecs,
+                (mspecs, worker_specs, worker_specs, worker_specs,
+                 worker_specs, worker_specs, P(), P(), P()))
+            (master, local, memory, inner_new, view, down_mem, wire_bits,
+             down_bits, loss) = sync_mapped(
+                master_in, state.local, state.memory, state.inner,
+                state.view, state.down_memory, state.step, batch, key,
+            )
+            return (
+                DistQsparseState(
+                    master=master, local=local, memory=memory,
+                    inner=inner_new, step=state.step + 1,
+                    bits=state.bits + wire_bits,
+                    rounds=state.rounds + 1, view=view,
+                    down_memory=down_mem,
+                    bits_down=_bits_down_of(state) + down_bits,
+                ),
+                loss,
+            )
         sync_mapped = _shmap(
             make_sync_body(z1, pregather), in_mspecs,
             (mspecs, worker_specs, worker_specs, worker_specs, P(), P()))
@@ -489,7 +641,10 @@ def make_dist_steps(
             DistQsparseState(
                 master=master, local=local, memory=memory, inner=inner_new,
                 step=state.step + 1, bits=state.bits + wire_bits,
-                rounds=state.rounds + 1,
+                rounds=state.rounds + 1, view=state.view,
+                down_memory=state.down_memory,
+                bits_down=_bits_down_of(state)
+                + _exact_down_bits(state.master),
             ),
             loss,
         )
@@ -503,14 +658,15 @@ def make_dist_steps(
     # the wire carries W*kcap entries per row instead of a dense-f32
     # ring all-reduce.  Sort-free end to end: the traced step contains
     # no lax.top_k, so it partitions under 0.4.x too.
-    def _leaf_meta(master_tree):
+    def _leaf_meta(master_tree, comp: Optional[ShardCompressor] = None):
+        comp = compressor if comp is None else comp
         leaves = jax.tree_util.tree_flatten(master_tree)[0]
         is_spec = lambda z: isinstance(z, P) or z is None
         specs = (jax.tree_util.tree_leaves(param_specs, is_leaf=is_spec)
                  if param_specs is not None else [None] * len(leaves))
         meta = []
         for leaf, spec in zip(leaves, specs):
-            if (compressor.mode == "none" or leaf.ndim == 0
+            if (comp.mode == "none" or leaf.ndim == 0
                     or leaf.size <= 8):
                 meta.append(("dense", None, None))
             else:
@@ -520,19 +676,7 @@ def make_dist_steps(
                 meta.append(("sparse", ax, moved))
         return meta
 
-    def make_sparse_sync_body(z1):
-      def sparse_sync_body(master, local, memory, inner, step, batch, key):
-        lr = lr_schedule(step)
-        half, inner_new, loss = _local(master, local, memory, inner, step,
-                                       batch, lr)
-        mem = _squeeze(memory)
-        full_master = _gather_master(master, z1)
-        delta = jax.tree_util.tree_map(
-            lambda m, x, h: m + x.astype(jnp.float32) - h.astype(jnp.float32),
-            mem, full_master, half,
-        )
-        payloads, _treedef, wire_bits, new_mem = compressor.compact(
-            delta, param_specs)
+    def _compact_arrays(payloads):
         arrays = []
         for pl in payloads:
             if pl[0] == "dense":
@@ -541,29 +685,76 @@ def make_dist_steps(
                 _, idx, sel, _ax, _moved = pl
                 arrays.append(idx)
                 arrays.append(sel)
+        return arrays
+
+    def make_sparse_sync_body(z1, with_view: bool = False):
+      def sparse_sync_body(master, local, memory, inner, view,
+                           step, batch, key):
+        lr = lr_schedule(step)
+        half, inner_new, loss = _local(master, local, memory, inner, step,
+                                       batch, lr)
+        mem = _squeeze(memory)
+        # with a compressed downlink the uplink reference point is the
+        # worker's lagging view, not the true master
+        ref = _squeeze(view) if with_view else _gather_master(master, z1)
+        delta = jax.tree_util.tree_map(
+            lambda m, x, h: m + x.astype(jnp.float32) - h.astype(jnp.float32),
+            mem, ref, half,
+        )
+        payloads, _treedef, wire_bits, new_mem = compressor.compact(
+            delta, param_specs)
+        arrays = _compact_arrays(payloads)
         total_bits = jax.lax.psum(wire_bits, daxes)
         loss = jax.lax.pmean(loss, daxes)
         return (
             _expand(new_mem), _expand(inner_new),
             [a[None] for a in arrays], total_bits, loss,
         )
-      return sparse_sync_body
+      if with_view:
+          return sparse_sync_body
+      # historical signature (no view operand)
+      return (lambda master, local, memory, inner, step, batch, key:
+              sparse_sync_body(master, local, memory, inner, None,
+                               step, batch, key))
+
+    def make_sparse_down_body():
+      """Second manual region of the sparse downlink: the server-side
+      error-compensated compression of each worker's master delta,
+      emitted in the compact (idx, val) wire form (DESIGN.md §3.3) so
+      the buffers leave via out_specs and the dense decode happens in
+      the auto region — sort-free, collective-free (bar the scalar
+      bits psum), partition-safe on 0.4.x."""
+      def down_body(new_master, view, down_mem):
+        v = _squeeze(view)
+        dm = _squeeze(down_mem)
+        dacc = jax.tree_util.tree_map(
+            lambda d, nm, vv: d + nm.astype(jnp.float32)
+            - vv.astype(jnp.float32),
+            dm, new_master, v,
+        )
+        payloads, _treedef, dbits, new_dm = down.compact(dacc, param_specs)
+        arrays = _compact_arrays(payloads)
+        total_down = jax.lax.psum(dbits, daxes)
+        return (_expand(new_dm), [a[None] for a in arrays], total_down)
+      return down_body
 
     def sync_step_sparse(state: DistQsparseState, batch, key):
         z1 = _z1mask(state.master)
         meta = _leaf_meta(state.master)
         n_arrays = sum(1 if m[0] == "dense" else 2 for m in meta)
+        view_specs = (worker_specs,) if down_active else ()
+        view_args = (state.view,) if down_active else ()
         mapped = shard_map(
-            make_sparse_sync_body(z1), mesh=mesh,
+            make_sparse_sync_body(z1, with_view=down_active), mesh=mesh,
             in_specs=(_master_in_specs(z1), worker_specs, worker_specs,
-                      worker_specs, P(), batch_spec, P()),
+                      worker_specs) + view_specs + (P(), batch_spec, P()),
             out_specs=(worker_specs, worker_specs,
                        [P(tuple(daxes))] * n_arrays, P(), P()),
             axis_names=manual, check_vma=True,
         )
         memory, inner_new, arrays, wire_bits, loss = mapped(
             state.master, state.local, state.memory, state.inner,
-            state.step, batch, key)
+            *view_args, state.step, batch, key)
         # auto-region combine: dense mean per leaf, constrained to the
         # master's own sharding so the dense tree is never replicated
         # (zero1 leaves: sharded over the worker axes; each chip
@@ -600,6 +791,19 @@ def make_dist_steps(
         new_master = jax.tree_util.tree_map(
             lambda x, gg: (x.astype(jnp.float32) - gg).astype(x.dtype),
             state.master, g_mean)
+        if down_active:
+            new_local, view, down_mem, down_bits = _sparse_downlink(
+                state, new_master)
+            return (
+                DistQsparseState(
+                    master=new_master, local=new_local, memory=memory,
+                    inner=inner_new, step=state.step + 1,
+                    bits=state.bits + wire_bits, rounds=state.rounds + 1,
+                    view=view, down_memory=down_mem,
+                    bits_down=_bits_down_of(state) + down_bits,
+                ),
+                loss,
+            )
         new_local = jax.tree_util.tree_map(
             lambda x, old: jax.lax.with_sharding_constraint(
                 jnp.broadcast_to(x[None], old.shape).astype(old.dtype),
@@ -610,9 +814,59 @@ def make_dist_steps(
                 master=new_master, local=new_local, memory=memory,
                 inner=inner_new, step=state.step + 1,
                 bits=state.bits + wire_bits, rounds=state.rounds + 1,
+                view=state.view, down_memory=state.down_memory,
+                bits_down=_bits_down_of(state)
+                + _exact_down_bits(state.master),
             ),
             loss,
         )
+
+    def _sparse_downlink(state, new_master):
+        """Sparse-path downlink: a second manual region emits each
+        worker's compact (idx, val) downlink buffers + updated server
+        memory; the per-worker dense decode (scatter-add, sentinel
+        slots drop) runs in the auto region, exactly like the uplink
+        combine — no mean: each worker applies only its own q."""
+        dmeta = _leaf_meta(state.master, downlink)
+        n_down = sum(1 if m[0] == "dense" else 2 for m in dmeta)
+        master_in = new_master
+        if zero1:
+            # replicate the (z1-sharded) new master in the auto region
+            # before entry: 0.4.x partial-manual cannot gather in-body
+            master_in = jax.tree_util.tree_map(
+                lambda x: jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P())), new_master)
+        down_mapped = shard_map(
+            make_sparse_down_body(), mesh=mesh,
+            in_specs=(P(), worker_specs, worker_specs),
+            out_specs=(worker_specs, [P(tuple(daxes))] * n_down, P()),
+            axis_names=manual, check_vma=True,
+        )
+        down_mem, darrays, down_bits = down_mapped(
+            master_in, state.view, state.down_memory)
+        it = iter(darrays)
+        view_leaves, vtd = jax.tree_util.tree_flatten(state.view)
+        new_view_leaves = []
+        from repro.kernels.dispatch import decode_rows
+        for (kind, ax, moved), vleaf in zip(dmeta, view_leaves):
+            if kind == "dense":
+                q = next(it)                    # [W, ...] exact payload
+            else:
+                idx_all = next(it)              # [W, ..., kcap]
+                sel_all = next(it)
+                W_ = idx_all.shape[0]
+                kcap = idx_all.shape[-1]
+                dense = decode_rows(idx_all.reshape(-1, kcap),
+                                    sel_all.reshape(-1, kcap), moved[-1])
+                dense = dense.reshape((W_,) + tuple(moved))
+                q = jnp.moveaxis(dense, -1, ax + 1)
+            new_view_leaves.append(
+                (vleaf.astype(jnp.float32) + q).astype(vleaf.dtype))
+        new_view = jax.tree_util.tree_unflatten(vtd, new_view_leaves)
+        new_view = jax.tree_util.tree_map(
+            lambda x: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(tuple(daxes)))), new_view)
+        return new_view, new_view, down_mem, down_bits
 
     sync_step = (sync_step_sparse if aggregate == "sparse_allgather"
                  else sync_step_dense)
@@ -629,22 +883,34 @@ def make_dist_steps(
             )
             inner = _expand(inner_opt.init(p))
             master = _scatter_master(p, z1)
+            if down_active:
+                # every worker's initial view is the initial master;
+                # the server-side downlink error memory starts at zero
+                return (master, local, memory, inner, local,
+                        down.init_memory(local))
             return master, local, memory, inner
 
+        out_specs = (_master_in_specs(z1), worker_specs, worker_specs,
+                     worker_specs)
+        if down_active:
+            out_specs = out_specs + (worker_specs, worker_specs)
         mapped = shard_map(
             body, mesh=mesh, in_specs=(P(),),
-            out_specs=(_master_in_specs(z1), worker_specs, worker_specs,
-                       worker_specs),
+            out_specs=out_specs,
             axis_names=manual, check_vma=True,
         )
         # eager shard_map with auto (non-manual) axes is unimplemented on
         # older jax; under jit it lowers fine on every version
-        master, local, memory, inner = jax.jit(mapped)(params)
+        out = jax.jit(mapped)(params)
+        master, local, memory, inner = out[:4]
+        view, down_mem = (out[4], out[5]) if down_active else (None, None)
         return DistQsparseState(
             master=master, local=local, memory=memory, inner=inner,
             step=jnp.zeros((), jnp.int32),
             bits=jnp.zeros((), jnp.float32),
             rounds=jnp.zeros((), jnp.int32),
+            view=view, down_memory=down_mem,
+            bits_down=jnp.zeros((), jnp.float32),
         )
 
     return init_fn, local_step, sync_step

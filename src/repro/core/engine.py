@@ -21,11 +21,28 @@ case.  Per step t:
   master:          x̄_{t+1} = x̄_t - (1/R) Σ_{r: s_r} g_t^{(r)}
   r with s_r = 1:  x_{t+1}^{(r)} = x̂_{t+1}^{(r)} = x̄_{t+1}       (broadcast)
 
+Both directions of the wire are first-class *channels* (DESIGN.md §5,
+``core/channel.py``): the uplink above, and an optional **compressed
+downlink** — instead of broadcasting x̄_{t+1} dense, the server
+compresses the per-worker master delta with its own error memory
+md^{(r)} (Double Quantization / error-compensated broadcast):
+
+  r with s_r = 1:  q_t^{(r)}  = DComp(md_t^{(r)} + x̄_{t+1} - x_t^{(r)})
+                   md_{t+1}^{(r)} = md_t^{(r)} + x̄_{t+1} - x_t^{(r)} - q
+                   x_{t+1}^{(r)} = x̂_{t+1}^{(r)} = x_t^{(r)} + q_t^{(r)}
+
+With ``downlink=None`` (or Identity) the broadcast stays the exact
+assignment above — bit-for-bit the historical trajectories — and the
+downlink ledger charges the dense broadcast cost the uplink-only
+ledger used to omit.  ``state.bits`` stays uplink-only; the downlink
+accumulates in ``state.bits_down`` (``channel.wire_ledger`` totals).
+
 Compression routes through ``kernels.dispatch``: eligible (operator,
 leaf) pairs execute the fused Pallas kernels — megabuffer-packed so a
-sync round costs one kernel launch per operator family, not one per
-leaf (DESIGN.md §3.4) — everything else the dense reference operators;
-same outputs, same wire-bit ledger either way.
+sync round costs one kernel launch per operator family *per
+direction*, not one per leaf (DESIGN.md §3.4) — everything else the
+dense reference operators; same outputs, same wire-bit ledger either
+way.
 
 When no worker syncs (any(s) == False) the whole sync phase is skipped
 via ``lax.cond``, so pure-local steps never pay for compression.
@@ -42,6 +59,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import channel as chn
 from repro.core.operators import CompressionOp
 from repro.kernels import dispatch as dsp
 from repro.optim.transforms import GradientTransform, apply_updates
@@ -51,11 +69,16 @@ class EngineState(NamedTuple):
     master: Any           # x̄_t — the true master parameters
     master_view: Any      # x_t^{(r)}: last master copy worker r received [R]
     local: Any            # x̂_t^{(r)} [R]
-    memory: Any           # m_t^{(r)} error-feedback memory [R]
+    memory: Any           # m_t^{(r)} uplink error-feedback memory [R]
     inner: Any            # inner-optimizer state per worker [R]
     step: jnp.ndarray     # int32 global clock t
-    bits: jnp.ndarray     # float32 cumulative wire bits (sum over workers)
+    bits: jnp.ndarray     # float32 cumulative UPLINK wire bits (Σ workers)
     rounds: jnp.ndarray   # int32 — see ``global_rounds`` in make_step
+    # downlink channel state (DESIGN.md §5); down_memory is the
+    # server-side per-worker error memory md^{(r)} [R] — None unless a
+    # compressed downlink is configured (init(..., downlink=op))
+    down_memory: Any = None
+    bits_down: Any = None  # float32 cumulative DOWNLINK wire bits
 
 
 def replicate(tree, R: int):
@@ -65,8 +88,14 @@ def replicate(tree, R: int):
     )
 
 
-def init(params, inner_opt: GradientTransform, R: int) -> EngineState:
+def init(params, inner_opt: GradientTransform, R: int,
+         downlink=None) -> EngineState:
+    """``downlink``: the server→worker compression operator (or
+    Channel) this state will be stepped with — needed here only to
+    allocate the server-side error memory; None/Identity allocates
+    nothing (the exact-broadcast path is memoryless)."""
     local = replicate(params, R)
+    down = chn.as_channel(downlink, "downlink")
     return EngineState(
         master=params,
         master_view=local,
@@ -76,6 +105,9 @@ def init(params, inner_opt: GradientTransform, R: int) -> EngineState:
         step=jnp.zeros((), jnp.int32),
         bits=jnp.zeros((), jnp.float32),
         rounds=jnp.zeros((), jnp.int32),
+        down_memory=(None if down.is_identity()
+                     else down.init_memory(local)),
+        bits_down=jnp.zeros((), jnp.float32),
     )
 
 
@@ -88,6 +120,7 @@ def make_step(
     *,
     dispatch: Optional[dsp.DispatchConfig] = None,
     global_rounds: bool = False,
+    downlink=None,
 ):
     """Build the jittable unified step.
 
@@ -101,7 +134,18 @@ def make_step(
     global_rounds: what ``state.rounds`` counts — True: master rounds
     (+1 whenever any worker syncs; Algorithm-1 bookkeeping), False:
     worker sync events (+Σ s_r; Algorithm-2 bookkeeping).
+
+    downlink: server→worker compression — an operator (or tree, or
+    ``channel.Channel``) applied to the per-worker master delta with a
+    server-side error memory (state.down_memory; pass the same
+    ``downlink`` to :func:`init`).  None/Identity keeps the exact
+    dense broadcast (bit-for-bit historical trajectories) and charges
+    its dense cost to ``state.bits_down``.
     """
+    up_ch = (operator if isinstance(operator, chn.Channel)
+             else chn.Channel(operator, "uplink", dispatch))
+    down_ch = chn.as_channel(downlink, "downlink", dispatch)
+    compressed_down = not down_ch.is_identity()
 
     def local_phase(state: EngineState, batch):
         lr = lr_schedule(state.step)
@@ -117,18 +161,18 @@ def make_step(
         """Masked compress-and-aggregate (Algorithm 1/2 lines 8-20)."""
 
         def worker_update(m_r, view_r, half_r, key_r, s_r):
-            delta = jax.tree_util.tree_map(
+            acc = jax.tree_util.tree_map(
                 lambda m, x, h: m + x.astype(jnp.float32)
                 - h.astype(jnp.float32),
                 m_r, view_r, half_r,
             )
-            g, bits = dsp.compress_tree(operator, key_r, delta, dispatch)
+            g, m_out, bits = up_ch.apply(key_r, acc)
             # masked: non-syncing workers transmit nothing and keep state
             g = jax.tree_util.tree_map(
                 lambda gg: jnp.where(s_r, gg, jnp.zeros_like(gg)), g
             )
             new_m = jax.tree_util.tree_map(
-                lambda m, d, gg: jnp.where(s_r, d - gg, m), m_r, delta, g
+                lambda m, mm: jnp.where(s_r, mm, m), m_r, m_out
             )
             return g, new_m, jnp.where(s_r, bits, 0.0)
 
@@ -144,15 +188,60 @@ def make_step(
             lambda x, g: (x.astype(jnp.float32) - g).astype(x.dtype),
             state.master, g_sum,
         )
-        # only workers in S receive the broadcast
-        bcast = replicate(new_master, R)
 
         def sel(new, old):
             shape = (R,) + (1,) * (new.ndim - 1)
             return jnp.where(sync_mask.reshape(shape), new, old)
 
-        new_view = jax.tree_util.tree_map(sel, bcast, state.master_view)
-        new_local = jax.tree_util.tree_map(sel, bcast, half)
+        if compressed_down:
+            # downlink channel: the server compresses each syncing
+            # worker's master delta against its per-worker error memory
+            # md^{(r)}; only q crosses the wire, so the worker's view
+            # (and local iterate) advances by the *decompressed* delta
+            def down_update(dm_r, view_r, half_r, key_r, s_r):
+                acc = jax.tree_util.tree_map(
+                    lambda dm, v, nm: dm + nm.astype(jnp.float32)
+                    - v.astype(jnp.float32),
+                    dm_r, view_r, new_master,
+                )
+                q, dm_out, dbits = down_ch.apply(key_r, acc)
+                new_v = jax.tree_util.tree_map(
+                    lambda v, qq: jnp.where(
+                        s_r, (v.astype(jnp.float32) + qq).astype(v.dtype),
+                        v),
+                    view_r, q,
+                )
+                new_dm = jax.tree_util.tree_map(
+                    lambda dm, mm: jnp.where(s_r, mm, dm), dm_r, dm_out
+                )
+                new_l = jax.tree_util.tree_map(
+                    lambda nv, h: jnp.where(s_r, nv.astype(h.dtype), h),
+                    new_v, half_r,
+                )
+                return new_v, new_dm, new_l, jnp.where(s_r, dbits, 0.0)
+
+            # uplink keys stay exactly jax.random.split(key, R) (bit
+            # compat); downlink draws an independent stream per worker
+            down_keys = jax.vmap(
+                lambda kk: jax.random.fold_in(kk, 0x0d0b))(keys)
+            new_view, new_down_mem, new_local, dbits_all = jax.vmap(
+                down_update)(
+                state.down_memory, state.master_view, half, down_keys,
+                sync_mask)
+            down_bits = state.bits_down + jnp.sum(dbits_all)
+        else:
+            # exact broadcast (historical path, bit-for-bit): workers in
+            # S receive x̄_{t+1} verbatim; the ledger still charges the
+            # dense per-receiver cost the wire would carry
+            bcast = replicate(new_master, R)
+            new_view = jax.tree_util.tree_map(sel, bcast,
+                                              state.master_view)
+            new_local = jax.tree_util.tree_map(sel, bcast, half)
+            new_down_mem = state.down_memory
+            down_bits = state.bits_down + (
+                jnp.sum(sync_mask.astype(jnp.float32))
+                * down_ch.dense_bits(state.master))
+
         inc = (jnp.any(sync_mask).astype(jnp.int32) if global_rounds
                else jnp.sum(sync_mask.astype(jnp.int32)))
         return EngineState(
@@ -164,9 +253,22 @@ def make_step(
             step=state.step + 1,
             bits=state.bits + jnp.sum(bits_all),
             rounds=state.rounds + inc,
+            down_memory=new_down_mem,
+            bits_down=down_bits,
         )
 
     def step_fn(state: EngineState, batch, sync_mask, key):
+        if compressed_down and state.down_memory is None:
+            raise ValueError(
+                "compressed downlink needs server-side error memory: "
+                "initialize with engine.init(..., downlink=<op>)")
+        if not compressed_down and state.down_memory is not None:
+            raise ValueError(
+                "state carries downlink error memory but this step was "
+                "built without downlink=: pass the same downlink to "
+                "make_step and init (or re-init without one)")
+        if state.bits_down is None:  # states minted before the ledger split
+            state = state._replace(bits_down=jnp.zeros((), jnp.float32))
         sync_mask = jnp.broadcast_to(
             jnp.asarray(sync_mask, bool).reshape(-1), (R,)
         )
@@ -182,6 +284,8 @@ def make_step(
                 step=state.step + 1,
                 bits=state.bits,
                 rounds=state.rounds,
+                down_memory=state.down_memory,
+                bits_down=state.bits_down,
             )
 
         new_state = jax.lax.cond(

@@ -40,7 +40,7 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax.numpy as jnp
 
-from repro.core import engine
+from repro.core import channel as chn, engine
 from repro.core.operators import CompressionOp
 from repro.kernels.dispatch import DispatchConfig
 from repro.optim.transforms import GradientTransform
@@ -52,34 +52,49 @@ class QsparseState(NamedTuple):
     memory: Any          # m_t^{(r)}, leading axis R
     inner: Any           # inner-opt state per worker, leading axis R
     step: jnp.ndarray    # int32
-    bits: jnp.ndarray    # float32 cumulative wire bits (sum over workers)
+    bits: jnp.ndarray    # float32 cumulative uplink bits (sum over workers)
     rounds: jnp.ndarray  # int32 number of sync rounds so far
+    # downlink channel state (DESIGN.md §5) — populated only with a
+    # compressed ``downlink=`` op; with the default exact broadcast the
+    # views equal the master and are reconstructed as a free broadcast
+    master_view: Any = None
+    down_memory: Any = None
+    bits_down: Any = None
 
 
 def _replicate(tree, R: int):
     return engine.replicate(tree, R)
 
 
-def _from_engine(e: engine.EngineState) -> QsparseState:
+def _from_engine(e: engine.EngineState, keep_view: bool) -> QsparseState:
     return QsparseState(
         master=e.master, local=e.local, memory=e.memory, inner=e.inner,
         step=e.step, bits=e.bits, rounds=e.rounds,
+        master_view=e.master_view if keep_view else None,
+        down_memory=e.down_memory, bits_down=e.bits_down,
     )
 
 
 def _to_engine(state: QsparseState, R: int) -> engine.EngineState:
-    # all-agree masks keep every view identical to the master, so the
-    # view axis is reconstructed as a (free) broadcast
+    # with the exact broadcast, all-agree masks keep every view equal to
+    # the master, so the view axis is a (free) broadcast; a compressed
+    # downlink makes views genuinely lag and they are carried in state
+    view = (state.master_view if state.master_view is not None
+            else _replicate(state.master, R))
     return engine.EngineState(
         master=state.master,
-        master_view=_replicate(state.master, R),
+        master_view=view,
         local=state.local, memory=state.memory, inner=state.inner,
         step=state.step, bits=state.bits, rounds=state.rounds,
+        down_memory=state.down_memory, bits_down=state.bits_down,
     )
 
 
-def init(params, inner_opt: GradientTransform, R: int) -> QsparseState:
-    return _from_engine(engine.init(params, inner_opt, R))
+def init(params, inner_opt: GradientTransform, R: int,
+         downlink=None) -> QsparseState:
+    keep_view = not chn.as_channel(downlink, "downlink").is_identity()
+    return _from_engine(
+        engine.init(params, inner_opt, R, downlink=downlink), keep_view)
 
 
 def make_step(
@@ -90,22 +105,29 @@ def make_step(
     R: int,
     *,
     dispatch: Optional[DispatchConfig] = None,
+    downlink=None,
 ):
     """Build the jittable Algorithm-1 step (engine with an all-equal mask).
 
     grad_fn must accept per-worker params and a per-worker batch and
     return (loss, grads) — it is vmapped over the R axis.
     ``sync`` is a traced bool: whether t+1 ∈ I_T.
+
+    downlink: server→worker compression operator (None/Identity =
+    exact dense broadcast, today's trajectories bit-for-bit; see
+    DESIGN.md §5).  Pass the same value to :func:`init` so the
+    server-side error memory is allocated.
     """
     engine_step = engine.make_step(
         grad_fn, inner_opt, operator, lr_schedule, R,
-        dispatch=dispatch, global_rounds=True,
+        dispatch=dispatch, global_rounds=True, downlink=downlink,
     )
+    keep_view = not chn.as_channel(downlink, "downlink").is_identity()
 
     def step_fn(state: QsparseState, batch, sync, key):
         mask = jnp.broadcast_to(jnp.asarray(sync, bool), (R,))
         new, loss = engine_step(_to_engine(state, R), batch, mask, key)
-        return _from_engine(new), loss
+        return _from_engine(new, keep_view), loss
 
     return step_fn
 

@@ -15,7 +15,7 @@ vocabulary (so next-token prediction has learnable structure).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

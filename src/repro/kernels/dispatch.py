@@ -11,13 +11,16 @@ accounting, so callers never see which path ran (except through
 
 Three entry layers (see DESIGN.md §3.2-§3.4):
 
-  * :func:`compress_tree` — the engine's per-round entry.  With
-    ``pack=True`` (default) same-operator leaves are packed into one
-    padded ``[rows, n]`` megabuffer per (row length, k, sign) bucket —
-    lane-aligned, zero-padded — so a whole pytree costs **one kernel
-    launch per operator family** instead of one per leaf.  The kernels
-    are row-independent, so packing is output-identical to the
-    leaf-by-leaf path.
+  * :func:`compress_tree` / :func:`channel_compress_tree` — the
+    engine's per-round entries.  With ``pack=True`` (default)
+    same-operator leaves are packed into one padded ``[rows, n]``
+    megabuffer per (row length, k, sign) bucket — lane-aligned,
+    zero-padded — so a whole pytree costs **one kernel launch per
+    operator family** instead of one per leaf.  The kernels are
+    row-independent, so packing is output-identical to the leaf-by-leaf
+    path.  The channel form (uplink *and* downlink, DESIGN.md §5)
+    additionally returns the updated error memory — fused from the
+    kernel for Top_k leaves, ``acc − q`` elsewhere.
   * :func:`compress_leaf` / :func:`compact_compress` — per-leaf dense /
     compact form.  The compact form returns ``(idx, val)`` survivor
     buffers plus the fused error memory (the sparse wire format of
@@ -74,7 +77,7 @@ from repro.core.operators import (
 )
 from repro.kernels import qsgd as _qsgd
 from repro.kernels import topk_compress as _topk
-from repro.kernels.launch_stats import (  # re-exported for benchmarks
+from repro.kernels.launch_stats import (  # noqa: F401 — re-exported
     LAUNCHES, reset_launches, total_launches,
 )
 
@@ -511,7 +514,7 @@ def compress_leaf(op: CompressionOp, key, x: jnp.ndarray,
     return out, jnp.asarray(bits, jnp.float32), True
 
 
-def _compress_leaves_packed(ops, keys, leaves, cfg):
+def _compress_leaves_packed(ops, keys, leaves, cfg, want_mem: bool = False):
     """Megabuffer-packed leaf compression (DESIGN.md §3.4).
 
     Kernel-eligible leaves are bucketed by launch signature —
@@ -521,10 +524,17 @@ def _compress_leaves_packed(ops, keys, leaves, cfg):
     row-independent, so per-leaf outputs, error memories and counted
     bits are identical to the leaf-by-leaf path; only the launch count
     changes (one per populated bucket instead of one per leaf).
+
+    With ``want_mem`` (the channel path, :func:`channel_compress_tree`)
+    the third return carries per-leaf error memories: the kernel's
+    *fused* ``acc − selected`` for Top_k-family leaves (no extra
+    subtract outside the kernel), None for leaves whose memory the
+    caller derives as ``acc − out``.
     """
     n = len(leaves)
     outs: list = [None] * n
     bit_terms: list = [None] * n
+    mems: list = [None] * n
     topk_buckets: dict = {}
     qsgd_buckets: dict = {}
     for i, (op, key, x) in enumerate(zip(ops, keys, leaves)):
@@ -547,13 +557,15 @@ def _compress_leaves_packed(ops, keys, leaves, cfg):
     for (_, k, sign), entries in topk_buckets.items():
         mega = (entries[0][1] if len(entries) == 1
                 else jnp.concatenate([e[1] for e in entries], axis=0))
-        sel, _mem, cnt = _topk.topk_compress(
+        sel, mem, cnt = _topk.topk_compress(
             mega, k, sign=sign, block_rows=cfg.block_rows,
             interpret=cfg._interpret())
         off = 0
         for i, rows, bits_of, x in entries:
             r = rows.shape[0]
             outs[i] = _restore(sel[off:off + r], x)
+            if want_mem:
+                mems[i] = _restore(mem[off:off + r], x)
             bit_terms[i] = jnp.asarray(
                 bits_of(jnp.sum(cnt[off:off + r])), jnp.float32)
             off += r
@@ -570,7 +582,7 @@ def _compress_leaves_packed(ops, keys, leaves, cfg):
             bit_terms[i] = jnp.asarray(
                 bitlib.bits_qsgd(x.size, op.s, jnp.sum(o != 0.0)),
                 jnp.float32)
-    return outs, bit_terms
+    return outs, bit_terms, mems
 
 
 def compress_tree(op_tree, key, grads,
@@ -587,7 +599,7 @@ def compress_tree(op_tree, key, grads,
     else:
         keys = [None] * len(leaves)
     if cfg.pack and cfg.kernels_enabled():
-        outs, bit_terms = _compress_leaves_packed(ops, keys, leaves, cfg)
+        outs, bit_terms, _ = _compress_leaves_packed(ops, keys, leaves, cfg)
     else:
         outs, bit_terms = [], []
         for op, k, g in zip(ops, keys, leaves):
@@ -596,3 +608,44 @@ def compress_tree(op_tree, key, grads,
             bit_terms.append(b)
     total = jnp.sum(jnp.stack(bit_terms)) if bit_terms else jnp.float32(0)
     return jax.tree_util.tree_unflatten(treedef, outs), total
+
+
+def channel_compress_tree(op_tree, key, acc,
+                          cfg: Optional[DispatchConfig] = None):
+    """Channel-aware tree compression (DESIGN.md §5): compress the
+    error-compensated accumulator ``acc`` and hand back the updated
+    error memory alongside.
+
+    Returns ``(q_tree, mem_tree, total_bits)`` with the invariant
+    ``q + mem == acc`` per leaf.  Uplink and downlink both enter here
+    (``core.channel.Channel.apply``), so downlink leaves join the same
+    megabuffer packing buckets and trace-time launch counters as the
+    uplink — one kernel launch per operator family per direction per
+    sync round.  Top_k-family kernel leaves return the kernel's *fused*
+    error memory (computed in the same VMEM residency, §3.3); every
+    other leaf derives it as ``acc − q`` — bit-identical either way,
+    both are the same f32 elementwise subtract.
+    """
+    cfg = _resolve(cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(acc)
+    ops = ops_for_leaves(op_tree, len(leaves))
+    if key is not None:
+        keys = jax.random.split(key, len(leaves))
+    else:
+        keys = [None] * len(leaves)
+    if cfg.pack and cfg.kernels_enabled():
+        outs, bit_terms, mems = _compress_leaves_packed(
+            ops, keys, leaves, cfg, want_mem=True)
+    else:
+        outs, bit_terms, mems = [], [], []
+        for op, k, g in zip(ops, keys, leaves):
+            o, b, _ = compress_leaf(op, k, g, cfg)
+            outs.append(o)
+            bit_terms.append(b)
+            mems.append(None)
+    mems = [m if m is not None else a - o
+            for m, a, o in zip(mems, leaves, outs)]
+    total = jnp.sum(jnp.stack(bit_terms)) if bit_terms else jnp.float32(0)
+    return (jax.tree_util.tree_unflatten(treedef, outs),
+            jax.tree_util.tree_unflatten(treedef, mems),
+            total)

@@ -23,7 +23,6 @@ derived roofline terms (see benchmarks/roofline.py for the report).
 
 import argparse
 import json
-import re
 import time
 import traceback
 

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.compat import set_mesh
 from repro.configs import ARCHS, get_config
-from repro.launch.mesh import data_axes, worker_count
+from repro.launch.mesh import data_axes
 from repro.models import get_model
 from repro.sharding.specs import activation_policy, param_specs, sanitize_spec
 

@@ -58,6 +58,15 @@ def main():
                     choices=["dense_psum", "sparse_allgather"],
                     help="sync aggregation: dense psum, or compact "
                          "(idx, val) allgather (the sparse wire format)")
+    ap.add_argument("--downlink", default="identity",
+                    choices=["identity", "topk", "signtopk"],
+                    help="server→worker compression channel (DESIGN.md "
+                         "§5): identity = exact dense broadcast (charged "
+                         "on the downlink ledger), topk/signtopk = "
+                         "error-compensated compressed master delta")
+    ap.add_argument("--downlink-k-frac", type=float, default=None,
+                    help="survivor fraction of the downlink channel "
+                         "(default: --k-frac)")
     ap.add_argument("--zero1", action="store_true")
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--ckpt", default=None)
@@ -79,11 +88,19 @@ def main():
             return l
         return jax.value_and_grad(loss)(params)
 
+    downlink = None
+    if args.downlink != "identity":
+        downlink = ShardCompressor(
+            args.downlink,
+            args.downlink_k_frac if args.downlink_k_frac is not None
+            else args.k_frac,
+            dispatch=args.dispatch)
     init_fn, local_step, sync_step = make_dist_steps(
         grad_fn, momentum_sgd(0.9),
         ShardCompressor(args.compressor, args.k_frac, dispatch=args.dispatch),
         warmup_piecewise(args.lr, 5, [int(args.steps * 0.8)]),
         mesh, daxes, specs, zero1=args.zero1, aggregate=args.aggregate,
+        downlink=downlink,
     )
     from jax.sharding import NamedSharding
     params = model.init_params(jax.random.PRNGKey(0), cfg)
@@ -93,6 +110,7 @@ def main():
         params, specs,
         is_leaf=lambda z: hasattr(z, "shape") and not isinstance(z, dict),
     )
+    from repro.kernels.dispatch import LAUNCHES, reset_launches
     with set_mesh(mesh):
         params = jax.device_put(params, put_specs)
         state = init_fn(params)
@@ -100,6 +118,12 @@ def main():
         stream = LMTokenStream(vocab=cfg.vocab, R=R, order=64, seed=0)
         key = jax.random.PRNGKey(1)
         t0 = time.time()
+        # kernel launches are counted at trace time (launch_stats.py):
+        # snapshot after the first sync step traces — with megabuffer
+        # packing this shows one launch per operator family per
+        # direction per sync round, regardless of leaf count
+        reset_launches()
+        launch_note = None
         for t, batch in enumerate(
                 stream.batches(args.batch, args.seq, args.steps, seed=1)):
             key, sub = jax.random.split(key)
@@ -110,15 +134,23 @@ def main():
             if (t + 1) % args.H == 0 or t == args.steps - 1:
                 state, loss = ss(state, b, sub)
                 kind = "sync "
+                if launch_note is None:
+                    launch_note = " ".join(
+                        f"{k}={v}" for k, v in LAUNCHES.items() if v) or "none"
+                note = f" launches/round [{launch_note}]"
             else:
                 state, loss = ls(state, b, sub)
                 kind = "local"
+                note = ""
             print(f"step {t + 1:4d} [{kind}] loss {float(loss):.4f} "
-                  f"bits {float(state.bits):.3g}", flush=True)
+                  f"bits up {float(state.bits):.3g} "
+                  f"down {float(state.bits_down):.3g}{note}", flush=True)
         dt = time.time() - t0
+    total = float(state.bits) + float(state.bits_down)
     print(f"\n{args.steps} steps in {dt:.1f}s ({args.steps / dt:.2f} it/s); "
           f"R={R} workers, {int(state.rounds)} sync rounds, "
-          f"{float(state.bits):.3g} wire bits")
+          f"{float(state.bits):.3g} uplink + {float(state.bits_down):.3g} "
+          f"downlink = {total:.3g} wire bits")
     assert np.isfinite(float(loss))
     if args.ckpt:
         checkpoint.save(args.ckpt, state.master, step=args.steps)

@@ -14,7 +14,6 @@ long-context decode masks uniform.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple, Optional
 
 import jax

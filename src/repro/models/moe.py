@@ -41,7 +41,6 @@ from repro.models.layers import (
     rmsnorm,
     swiglu,
 )
-from repro.models import transformer as tr
 
 
 # ---------------------------------------------------------------------------

@@ -14,15 +14,13 @@ frontend itself is the one allowed stub (see DESIGN.md).
 
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig, NO_SHARDING, ShardingPolicy
 from repro.models.layers import (
-    KVCache,
     attn_block_decode,
     attn_block_train,
     attn_params,

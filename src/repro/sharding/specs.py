@@ -14,8 +14,6 @@ for the roofline.
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShardingPolicy

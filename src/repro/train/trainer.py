@@ -44,6 +44,12 @@ class RunConfig:
     target_loss: Optional[float] = None
     dispatch: str = "auto"  # "auto" | "kernel" | "reference"
     pack: bool = True       # megabuffer-pack same-operator leaves per round
+    # server→worker compression channel (DESIGN.md §5): an operator (or
+    # tree) applied to each syncing worker's master delta with a
+    # server-side error memory.  None/Identity = exact dense broadcast
+    # (historical trajectories bit-for-bit), charged to the downlink
+    # ledger.
+    downlink_op: Optional[Any] = None
 
 
 @dataclasses.dataclass
@@ -51,6 +57,7 @@ class History:
     steps: list = dataclasses.field(default_factory=list)
     loss: list = dataclasses.field(default_factory=list)
     bits: list = dataclasses.field(default_factory=list)
+    bits_down: list = dataclasses.field(default_factory=list)
     rounds: list = dataclasses.field(default_factory=list)
     eval_steps: list = dataclasses.field(default_factory=list)
     eval_metrics: list = dataclasses.field(default_factory=list)
@@ -62,6 +69,7 @@ class History:
         return {
             "final_loss": self.loss[-1] if self.loss else None,
             "total_bits": self.bits[-1] if self.bits else 0.0,
+            "total_bits_down": self.bits_down[-1] if self.bits_down else 0.0,
             "rounds": self.rounds[-1] if self.rounds else 0,
             "bits_to_target": self.bits_to_target,
             "steps_to_target": self.steps_to_target,
@@ -95,10 +103,11 @@ def train(
     hist = History()
     t0 = time.time()
     dispatch = DispatchConfig(mode=run.dispatch, pack=run.pack)
-    state = engine.init(params, inner_opt, run.R)
+    state = engine.init(params, inner_opt, run.R, downlink=run.downlink_op)
     step_fn = jax.jit(engine.make_step(
         grad_fn, inner_opt, operator, lr_schedule, run.R,
-        dispatch=dispatch, global_rounds=not run.asynchronous))
+        dispatch=dispatch, global_rounds=not run.asynchronous,
+        downlink=run.downlink_op))
     mask = make_mask(run)
 
     recent = []
@@ -117,6 +126,7 @@ def train(
             hist.steps.append(t + 1)
             hist.loss.append(sm)
             hist.bits.append(float(state.bits))
+            hist.bits_down.append(float(state.bits_down))
             hist.rounds.append(int(state.rounds))
         if (run.target_loss is not None and hist.bits_to_target is None
                 and sm <= run.target_loss and len(recent) == smooth):

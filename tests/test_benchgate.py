@@ -1,0 +1,78 @@
+"""benchmarks/check_regression.py gate semantics: new rows are
+reported and skipped, removed rows fail, regressions fail."""
+
+import json
+import subprocess
+import sys
+import os
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GATE = os.path.join(REPO, "benchmarks", "check_regression.py")
+
+
+def _write(path, rows):
+    with open(path, "w") as f:
+        json.dump({"suite": "operators",
+                   "rows": [{"name": n, "us_per_call": us,
+                             "wire_bits": wb} for n, us, wb in rows]}, f)
+
+
+def _gate(baseline, current, *extra):
+    out = subprocess.run(
+        [sys.executable, GATE, "--baseline", baseline,
+         "--current", current, *extra],
+        capture_output=True, text=True)
+    return out.returncode, out.stdout
+
+
+@pytest.fixture
+def paths(tmp_path):
+    return str(tmp_path / "base.json"), str(tmp_path / "cur.json")
+
+
+def test_new_rows_reported_and_skipped(paths):
+    base, cur = paths
+    _write(base, [("op/a", 1000.0, 64.0)])
+    # the new row is wildly "slow" — must still pass: no baseline to
+    # judge it against until the committed baseline is regenerated
+    _write(cur, [("op/a", 1000.0, 64.0), ("channel/new", 99000.0, 1.0)])
+    rc, out = _gate(base, cur)
+    assert rc == 0, out
+    assert "NEW channel/new" in out
+    assert "skipped" in out
+
+
+def test_removed_rows_fail(paths):
+    base, cur = paths
+    _write(base, [("op/a", 1000.0, 64.0), ("op/gone", 1000.0, 64.0)])
+    _write(cur, [("op/a", 1000.0, 64.0)])
+    rc, out = _gate(base, cur)
+    assert rc == 1
+    assert "missing" in out
+
+
+def test_relative_regression_fails_uniform_slowdown_passes(paths):
+    base, cur = paths
+    _write(base, [(f"op/{i}", 1000.0, 64.0) for i in range(5)])
+    # uniform 2x slowdown (cold runner): calibrated away, passes
+    _write(cur, [(f"op/{i}", 2000.0, 64.0) for i in range(5)])
+    rc, out = _gate(base, cur)
+    assert rc == 0, out
+    # one row 4x slower than its peers: fails
+    rows = [(f"op/{i}", 2000.0, 64.0) for i in range(4)]
+    rows.append(("op/4", 8000.0, 64.0))
+    _write(cur, rows)
+    rc, out = _gate(base, cur)
+    assert rc == 1
+    assert "REGRESSION" in out
+
+
+def test_wire_bit_change_fails(paths):
+    base, cur = paths
+    _write(base, [("op/a", 1000.0, 64.0), ("op/b", 1000.0, 100.0)])
+    _write(cur, [("op/a", 1000.0, 64.0), ("op/b", 1000.0, 150.0)])
+    rc, out = _gate(base, cur)
+    assert rc == 1
+    assert "LEDGER CHANGE" in out

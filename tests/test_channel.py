@@ -1,0 +1,267 @@
+"""Channel model tests (DESIGN.md §5): error-compensated downlink
+alongside the uplink, per-direction ledgers, exact backward compat.
+
+Pins the acceptance contract of the channelization refactor:
+ * ``downlink=None`` and ``downlink=Identity`` reproduce identical
+   trajectories and an identical uplink ledger (the exact-broadcast
+   fast path), while the new downlink ledger charges the dense
+   broadcast cost the old uplink-only ledger omitted;
+ * a compressed downlink converges to the same neighborhood, its
+   ledger uses the counted-survivor forms, and non-syncing workers
+   keep their view/server-memory untouched (Algorithm-2 semantics).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (async_qsparse, bits as bitlib, channel as chn,
+                        engine, operators as ops, qsparse, schedule)
+from repro.kernels import dispatch as dsp
+from repro.optim import constant, inverse_time, sgd
+
+R, D = 4, 50
+
+
+@pytest.fixture(scope="module")
+def problem():
+    cs = jax.random.normal(jax.random.PRNGKey(1), (R, D))
+
+    def grad_fn(params, data):
+        c, noise = data
+        g = params["w"] - c + 0.01 * noise
+        return 0.5 * jnp.sum((params["w"] - c) ** 2), {"w": g}
+
+    def batches(T, seed=2):
+        k = jax.random.PRNGKey(seed)
+        out = []
+        for _ in range(T):
+            k, s = jax.random.split(k)
+            out.append((cs, jax.random.normal(s, (R, D))))
+        return out
+
+    return cs, grad_fn, batches
+
+
+def run_sync(grad_fn, batches, op, T, H, lr, downlink=None, seed=3):
+    params = {"w": jnp.zeros(D)}
+    inner = sgd()
+    state = qsparse.init(params, inner, R, downlink=downlink)
+    step = qsparse.make_step(grad_fn, inner, op, lr, R, downlink=downlink)
+    mask = schedule.fixed_schedule(T, H)
+    state, losses = qsparse.run(state, step, batches, mask,
+                                jax.random.PRNGKey(seed))
+    return state, losses
+
+
+# ---------------------------------------------------------------------------
+# channel algebra
+# ---------------------------------------------------------------------------
+
+
+def test_channel_apply_error_feedback_identity():
+    """q + memory' == acc exactly, on both dispatch routes."""
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(0), (64, 256)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (37,))}
+    for mode in ("reference", "kernel"):
+        ch = chn.Channel(ops.TopK(k=0.1), "downlink",
+                         dsp.DispatchConfig(mode=mode))
+        q, mem, bits = ch.apply(jax.random.PRNGKey(2), tree)
+        for k in tree:
+            np.testing.assert_array_equal(
+                np.asarray(q[k] + mem[k]), np.asarray(tree[k]))
+        assert float(bits) > 0
+
+
+def test_channel_compress_tree_matches_compress_tree():
+    """The channel entry is the same compression as compress_tree —
+    same outputs, same counted bits — plus the memory."""
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(0), (64, 256))}
+    key = jax.random.PRNGKey(2)
+    for mode in ("reference", "kernel"):
+        cfg = dsp.DispatchConfig(mode=mode)
+        op = ops.TopK(k=0.05)
+        q0, b0 = dsp.compress_tree(op, key, tree, cfg)
+        q1, mem, b1 = dsp.channel_compress_tree(op, key, tree, cfg)
+        np.testing.assert_array_equal(np.asarray(q0["a"]),
+                                      np.asarray(q1["a"]))
+        np.testing.assert_allclose(float(b0), float(b1))
+        np.testing.assert_array_equal(
+            np.asarray(q1["a"] + mem["a"]), np.asarray(tree["a"]))
+
+
+def test_channel_identity_detection():
+    assert chn.as_channel(None, "downlink").is_identity()
+    assert chn.as_channel(ops.Identity(), "downlink").is_identity()
+    assert chn.as_channel({"w": ops.Identity(), "b": ops.Identity()},
+                          "downlink").is_identity()
+    assert not chn.as_channel(ops.TopK(k=2), "downlink").is_identity()
+    assert not chn.as_channel({"w": ops.Identity(), "b": ops.TopK(k=2)},
+                              "downlink").is_identity()
+
+
+# ---------------------------------------------------------------------------
+# exact backward compat (acceptance: bit-identical with Identity)
+# ---------------------------------------------------------------------------
+
+
+def test_identity_downlink_bit_identical(problem):
+    """downlink=None and downlink=Identity: identical trajectories,
+    identical uplink ledger; the downlink ledger charges exactly the
+    dense broadcast cost per syncing worker."""
+    cs, grad_fn, batches = problem
+    T, H = 24, 4
+    bs = batches(T)
+    op = ops.TopK(k=10)
+    s0, l0 = run_sync(grad_fn, bs, op, T, H, constant(0.05), downlink=None)
+    s1, l1 = run_sync(grad_fn, bs, op, T, H, constant(0.05),
+                      downlink=ops.Identity())
+    np.testing.assert_array_equal(np.asarray(s0.master["w"]),
+                                  np.asarray(s1.master["w"]))
+    np.testing.assert_array_equal(np.asarray(s0.local["w"]),
+                                  np.asarray(s1.local["w"]))
+    np.testing.assert_array_equal(np.asarray(s0.memory["w"]),
+                                  np.asarray(s1.memory["w"]))
+    assert float(s0.bits) == float(s1.bits)
+    assert l0 == l1
+    rounds = int(s0.rounds)
+    expected_down = rounds * R * bitlib.bits_dense(D)
+    assert float(s0.bits_down) == expected_down
+    assert float(s1.bits_down) == expected_down
+    # the combined ledger is up + down
+    led = chn.wire_ledger(s0)
+    np.testing.assert_allclose(float(led.total),
+                               float(s0.bits) + expected_down)
+
+
+def test_identity_downlink_views_equal_master(problem):
+    """Exact broadcast: at a sync step every synced view IS the master
+    (no float drift — the assignment path, not view + (x̄ − view))."""
+    cs, grad_fn, batches = problem
+    T, H = 8, 4
+    state, _ = run_sync(grad_fn, batches(T), ops.TopK(k=10), T, H,
+                        constant(0.05), downlink=ops.Identity())
+    np.testing.assert_array_equal(np.asarray(state.local["w"][0]),
+                                  np.asarray(state.master["w"]))
+
+
+# ---------------------------------------------------------------------------
+# compressed downlink
+# ---------------------------------------------------------------------------
+
+
+def test_compressed_downlink_ledger_counted(problem):
+    """Downlink Top_k charges the counted-survivor wire cost per
+    syncing worker per round (exact-k on tie-free data)."""
+    cs, grad_fn, batches = problem
+    T, H, kd = 24, 4, 20
+    state, _ = run_sync(grad_fn, batches(T), ops.TopK(k=10), T, H,
+                        constant(0.05), downlink=ops.TopK(k=kd))
+    rounds = int(state.rounds)
+    np.testing.assert_allclose(
+        float(state.bits_down), rounds * R * bitlib.bits_topk(D, kd))
+    # uplink ledger is untouched by the downlink choice
+    s0, _ = run_sync(grad_fn, batches(T), ops.TopK(k=10), T, H,
+                     constant(0.05))
+    assert float(state.bits) == float(s0.bits)
+
+
+def test_compressed_downlink_error_feedback_state(problem):
+    """Views lag the master (compression is lossy) but the server-side
+    memory absorbs exactly the undelivered part: after every sync,
+    view' + md' == x̄' + md (the channel's error-feedback identity
+    q + md' == md + (x̄' − view) rearranged)."""
+    cs, grad_fn, batches = problem
+    T, H = 24, 4
+    bs = batches(T)
+    dl = ops.TopK(k=15)
+    params = {"w": jnp.zeros(D)}
+    inner = sgd()
+    state = qsparse.init(params, inner, R, downlink=dl)
+    step = jax.jit(
+        qsparse.make_step(grad_fn, inner, ops.TopK(k=10), constant(0.05),
+                          R, downlink=dl),
+        static_argnames=("sync",))
+    mask = schedule.fixed_schedule(T, H)
+    key = jax.random.PRNGKey(3)
+    for t in range(T):
+        key, sub = jax.random.split(key)
+        prev_md = np.asarray(state.down_memory["w"])
+        state, _ = step(state, bs[t], sync=bool(mask[t]), key=sub)
+        if mask[t]:
+            views = np.asarray(state.master_view["w"])
+            md = np.asarray(state.down_memory["w"])
+            master = np.asarray(state.master["w"])
+            np.testing.assert_allclose(views + md, master[None] + prev_md,
+                                       rtol=1e-5, atol=1e-6)
+    # and the compression is genuinely lossy: views lag the master
+    assert np.max(np.abs(np.asarray(state.master_view["w"])
+                         - np.asarray(state.master["w"])[None])) > 0
+
+
+def test_compressed_downlink_converges(problem):
+    """Bidirectional compression converges to the same neighborhood.
+
+    Note the downlink has its own stability condition (double
+    compression, cf. Double Squeeze / DORE): the view lag feeds the
+    uplink through the local restarts, so aggressive downlink
+    compression needs a commensurately small effective step
+    (~eta*H*(1-gamma_d)/gamma_d < 1).  gamma_d = 0.5 here keeps the
+    paper's LR schedule stable."""
+    cs, grad_fn, batches = problem
+    opt_pt = jnp.mean(cs, 0)
+    T, H = 1200, 4
+    lr = inverse_time(30.0, 200.0)
+    state, _ = run_sync(grad_fn, batches(T), ops.TopK(k=10), T, H, lr,
+                        downlink=ops.TopK(k=25))
+    err = float(jnp.linalg.norm(state.master["w"] - opt_pt))
+    assert err < 0.6, err
+
+
+def test_async_downlink_nonsync_workers_keep_channel_state(problem):
+    cs, grad_fn, batches = problem
+    dl = ops.TopK(k=8)
+    params = {"w": jnp.zeros(D)}
+    inner = sgd()
+    state = async_qsparse.init(params, inner, R, downlink=dl)
+    step = jax.jit(async_qsparse.make_step(
+        grad_fn, inner, ops.TopK(k=8), constant(0.05), R, downlink=dl))
+    b = batches(1)[0]
+    flags = jnp.array([True] + [False] * (R - 1))
+    state, _ = step(state, b, flags, jax.random.PRNGKey(0))
+    # worker 0 synced: its view moved and its server memory may be
+    # nonzero; the others' channel state is untouched
+    assert float(jnp.sum(jnp.abs(state.master_view["w"][0]))) > 0.0
+    np.testing.assert_array_equal(np.asarray(state.master_view["w"][1]),
+                                  np.zeros(D))
+    np.testing.assert_array_equal(np.asarray(state.down_memory["w"][1]),
+                                  np.zeros(D))
+    # downlink ledger charged for exactly one worker
+    np.testing.assert_allclose(float(state.bits_down),
+                               bitlib.bits_topk(D, 8))
+
+
+def test_engine_requires_down_memory():
+    """Stepping a compressed downlink over a state initialized without
+    one fails loudly at trace time."""
+    params = {"w": jnp.zeros(D)}
+    inner = sgd()
+
+    def grad_fn(p, data):
+        return 0.5 * jnp.sum(p["w"] ** 2), {"w": p["w"]}
+
+    state = engine.init(params, inner, R)  # no downlink memory
+    step = engine.make_step(grad_fn, inner, ops.TopK(k=5), constant(0.1),
+                            R, downlink=ops.TopK(k=5))
+    with pytest.raises(ValueError, match="down"):
+        step(state, {"w": jnp.zeros((R, D))}, jnp.ones((R,), bool),
+             jax.random.PRNGKey(0))
+    # ... and the converse: a downlink-initialized state stepped by a
+    # downlink-less step must not silently fall back to exact broadcast
+    state_dl = engine.init(params, inner, R, downlink=ops.TopK(k=5))
+    step_plain = engine.make_step(grad_fn, inner, ops.TopK(k=5),
+                                  constant(0.1), R)
+    with pytest.raises(ValueError, match="without downlink"):
+        step_plain(state_dl, {"w": jnp.zeros((R, D))},
+                   jnp.ones((R,), bool), jax.random.PRNGKey(0))

@@ -205,6 +205,181 @@ def test_sparse_allgather_kernel_compact(subproc):
     assert "SPARSE==DENSE OK" in out
 
 
+DOWNLINK_PARITY = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.compat import set_mesh
+from repro.core.distributed import make_dist_steps, ShardCompressor
+from repro.optim import sgd, constant
+
+# legacy-0.4.x TP=2 partial-manual mesh: the downlink must stay
+# partition-safe here in BOTH aggregation modes (acceptance criterion)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+R, d_in, d_out = 4, 256, 16
+params = {"w": jnp.zeros((d_in, d_out)), "b": jnp.zeros((d_out,))}
+specs = {"w": P(None, "model"), "b": P("model")}
+params = jax.device_put(params, jax.tree.map(
+    lambda s: NamedSharding(mesh, s), specs,
+    is_leaf=lambda z: isinstance(z, P)))
+Wtrue = 0.3 * jax.random.normal(jax.random.PRNGKey(0), (d_in, d_out))
+
+def grad_fn(p, batch):
+    x, y = batch
+    f = lambda pp: jnp.mean((x @ pp["w"] + pp["b"] - y) ** 2)
+    return jax.value_and_grad(f)(p)
+
+def run(aggregate, disp, downlink, ddisp):
+    dl = None if downlink is None else ShardCompressor(
+        "topk", 0.1, dispatch=ddisp)
+    init_fn, ls_, ss_ = make_dist_steps(
+        grad_fn, sgd(), ShardCompressor("topk", 0.05, dispatch=disp),
+        constant(0.05), mesh, ("data",), specs, aggregate=aggregate,
+        downlink=dl)
+    with set_mesh(mesh):
+        state = init_fn(params)
+        ls, ss = jax.jit(ls_), jax.jit(ss_)
+        key = jax.random.PRNGKey(1)
+        for t in range(12):
+            key, s1, s2 = jax.random.split(key, 3)
+            x = jax.random.normal(s1, (R, 8, d_in))
+            y = jnp.einsum("rbi,io->rbo", x, Wtrue)
+            if (t + 1) % 4 == 0:
+                state, loss = ss(state, (x, y), s2)
+            else:
+                state, loss = ls(state, (x, y), s2)
+    return state
+
+# compressed downlink: the dense-psum and sparse-allgather paths must
+# agree on worker state and BOTH directions' counted bits.  The sparse
+# leg runs the compact kernels for uplink and downlink alike (the
+# buffers leave the manual region via out_specs, 0.4.x-safe).
+sd = run("dense_psum", "reference", "topk", "reference")
+sp = run("sparse_allgather", "kernel", "topk", "kernel")
+np.testing.assert_allclose(np.asarray(sd.master["w"]),
+                           np.asarray(sp.master["w"]),
+                           rtol=1e-4, atol=1e-5)
+np.testing.assert_allclose(np.asarray(sd.view["w"]),
+                           np.asarray(sp.view["w"]),
+                           rtol=1e-4, atol=1e-5)
+np.testing.assert_allclose(np.asarray(sd.down_memory["w"]),
+                           np.asarray(sp.down_memory["w"]),
+                           rtol=1e-4, atol=1e-5)
+np.testing.assert_allclose(float(sd.bits), float(sp.bits))
+np.testing.assert_allclose(float(sd.bits_down), float(sp.bits_down))
+assert float(sd.bits_down) > 0
+# post-sync locals equal the views (workers adopt the compressed
+# broadcast, not the true master), and views genuinely lag the master
+np.testing.assert_allclose(np.asarray(sd.local["w"]),
+                           np.asarray(sd.view["w"]), rtol=0, atol=0)
+assert float(jnp.max(jnp.abs(sd.view["w"][0] - sd.master["w"]))) > 0
+
+# identity downlink: trajectories and the uplink ledger are
+# bit-identical to the downlink-less run; only the new downlink
+# ledger differs (dense broadcast cost vs the same dense cost) —
+# i.e. exact backward compat plus honest accounting.
+s_none = run("dense_psum", "reference", None, None)
+from repro.core import bits as bitlib
+dense_leaf_bits = sum(32 * v.size for v in params.values())
+assert float(s_none.bits_down) == 3 * R * dense_leaf_bits
+print("DOWNLINK PARITY OK", float(sd.bits), float(sd.bits_down))
+"""
+
+
+def test_downlink_dense_sparse_parity(subproc):
+    """Compressed downlink: dense-psum and sparse-allgather agree on
+    worker states and per-direction counted bits on the legacy 0.4.x
+    TP>1 partial-manual mesh (DESIGN.md §5)."""
+    out = subproc(DOWNLINK_PARITY, devices=8)
+    assert "DOWNLINK PARITY OK" in out
+
+
+TP_KERNEL_GUARD = r"""
+import warnings
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.compat import MODERN, set_mesh
+from repro.core.distributed import make_dist_steps, ShardCompressor
+from repro.optim import sgd, constant
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+R, d_in, d_out = 4, 256, 16
+params = {"w": jnp.zeros((d_in, d_out)), "b": jnp.zeros((d_out,))}
+specs = {"w": P(None, "model"), "b": P("model")}
+params = jax.device_put(params, jax.tree.map(
+    lambda s: NamedSharding(mesh, s), specs,
+    is_leaf=lambda z: isinstance(z, P)))
+Wtrue = 0.3 * jax.random.normal(jax.random.PRNGKey(0), (d_in, d_out))
+
+def grad_fn(p, batch):
+    x, y = batch
+    f = lambda pp: jnp.mean((x @ pp["w"] + pp["b"] - y) ** 2)
+    return jax.value_and_grad(f)(p)
+
+def run(disp, ddisp=None):
+    dl = (None if ddisp is None
+          else ShardCompressor("topk", 0.1, dispatch=ddisp))
+    init_fn, ls_, ss_ = make_dist_steps(
+        grad_fn, sgd(), ShardCompressor("topk", 0.05, dispatch=disp),
+        constant(0.05), mesh, ("data",), specs, aggregate="dense_psum",
+        downlink=dl)
+    with set_mesh(mesh):
+        state = init_fn(params)
+        ls, ss = jax.jit(ls_), jax.jit(ss_)
+        key = jax.random.PRNGKey(1)
+        for t in range(8):
+            key, s1, s2 = jax.random.split(key, 3)
+            x = jax.random.normal(s1, (R, 8, d_in))
+            y = jnp.einsum("rbi,io->rbo", x, Wtrue)
+            if (t + 1) % 4 == 0:
+                state, loss = ss(state, (x, y), s2)
+            else:
+                state, loss = ls(state, (x, y), s2)
+    return state
+
+# ShardCompressor(dispatch="kernel") + dense psum on a TP>1 legacy mesh
+# used to hard-crash XLA (IsManualSubgroup, ROADMAP known issue); the
+# engine now auto-downgrades the uplink to reference dispatch with a
+# one-time warning and identical results.
+with warnings.catch_warnings(record=True) as wlog:
+    warnings.simplefilter("always")
+    s_kernel = run("kernel")
+    msgs = [str(w.message) for w in wlog]
+if MODERN:
+    assert not any("downgrading the uplink" in m for m in msgs), msgs
+else:
+    assert sum("downgrading the uplink" in m for m in msgs) == 1, msgs
+s_ref = run("reference")
+np.testing.assert_allclose(np.asarray(s_kernel.master["w"]),
+                           np.asarray(s_ref.master["w"]),
+                           rtol=1e-5, atol=1e-6)
+np.testing.assert_allclose(float(s_kernel.bits), float(s_ref.bits))
+
+# the *downlink* channel needs the same guard: its kernel launches also
+# trip IsManualSubgroup inside the dense-psum body, even though its
+# output never feeds a collective (reproduced before the guard)
+with warnings.catch_warnings(record=True) as wlog:
+    warnings.simplefilter("always")
+    s_dk = run("kernel", ddisp="kernel")
+    msgs = [str(w.message) for w in wlog]
+if not MODERN:
+    assert sum("downgrading the downlink" in m for m in msgs) == 1, msgs
+s_dr = run("reference", ddisp="reference")
+np.testing.assert_allclose(np.asarray(s_dk.master["w"]),
+                           np.asarray(s_dr.master["w"]),
+                           rtol=1e-5, atol=1e-6)
+np.testing.assert_allclose(float(s_dk.bits_down), float(s_dr.bits_down))
+print("TP KERNEL GUARD OK")
+"""
+
+
+def test_legacy_tp_kernel_guard(subproc):
+    """dispatch="kernel" + dense_psum on a TP>1 0.4.x mesh downgrades
+    to reference dispatch with one warning instead of crashing, and
+    matches the reference run exactly."""
+    out = subproc(TP_KERNEL_GUARD, devices=8)
+    assert "TP KERNEL GUARD OK" in out
+
+
 MULTIPOD = r"""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding

@@ -4,7 +4,6 @@ decode == forward/prefill consistency, sliding-window semantics."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import ModelConfig

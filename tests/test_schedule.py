@@ -1,0 +1,74 @@
+"""core/schedule.py coverage: Definition-4 gap bounds on sampled async
+schedules (property-tested) and fixed_schedule edge cases."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schedule
+
+
+# ---------------------------------------------------------------------------
+# Definition 4: gap(I_T^{(r)}) <= H for every sampled worker schedule
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(T=st.integers(1, 250), Rr=st.integers(1, 10), H=st.integers(1, 12),
+       seed=st.integers(0, 10_000))
+def test_async_schedule_gap_bounded(T, Rr, H, seed):
+    mask = schedule.async_schedule(T, Rr, H, seed=seed)
+    assert mask.shape == (T, Rr)
+    for g in schedule.worker_gaps(mask):
+        assert 0 < g <= max(H, 1)
+    # the paper requires T in I_T^{(r)} for every worker
+    assert mask[T - 1].all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(T=st.integers(1, 250), H=st.integers(1, 16))
+def test_fixed_schedule_gap_and_terminal(T, H):
+    mask = schedule.fixed_schedule(T, H)
+    idx = [t + 1 for t in range(T) if mask[t]]
+    # gap can reach H; the final partial window never exceeds it by
+    # construction (T is appended, closing the last interval early)
+    assert schedule.gap(idx) <= max(H, 1) or idx == [T]
+    assert T in idx
+
+
+# ---------------------------------------------------------------------------
+# fixed_schedule edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_fixed_schedule_T_smaller_than_H():
+    """T < H: no interior multiple of H fits — only the mandatory
+    terminal sync survives."""
+    mask = schedule.fixed_schedule(3, 10)
+    np.testing.assert_array_equal(mask, [False, False, True])
+
+
+def test_fixed_schedule_H1_is_every_step():
+    assert schedule.fixed_schedule(7, 1).all()
+
+
+def test_fixed_schedule_T_multiple_of_H():
+    mask = schedule.fixed_schedule(8, 4)
+    np.testing.assert_array_equal(
+        mask, [False] * 3 + [True] + [False] * 3 + [True])
+
+
+def test_fixed_schedule_single_step():
+    np.testing.assert_array_equal(schedule.fixed_schedule(1, 5), [True])
+
+
+def test_schedule_from_indices_clamps_and_terminates():
+    mask = schedule.schedule_from_indices(6, [2, 9, -1, 4])
+    # out-of-range indices drop; T is always appended
+    np.testing.assert_array_equal(
+        mask, [False, True, False, True, False, True])
+
+
+def test_gap_conventions():
+    assert schedule.gap([]) == 0
+    assert schedule.gap([5]) == 5          # measured from t = 0
+    assert schedule.gap([2, 4, 9]) == 5

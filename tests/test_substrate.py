@@ -13,7 +13,6 @@ from repro.data import LMTokenStream, make_image_data, mnist_like, worker_batche
 from repro.optim import (
     adam,
     apply_updates,
-    constant,
     inverse_time,
     momentum_sgd,
     paper_convex_lr,
