@@ -111,6 +111,7 @@ def run():
 
     rows.extend(_bench_packing())
     rows.extend(_bench_channel_round())
+    rows.extend(_bench_hetero_policy())
     return rows
 
 
@@ -141,6 +142,59 @@ def _bench_packing():
             f"launches_per_round={launches};"
             f"rounds_per_s={1e6 / max(us, 1e-9):.2f};"
             f"wire_ratio={float(bits) / (32 * d):.5f}",
+            wire_bits=float(bits),
+            path="packed" if pack else "per_leaf"))
+    return rows
+
+
+def _bench_hetero_policy():
+    """Heterogeneous policy packing (DESIGN.md §6): one sync round of a
+    per-leaf policy (Top_k matmuls, QSGD embeddings, dense norms)
+    through the channel path, both directions.  Megabuffer packing must
+    keep launches/round at one per operator *family* per direction —
+    heterogeneous leaves bucket by family, not by leaf."""
+    from repro.core import policy as pol
+    from repro.core.channel import Channel
+
+    tree = {
+        "layers": {f"w{i}": jax.random.normal(jax.random.PRNGKey(80 + i),
+                                              (128, 2048))
+                   for i in range(6)},
+        "embed": jax.random.normal(jax.random.PRNGKey(90), (64, 4096)),
+        "head": jax.random.normal(jax.random.PRNGKey(91), (64, 4096)),
+        "ln": jax.random.normal(jax.random.PRNGKey(92), (256,)),
+    }
+    spec = pol.parse(
+        "ln->identity;embed|head->qsgd:s=15;.*->topk:k=0.01"
+        " >> ln->identity;.*->topk:k=0.05")
+    up_tree, down_tree = pol.as_channel_spec(spec).resolve(tree)
+    d = int(sum(v.size for v in jax.tree_util.tree_leaves(tree)))
+    rows = []
+    for pack in (True, False):
+        cfg = dsp.DispatchConfig(mode="kernel", pack=pack)
+        up = Channel(up_tree, "uplink", cfg)
+        down = Channel(down_tree, "downlink", cfg)
+
+        def round_fn(key, acc):
+            q, _m, b = up.apply(key, acc)
+            q2, _m2, b2 = down.apply(jax.random.fold_in(key, 1), acc)
+            return (q, q2), b + b2
+
+        jfn = jax.jit(round_fn)
+        dsp.reset_launches()
+        jfn.lower(jax.random.PRNGKey(1), tree)
+        launches = dict(dsp.LAUNCHES)
+        (_, bits), us = _time(jfn, jax.random.PRNGKey(1), tree)
+        if pack:
+            # the acceptance gate: uplink topk + uplink qsgd +
+            # downlink topk = one launch per family per direction
+            assert launches["topk_compress"] == 2, launches
+            assert launches["qsgd"] == 1, launches
+        rows.append(BenchRow(
+            f"policy/hetero_round/{'packed' if pack else 'per_leaf'}", us,
+            f"launches_per_round={sum(launches.values())};"
+            f"rounds_per_s={1e6 / max(us, 1e-9):.2f};"
+            f"wire_ratio={float(bits) / (64 * d):.5f}",
             wire_bits=float(bits),
             path="packed" if pack else "per_leaf"))
     return rows

@@ -7,6 +7,11 @@ from __future__ import annotations
 import importlib
 
 from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs.policies import (
+    ARCH_POLICIES,
+    POLICY_PRESETS,
+    get_policy_preset,
+)
 
 ARCHS = {
     "yi-6b": "yi_6b",
@@ -46,10 +51,13 @@ def shape_supported(arch: str, shape: str) -> tuple[bool, str]:
 
 __all__ = [
     "ARCHS",
+    "ARCH_POLICIES",
     "LONG_CONTEXT_ARCHS",
     "INPUT_SHAPES",
     "InputShape",
     "ModelConfig",
+    "POLICY_PRESETS",
     "get_config",
+    "get_policy_preset",
     "shape_supported",
 ]

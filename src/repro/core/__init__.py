@@ -3,8 +3,9 @@ memory, the unified sync/async engine (core/engine.py) with its
 Algorithm-1/2 wrappers, bit accounting, distributed production
 engine."""
 
-from repro.core import bits, engine, operators, schedule
+from repro.core import bits, engine, operators, policy, schedule
 from repro.core.engine import EngineState
+from repro.core.policy import ChannelSpec, OpSpec, PolicySpec
 from repro.core.operators import (
     CompressionOp,
     Identity,
@@ -27,7 +28,11 @@ __all__ = [
     "engine",
     "EngineState",
     "operators",
+    "policy",
     "schedule",
+    "ChannelSpec",
+    "OpSpec",
+    "PolicySpec",
     "CompressionOp",
     "Identity",
     "QSGDQuantizer",

@@ -48,6 +48,9 @@ class AsyncQsparseState(NamedTuple):
     # EngineState so the splat conversions below stay valid)
     down_memory: Any = None
     bits_down: Any = None
+    # optional per-leaf-group ledgers (engine leaf_ledger=True)
+    leaf_bits: Any = None
+    leaf_bits_down: Any = None
 
 
 def _replicate(tree, R: int):
@@ -55,9 +58,10 @@ def _replicate(tree, R: int):
 
 
 def init(params, inner_opt: GradientTransform, R: int,
-         downlink=None) -> AsyncQsparseState:
+         downlink=None, leaf_ledger: bool = False) -> AsyncQsparseState:
     return AsyncQsparseState(*engine.init(params, inner_opt, R,
-                                          downlink=downlink))
+                                          downlink=downlink,
+                                          leaf_ledger=leaf_ledger))
 
 
 def make_step(
@@ -69,6 +73,7 @@ def make_step(
     *,
     dispatch: Optional[DispatchConfig] = None,
     downlink=None,
+    leaf_ledger: bool = False,
 ):
     """sync_flags: bool[R] — which workers hit a sync index at t+1.
 
@@ -85,6 +90,7 @@ def make_step(
     engine_step = engine.make_step(
         grad_fn, inner_opt, operator, lr_schedule, R,
         dispatch=dispatch, global_rounds=False, downlink=downlink,
+        leaf_ledger=leaf_ledger,
     )
 
     def step_fn(state: AsyncQsparseState, batch, sync_flags, key):

@@ -95,17 +95,20 @@ class Channel:
         return jax.tree_util.tree_map(
             lambda x: jnp.zeros(x.shape, jnp.float32), tree)
 
-    def apply(self, key, acc):
+    def apply(self, key, acc, *, per_leaf: bool = False):
         """Error-compensated compression of the accumulator ``acc``
         (caller adds the memory in: acc = memory + payload).
 
         Returns ``(q, new_memory, bits)`` with ``q + new_memory == acc``
         exactly (the kernels fuse the memory update; the reference path
-        computes ``acc − q``) and counted wire bits.
+        computes ``acc − q``) and counted wire bits.  With ``per_leaf``
+        a fourth element carries the per-leaf bits (flatten order) for
+        the per-leaf-group ledger (DESIGN.md §6).
         """
         from repro.kernels import dispatch as dsp
         return dsp.channel_compress_tree(
-            self.operator, key, acc, self.dispatch)
+            self.operator, key, acc, self.dispatch,
+            want_leaf_bits=per_leaf)
 
     def dense_bits(self, tree, value_bits: int = 32):
         """Exact-transmission wire cost of one broadcast of ``tree``
@@ -144,23 +147,25 @@ class ShardChannel:
     direction: str = "uplink"
 
     def is_identity(self) -> bool:
-        return self.compressor is None or self.compressor.mode == "none"
+        return self.compressor is None or self.compressor.is_identity()
 
     def init_memory(self, tree):
         return jax.tree_util.tree_map(
             lambda x: jnp.zeros(x.shape, jnp.float32), tree)
 
-    def apply(self, acc, param_specs):
+    def apply(self, acc, param_specs, key=None):
         """Dense-form error-compensated compression of ``acc``:
-        ``(q, new_memory, bits)`` with q + new_memory == acc."""
-        q, bits = self.compressor(acc, param_specs)
+        ``(q, new_memory, bits)`` with q + new_memory == acc.
+        ``key`` feeds stochastic per-leaf operators of a heterogeneous
+        policy (deterministic compressors ignore it)."""
+        q, bits = self.compressor(acc, param_specs, key=key)
         new_mem = jax.tree_util.tree_map(lambda a, g: a - g, acc, q)
         return q, new_mem, bits
 
-    def compact(self, acc, param_specs):
+    def compact(self, acc, param_specs, key=None):
         """Compact-wire-form counterpart (DESIGN.md §3.3): defers to
         ``ShardCompressor.compact`` — (payloads, treedef, bits, mem)."""
-        return self.compressor.compact(acc, param_specs)
+        return self.compressor.compact(acc, param_specs, key=key)
 
     def dense_bits(self, tree, value_bits: int = 32):
         return bitlib.bits_dense_tree(tree, value_bits)

@@ -49,7 +49,16 @@ from repro.compat import (MODERN, axis_size, shard_map,
                           sharding_constraints_usable)
 from repro.core import bits as bitlib
 from repro.core import channel as chn
-from repro.core.operators import resolve_k
+from repro.core.operators import (
+    CompressionOp,
+    Identity,
+    RowSignTopK,
+    RowTopK,
+    SignSparsifier,
+    TopK,
+    ops_for_leaves,
+    resolve_k,
+)
 from repro.optim.transforms import GradientTransform, apply_updates
 
 
@@ -183,7 +192,11 @@ class ShardCompressor:
 
     mode: 'topk' (full-precision survivors) | 'signtopk' (1-bit survivors)
           | 'none' (Identity — vanilla/local-SGD baselines)
-    k_frac: survivor fraction along the chosen axis per leaf.
+          | 'policy' (heterogeneous per-leaf operators, DESIGN.md §6:
+          ``ops`` carries the resolved operator tree — build through
+          :meth:`from_spec`)
+    k_frac: survivor fraction along the chosen axis per leaf
+          (homogeneous modes only; policy mode reads each op's own k).
     dispatch: kernel routing policy (see kernels/dispatch.py) — 'auto'
           runs the fused Pallas Top_k kernels on TPU for lane-aligned
           compression rows, 'kernel' forces them (interpret off-TPU),
@@ -193,41 +206,153 @@ class ShardCompressor:
           (idx, val) survivor buffers plus the fused error memory
           directly (DESIGN.md §3.3), with the scatter-free jnp oracle
           as its transparent fallback.
+    ops:  policy mode only — a ``CompressionOp`` tree (or single op) in
+          the grads' structure, as produced by ``core.policy.resolve``.
+          Per leaf: Top_k-family ops run the shard-local axis-Top_k
+          paths (sparse wire form available; op.k is the survivor
+          fraction/count along the chosen axis), Identity transmits
+          dense, and every other operator (QSGD, k-level, Rand_k, the
+          composed sparsifiers) runs its reference form shard-locally
+          on the leaf and travels as a dense payload — Corollary 1
+          piecewise compression across shards either way.
     """
 
     mode: str = "topk"
     k_frac: float = 0.01
     dispatch: str = "auto"
+    ops: Any = None
+
+    @classmethod
+    def from_spec(cls, spec, params,
+                  dispatch: str = "auto") -> "Optional[ShardCompressor]":
+        """Build from any ``core.policy`` spec (PolicySpec/OpSpec/DSL
+        string/operator tree), resolved per leaf against ``params``.
+        Returns None for an all-Identity policy (= no compression).
+
+        The shard paths select Top_k per compression *row* (the chosen
+        unsharded axis), so a global-Top_k op with an **absolute** k —
+        a whole-leaf survivor count, e.g. from the budget allocator —
+        is normalized here to the equivalent leaf fraction ``k / d``
+        (the per-row counts then sum back to ~k across the leaf's rows
+        instead of selecting k per row, §6.4).  Fractional k and the
+        per-row ops (RowTopK/RowSignTopK, whose k is per-row by
+        definition) pass through untouched.
+        """
+        from repro.core import policy as pol
+        op_tree = pol.resolve(spec, params)
+        leaves = jax.tree_util.tree_leaves(params)
+        ops_list = ops_for_leaves(op_tree, len(leaves))
+        norm = [cls._normalize_leaf_op(op, int(leaf.size))
+                for op, leaf in zip(ops_list, leaves)]
+        op_tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(params), norm)
+        comp = cls(mode="policy", dispatch=dispatch, ops=op_tree)
+        return None if comp.is_identity() else comp
+
+    @staticmethod
+    def _normalize_leaf_op(op: CompressionOp, d: int) -> CompressionOp:
+        """Absolute whole-leaf k → leaf fraction for global-Top_k ops
+        (see :meth:`from_spec`).  ``1 − 1e-9`` keeps an everything-
+        survives k inside resolve_k's fraction regime."""
+        if not (isinstance(op, TopK) or (isinstance(op, SignSparsifier)
+                                         and op.sparsifier == "top")):
+            return op
+        if isinstance(op.k, float) and 0.0 < op.k < 1.0:
+            return op
+        frac = min(1.0 - 1e-9, float(op.k) / max(d, 1))
+        return dataclasses.replace(op, k=frac)
+
+    def is_identity(self) -> bool:
+        if self.mode == "none":
+            return True
+        if self.mode != "policy":
+            return False
+        leaves = jax.tree_util.tree_leaves(
+            self.ops, is_leaf=lambda o: isinstance(o, CompressionOp))
+        return all(isinstance(o, Identity) for o in leaves)
 
     def _dispatch_cfg(self):
         from repro.kernels.dispatch import DispatchConfig
         return DispatchConfig(mode=self.dispatch)
 
-    def _kernel_leaf(self, g, ax):
+    def _plans(self, n_leaves: int):
+        """Per-leaf execution plan: ("skip",), ("axis", k, sign_bits)
+        or ("ref", op) — shared by the dense path, the compact path and
+        the payload-kind metadata so all three always agree."""
+        if self.mode == "policy":
+            plans = []
+            for op in ops_for_leaves(self.ops, n_leaves):
+                if isinstance(op, Identity):
+                    plans.append(("skip",))
+                elif isinstance(op, (TopK, RowTopK)):
+                    plans.append(("axis", op.k, False))
+                elif isinstance(op, RowSignTopK) or (
+                        isinstance(op, SignSparsifier)
+                        and op.sparsifier == "top"):
+                    plans.append(("axis", op.k, True))
+                else:
+                    plans.append(("ref", op))
+            return plans
+        if self.mode == "none":
+            return [("skip",)] * n_leaves
+        if self.mode not in ("topk", "signtopk"):
+            raise ValueError(
+                f"unknown ShardCompressor mode {self.mode!r}; expected "
+                f"'topk' | 'signtopk' | 'none' | 'policy'")
+        return [("axis", self.k_frac, self.mode == "signtopk")] * n_leaves
+
+    @staticmethod
+    def _skip(g) -> bool:
+        """Tiny/scalar leaves transmit dense regardless of plan."""
+        return g.ndim == 0 or g.size <= 8
+
+    def _ref_leaf(self, op: CompressionOp, g, key, i: int):
+        """Reference-operator leaf (dense payload): shard-local
+        ``op(key_i, g)``.  Stochastic ops draw from ``key`` folded with
+        the leaf index; the key is replicated over the worker axes, so
+        the draw is shared across workers (the accumulators differ, so
+        per-worker unbiasedness is unaffected)."""
+        if op.stochastic and key is None:
+            raise ValueError(
+                f"stochastic operator {type(op).__name__} in a "
+                f"ShardCompressor policy needs a key (thread key= "
+                f"through apply/compact)")
+        k_i = jax.random.fold_in(key, i) if op.stochastic else None
+        out, b = op(k_i, g)
+        return out.astype(jnp.float32), jnp.asarray(b, jnp.float32)
+
+    def _kernel_leaf(self, g, k_frac, ax, sign):
         """Fused-kernel variant of ``axis_topk`` (dense survivors)."""
         from repro.kernels import dispatch as dsp
         cfg = self._dispatch_cfg()
         return _threshold_axis_topk(
-            g, self.k_frac, ax, self.mode == "signtopk",
-            lambda rows, k, sign: dsp.topk_rows(rows, k, sign=sign, cfg=cfg))
+            g, k_frac, ax, sign,
+            lambda rows, k, sign_: dsp.topk_rows(rows, k, sign=sign_,
+                                                 cfg=cfg))
 
-    def __call__(self, grads, param_specs):
+    def __call__(self, grads, param_specs, key=None):
         from repro.kernels import dispatch as dsp
         dcfg = self._dispatch_cfg()
         leaves, treedef = jax.tree_util.tree_flatten(grads)
         specs = self._leaf_specs(param_specs, len(leaves))
+        plans = self._plans(len(leaves))
         outs, bit_terms = [], []
-        for g, spec in zip(leaves, specs):
-            if self.mode == "none" or g.ndim == 0 or g.size <= 8:
+        for i, (g, spec, plan) in enumerate(zip(leaves, specs, plans)):
+            if plan[0] == "skip" or self._skip(g):
                 outs.append(g.astype(jnp.float32))
                 bit_terms.append(jnp.asarray(bitlib.bits_dense(g.size), jnp.float32))
                 continue
+            if plan[0] == "ref":
+                o, b = self._ref_leaf(plan[1], g, key, i)
+                outs.append(o)
+                bit_terms.append(b)
+                continue
+            _, k_frac, sign = plan
             ax = _pick_axis(g.shape, spec)
             if dsp.rows_eligible(g.shape[ax], dcfg, leaf_size=g.size):
-                o, b = self._kernel_leaf(g, ax)
+                o, b = self._kernel_leaf(g, k_frac, ax, sign)
             else:
-                o, b = axis_topk(g, self.k_frac, ax,
-                                 sign_bits=(self.mode == "signtopk"))
+                o, b = axis_topk(g, k_frac, ax, sign_bits=sign)
             if spec is not None and sharding_constraints_usable():
                 # pin the densified update to the leaf's TP sharding: the
                 # top_k/scatter pair otherwise makes XLA re-shard (an
@@ -249,33 +374,42 @@ class ShardCompressor:
             param_specs, is_leaf=lambda z: isinstance(z, P) or z is None
         )
 
-    def compact(self, grads, param_specs):
+    def compact(self, grads, param_specs, key=None):
         """Compress to the compact wire form (§Perf beyond-paper
-        aggregation): per leaf either ("dense", g) for skipped leaves or
-        ("sparse", idx, val, axis, moved_shape), with indices row-local
-        to the moved-to-last compression axis (shard-local offsets —
-        the model-sharded axes never enter the index space) and empty
-        slots carrying the out-of-row sentinel.  The fused error
-        memories ride along so the sync body never densifies.
+        aggregation): per leaf either ("dense", g) for skipped /
+        reference-operator leaves (the latter carry the *compressed*
+        dense payload) or ("sparse", idx, val, axis, moved_shape), with
+        indices row-local to the moved-to-last compression axis
+        (shard-local offsets — the model-sharded axes never enter the
+        index space) and empty slots carrying the out-of-row sentinel.
+        The fused error memories ride along so the sync body never
+        densifies.
 
         Returns (list_of_leaf_payloads, treedef, wire_bits, mem_tree).
         """
         dcfg = self._dispatch_cfg()
         leaves, treedef = jax.tree_util.tree_flatten(grads)
         specs = self._leaf_specs(param_specs, len(leaves))
+        plans = self._plans(len(leaves))
         payloads, bit_terms, mems = [], [], []
-        for g, spec in zip(leaves, specs):
-            if self.mode == "none" or g.ndim == 0 or g.size <= 8:
+        for i, (g, spec, plan) in enumerate(zip(leaves, specs, plans)):
+            if plan[0] == "skip" or self._skip(g):
                 g32 = g.astype(jnp.float32)
                 payloads.append(("dense", g32))
                 mems.append(jnp.zeros_like(g32))
                 bit_terms.append(
                     jnp.asarray(bitlib.bits_dense(g.size), jnp.float32))
                 continue
+            if plan[0] == "ref":
+                q, b = self._ref_leaf(plan[1], g, key, i)
+                payloads.append(("dense", q))
+                mems.append(g.astype(jnp.float32) - q)
+                bit_terms.append(b)
+                continue
+            _, k_frac, sign = plan
             ax = _pick_axis(g.shape, spec)
             idx, val, mem, b, moved = axis_topk_compact(
-                g, self.k_frac, ax, sign_bits=(self.mode == "signtopk"),
-                dispatch_cfg=dcfg)
+                g, k_frac, ax, sign_bits=sign, dispatch_cfg=dcfg)
             payloads.append(("sparse", idx, val, ax, moved))
             mems.append(mem)
             bit_terms.append(b)
@@ -283,7 +417,47 @@ class ShardCompressor:
         mem_tree = jax.tree_util.tree_unflatten(treedef, mems)
         return payloads, treedef, bits, mem_tree
 
+    def leaf_meta(self, master_tree, param_specs):
+        """Payload-kind metadata per leaf, mirroring :meth:`compact`'s
+        decisions on the *global* leaf shapes: ("sparse", axis,
+        moved_shape) for axis-Top_k leaves, ("dense", None, None) for
+        everything else.  The sparse sync bodies size their out_specs
+        from this, so it must stay in lockstep with compact()."""
+        leaves = jax.tree_util.tree_flatten(master_tree)[0]
+        specs = self._leaf_specs(param_specs, len(leaves))
+        plans = self._plans(len(leaves))
+        meta = []
+        for g, spec, plan in zip(leaves, specs, plans):
+            if plan[0] != "axis" or self._skip(g):
+                meta.append(("dense", None, None))
+                continue
+            ax = _pick_axis(g.shape, spec)
+            moved = jnp.moveaxis(
+                jnp.empty(g.shape, jnp.float32), ax, -1).shape
+            meta.append(("sparse", ax, moved))
+        return meta
+
+    def would_kernel_dispatch(self) -> bool:
+        """Could this compressor launch Pallas kernels as configured?
+        (the 0.4.x TP>1 dense-psum guard's probe)"""
+        if self.is_identity() or self.dispatch == "reference":
+            return False
+        return self.dispatch == "kernel" or (
+            self.dispatch == "auto" and jax.default_backend() == "tpu")
+
     def gamma(self) -> float:
+        if self.mode == "policy":
+            gs = []
+            for op in jax.tree_util.tree_leaves(
+                    self.ops, is_leaf=lambda o: isinstance(o, CompressionOp)):
+                if isinstance(op, Identity):
+                    gs.append(1.0)
+                elif hasattr(op, "k") and isinstance(op.k, float) \
+                        and 0.0 < op.k < 1.0:
+                    gs.append(op.k)
+                else:
+                    gs.append(0.0)  # unknown/absolute-k: conservative
+            return min(gs) if gs else 1.0
         return 1.0 if self.mode == "none" else self.k_frac
 
 
@@ -311,12 +485,8 @@ def _legacy_tp_kernel_guard(compressor: Optional[ShardCompressor], mesh,
     """
     if MODERN or aggregate != "dense_psum" or compressor is None:
         return compressor
-    if compressor.mode == "none" or compressor.dispatch == "reference":
-        return compressor
     tp = any(mesh.shape[a] > 1 for a in mesh.axis_names if a not in daxes)
-    would_kernel = compressor.dispatch == "kernel" or (
-        compressor.dispatch == "auto" and jax.default_backend() == "tpu")
-    if not (tp and would_kernel):
+    if not (tp and compressor.would_kernel_dispatch()):
         return compressor
     if direction not in _TP_KERNEL_WARNED:
         warnings.warn(
@@ -486,7 +656,8 @@ def make_dist_steps(
             lambda m, x, h: m + x.astype(jnp.float32) - h.astype(jnp.float32),
             mem, ref, half,
         )
-        g, new_mem, wire_bits = up.apply(delta, param_specs)
+        g, new_mem, wire_bits = up.apply(
+            delta, param_specs, key=jax.random.fold_in(key, 1))
         g_mean = jax.tree_util.tree_map(
             lambda gg: jax.lax.pmean(gg, daxes), g
         )
@@ -513,7 +684,8 @@ def make_dist_steps(
             - vv.astype(jnp.float32),
             dm, new_full_master, ref,
         )
-        q, new_dm, dbits = down.apply(dacc, param_specs)
+        q, new_dm, dbits = down.apply(
+            dacc, param_specs, key=jax.random.fold_in(key, 2))
         new_view = jax.tree_util.tree_map(
             lambda vv, qq: (vv.astype(jnp.float32) + qq).astype(vv.dtype),
             ref, q,
@@ -660,21 +832,7 @@ def make_dist_steps(
     # no lax.top_k, so it partitions under 0.4.x too.
     def _leaf_meta(master_tree, comp: Optional[ShardCompressor] = None):
         comp = compressor if comp is None else comp
-        leaves = jax.tree_util.tree_flatten(master_tree)[0]
-        is_spec = lambda z: isinstance(z, P) or z is None
-        specs = (jax.tree_util.tree_leaves(param_specs, is_leaf=is_spec)
-                 if param_specs is not None else [None] * len(leaves))
-        meta = []
-        for leaf, spec in zip(leaves, specs):
-            if (comp.mode == "none" or leaf.ndim == 0
-                    or leaf.size <= 8):
-                meta.append(("dense", None, None))
-            else:
-                ax = _pick_axis(leaf.shape, spec)
-                moved = jnp.moveaxis(
-                    jnp.empty(leaf.shape, jnp.float32), ax, -1).shape
-                meta.append(("sparse", ax, moved))
-        return meta
+        return comp.leaf_meta(master_tree, param_specs)
 
     def _compact_arrays(payloads):
         arrays = []
@@ -702,7 +860,7 @@ def make_dist_steps(
             mem, ref, half,
         )
         payloads, _treedef, wire_bits, new_mem = compressor.compact(
-            delta, param_specs)
+            delta, param_specs, key=jax.random.fold_in(key, 1))
         arrays = _compact_arrays(payloads)
         total_bits = jax.lax.psum(wire_bits, daxes)
         loss = jax.lax.pmean(loss, daxes)
@@ -724,7 +882,7 @@ def make_dist_steps(
       the buffers leave via out_specs and the dense decode happens in
       the auto region — sort-free, collective-free (bar the scalar
       bits psum), partition-safe on 0.4.x."""
-      def down_body(new_master, view, down_mem):
+      def down_body(new_master, view, down_mem, key):
         v = _squeeze(view)
         dm = _squeeze(down_mem)
         dacc = jax.tree_util.tree_map(
@@ -732,7 +890,8 @@ def make_dist_steps(
             - vv.astype(jnp.float32),
             dm, new_master, v,
         )
-        payloads, _treedef, dbits, new_dm = down.compact(dacc, param_specs)
+        payloads, _treedef, dbits, new_dm = down.compact(
+            dacc, param_specs, key=jax.random.fold_in(key, 2))
         arrays = _compact_arrays(payloads)
         total_down = jax.lax.psum(dbits, daxes)
         return (_expand(new_dm), [a[None] for a in arrays], total_down)
@@ -793,7 +952,7 @@ def make_dist_steps(
             state.master, g_mean)
         if down_active:
             new_local, view, down_mem, down_bits = _sparse_downlink(
-                state, new_master)
+                state, new_master, key)
             return (
                 DistQsparseState(
                     master=new_master, local=new_local, memory=memory,
@@ -821,7 +980,7 @@ def make_dist_steps(
             loss,
         )
 
-    def _sparse_downlink(state, new_master):
+    def _sparse_downlink(state, new_master, key):
         """Sparse-path downlink: a second manual region emits each
         worker's compact (idx, val) downlink buffers + updated server
         memory; the per-worker dense decode (scatter-add, sentinel
@@ -838,12 +997,12 @@ def make_dist_steps(
                     x, NamedSharding(mesh, P())), new_master)
         down_mapped = shard_map(
             make_sparse_down_body(), mesh=mesh,
-            in_specs=(P(), worker_specs, worker_specs),
+            in_specs=(P(), worker_specs, worker_specs, P()),
             out_specs=(worker_specs, [P(tuple(daxes))] * n_down, P()),
             axis_names=manual, check_vma=True,
         )
         down_mem, darrays, down_bits = down_mapped(
-            master_in, state.view, state.down_memory)
+            master_in, state.view, state.down_memory, key)
         it = iter(darrays)
         view_leaves, vtd = jax.tree_util.tree_flatten(state.view)
         new_view_leaves = []

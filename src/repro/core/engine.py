@@ -79,6 +79,12 @@ class EngineState(NamedTuple):
     # compressed downlink is configured (init(..., downlink=op))
     down_memory: Any = None
     bits_down: Any = None  # float32 cumulative DOWNLINK wire bits
+    # per-leaf-group ledger (DESIGN.md §6): cumulative wire bits per
+    # top-level parameter group, [G] f32 per direction — None unless
+    # init/make_step were built with leaf_ledger=True.  Group names
+    # come from ``leaf_group_names(params)``.
+    leaf_bits: Any = None
+    leaf_bits_down: Any = None
 
 
 def replicate(tree, R: int):
@@ -88,14 +94,27 @@ def replicate(tree, R: int):
     )
 
 
+def leaf_group_names(params) -> tuple:
+    """Top-level parameter-group names of the per-leaf ledger, in the
+    order ``state.leaf_bits``/``leaf_bits_down`` index them."""
+    from repro.core.policy import leaf_groups
+    return leaf_groups(params)[0]
+
+
 def init(params, inner_opt: GradientTransform, R: int,
-         downlink=None) -> EngineState:
+         downlink=None, leaf_ledger: bool = False) -> EngineState:
     """``downlink``: the server→worker compression operator (or
     Channel) this state will be stepped with — needed here only to
     allocate the server-side error memory; None/Identity allocates
-    nothing (the exact-broadcast path is memoryless)."""
+    nothing (the exact-broadcast path is memoryless).
+
+    ``leaf_ledger``: allocate the optional per-top-level-leaf-group
+    wire-bit ledgers ([G] f32 per direction, G = number of top-level
+    parameter groups) — pass the same flag to :func:`make_step`.
+    """
     local = replicate(params, R)
     down = chn.as_channel(downlink, "downlink")
+    G = len(leaf_group_names(params)) if leaf_ledger else 0
     return EngineState(
         master=params,
         master_view=local,
@@ -108,6 +127,9 @@ def init(params, inner_opt: GradientTransform, R: int,
         down_memory=(None if down.is_identity()
                      else down.init_memory(local)),
         bits_down=jnp.zeros((), jnp.float32),
+        leaf_bits=jnp.zeros((G,), jnp.float32) if leaf_ledger else None,
+        leaf_bits_down=(jnp.zeros((G,), jnp.float32) if leaf_ledger
+                        else None),
     )
 
 
@@ -121,6 +143,7 @@ def make_step(
     dispatch: Optional[dsp.DispatchConfig] = None,
     global_rounds: bool = False,
     downlink=None,
+    leaf_ledger: bool = False,
 ):
     """Build the jittable unified step.
 
@@ -141,6 +164,12 @@ def make_step(
     ``downlink`` to :func:`init`).  None/Identity keeps the exact
     dense broadcast (bit-for-bit historical trajectories) and charges
     its dense cost to ``state.bits_down``.
+
+    leaf_ledger: accumulate the per-top-level-leaf-group wire-bit
+    ledgers (``state.leaf_bits`` / ``state.leaf_bits_down``, indexed by
+    ``leaf_group_names``) so heterogeneous policies can be compared on
+    the paper's bits x-axis per layer group, not just in aggregate.
+    Pure accounting: trajectories are unchanged.
     """
     up_ch = (operator if isinstance(operator, chn.Channel)
              else chn.Channel(operator, "uplink", dispatch))
@@ -159,6 +188,19 @@ def make_step(
 
     def sync_phase(state: EngineState, half, inner, sync_mask, key):
         """Masked compress-and-aggregate (Algorithm 1/2 lines 8-20)."""
+        if leaf_ledger:
+            from repro.core.policy import leaf_groups
+            _gnames, gidx = leaf_groups(state.master)
+            seg = jnp.asarray(gidx, jnp.int32)
+            G = len(_gnames)
+
+        def group_bits(per_leaf_bits, s_r):
+            """Per-leaf bits (flatten order) → masked [G] group vector."""
+            vec = jax.ops.segment_sum(
+                jnp.stack([jnp.asarray(b, jnp.float32)
+                           for b in per_leaf_bits]),
+                seg, num_segments=G)
+            return jnp.where(s_r, vec, jnp.zeros_like(vec))
 
         def worker_update(m_r, view_r, half_r, key_r, s_r):
             acc = jax.tree_util.tree_map(
@@ -166,7 +208,12 @@ def make_step(
                 - h.astype(jnp.float32),
                 m_r, view_r, half_r,
             )
-            g, m_out, bits = up_ch.apply(key_r, acc)
+            if leaf_ledger:
+                g, m_out, bits, lb = up_ch.apply(key_r, acc, per_leaf=True)
+                gvec = group_bits(lb, s_r)
+            else:
+                g, m_out, bits = up_ch.apply(key_r, acc)
+                gvec = jnp.zeros((0,), jnp.float32)
             # masked: non-syncing workers transmit nothing and keep state
             g = jax.tree_util.tree_map(
                 lambda gg: jnp.where(s_r, gg, jnp.zeros_like(gg)), g
@@ -174,12 +221,14 @@ def make_step(
             new_m = jax.tree_util.tree_map(
                 lambda m, mm: jnp.where(s_r, mm, m), m_r, m_out
             )
-            return g, new_m, jnp.where(s_r, bits, 0.0)
+            return g, new_m, jnp.where(s_r, bits, 0.0), gvec
 
         keys = jax.random.split(key, R)
-        g_all, new_mem, bits_all = jax.vmap(worker_update)(
+        g_all, new_mem, bits_all, gvec_all = jax.vmap(worker_update)(
             state.memory, state.master_view, half, keys, sync_mask
         )
+        new_leaf_bits = (state.leaf_bits + jnp.sum(gvec_all, axis=0)
+                         if leaf_ledger else state.leaf_bits)
         # master applies (1/R) Σ over the syncing subset S
         g_sum = jax.tree_util.tree_map(
             lambda g: jnp.sum(g, axis=0) / R, g_all
@@ -204,7 +253,13 @@ def make_step(
                     - v.astype(jnp.float32),
                     dm_r, view_r, new_master,
                 )
-                q, dm_out, dbits = down_ch.apply(key_r, acc)
+                if leaf_ledger:
+                    q, dm_out, dbits, dlb = down_ch.apply(
+                        key_r, acc, per_leaf=True)
+                    dgvec = group_bits(dlb, s_r)
+                else:
+                    q, dm_out, dbits = down_ch.apply(key_r, acc)
+                    dgvec = jnp.zeros((0,), jnp.float32)
                 new_v = jax.tree_util.tree_map(
                     lambda v, qq: jnp.where(
                         s_r, (v.astype(jnp.float32) + qq).astype(v.dtype),
@@ -218,17 +273,21 @@ def make_step(
                     lambda nv, h: jnp.where(s_r, nv.astype(h.dtype), h),
                     new_v, half_r,
                 )
-                return new_v, new_dm, new_l, jnp.where(s_r, dbits, 0.0)
+                return (new_v, new_dm, new_l, jnp.where(s_r, dbits, 0.0),
+                        dgvec)
 
             # uplink keys stay exactly jax.random.split(key, R) (bit
             # compat); downlink draws an independent stream per worker
             down_keys = jax.vmap(
                 lambda kk: jax.random.fold_in(kk, 0x0d0b))(keys)
-            new_view, new_down_mem, new_local, dbits_all = jax.vmap(
-                down_update)(
+            (new_view, new_down_mem, new_local, dbits_all,
+             dgvec_all) = jax.vmap(down_update)(
                 state.down_memory, state.master_view, half, down_keys,
                 sync_mask)
             down_bits = state.bits_down + jnp.sum(dbits_all)
+            new_leaf_down = (
+                state.leaf_bits_down + jnp.sum(dgvec_all, axis=0)
+                if leaf_ledger else state.leaf_bits_down)
         else:
             # exact broadcast (historical path, bit-for-bit): workers in
             # S receive x̄_{t+1} verbatim; the ledger still charges the
@@ -238,9 +297,19 @@ def make_step(
                                               state.master_view)
             new_local = jax.tree_util.tree_map(sel, bcast, half)
             new_down_mem = state.down_memory
+            n_sync = jnp.sum(sync_mask.astype(jnp.float32))
             down_bits = state.bits_down + (
-                jnp.sum(sync_mask.astype(jnp.float32))
-                * down_ch.dense_bits(state.master))
+                n_sync * down_ch.dense_bits(state.master))
+            if leaf_ledger:
+                # static per-group dense broadcast cost (per receiver)
+                dense_vec = jnp.zeros((G,), jnp.float32).at[seg].add(
+                    jnp.asarray(
+                        [32.0 * l.size for l in
+                         jax.tree_util.tree_leaves(state.master)],
+                        jnp.float32))
+                new_leaf_down = state.leaf_bits_down + n_sync * dense_vec
+            else:
+                new_leaf_down = state.leaf_bits_down
 
         inc = (jnp.any(sync_mask).astype(jnp.int32) if global_rounds
                else jnp.sum(sync_mask.astype(jnp.int32)))
@@ -255,6 +324,8 @@ def make_step(
             rounds=state.rounds + inc,
             down_memory=new_down_mem,
             bits_down=down_bits,
+            leaf_bits=new_leaf_bits,
+            leaf_bits_down=new_leaf_down,
         )
 
     def step_fn(state: EngineState, batch, sync_mask, key):
@@ -269,6 +340,10 @@ def make_step(
                 "make_step and init (or re-init without one)")
         if state.bits_down is None:  # states minted before the ledger split
             state = state._replace(bits_down=jnp.zeros((), jnp.float32))
+        if leaf_ledger and state.leaf_bits is None:
+            raise ValueError(
+                "per-leaf ledger needs state fields: initialize with "
+                "engine.init(..., leaf_ledger=True)")
         sync_mask = jnp.broadcast_to(
             jnp.asarray(sync_mask, bool).reshape(-1), (R,)
         )
@@ -286,6 +361,8 @@ def make_step(
                 rounds=state.rounds,
                 down_memory=state.down_memory,
                 bits_down=state.bits_down,
+                leaf_bits=state.leaf_bits,
+                leaf_bits_down=state.leaf_bits_down,
             )
 
         new_state = jax.lax.cond(

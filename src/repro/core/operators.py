@@ -486,24 +486,122 @@ def tree_gamma(op_tree, grads) -> float:
     return min(op.gamma(int(l.size)) for op, l in zip(ops, leaves))
 
 
-# registry for config-driven construction --------------------------------
+# operator registry (config/spec-driven construction) ---------------------
+#
+# Every operator family is registered under a stable wire name; aliases
+# (qtopk/qrandk/...) pin constructor kwargs of a shared class.  The
+# registry is the single source of truth for ``core.policy`` spec
+# parsing/serialization and for every CLI/config surface — an unknown
+# name fails loudly here instead of silently falling back to Identity.
 
-OPERATORS = {
-    "identity": Identity,
-    "topk": TopK,
-    "randk": RandK,
-    "row_topk": RowTopK,
-    "qsgd": QSGDQuantizer,
-    "klevel": StochasticKLevel,
-    "sign": Sign,
-    "qtopk": partial(QuantizedSparsifier, sparsifier="top"),
-    "qrandk": partial(QuantizedSparsifier, sparsifier="rand"),
-    "signtopk": partial(SignSparsifier, sparsifier="top"),
-    "row_signtopk": RowSignTopK,
-}
+
+@dataclasses.dataclass(frozen=True)
+class RegisteredOp:
+    """One registry entry: a name bound to a class + pinned kwargs."""
+
+    name: str
+    cls: type
+    fixed: Tuple[Tuple[str, object], ...]  # kwargs the alias pins
+    summary: str = ""
+
+    def fields(self) -> dict:
+        """Configurable constructor fields (name -> default), with the
+        alias-pinned ones removed."""
+        pinned = {k for k, _ in self.fixed}
+        return {f.name: f.default for f in dataclasses.fields(self.cls)
+                if f.name not in pinned}
+
+
+OP_REGISTRY: dict[str, RegisteredOp] = {}
+
+
+def register_op(name: str, summary: str = "", **fixed):
+    """Class decorator (also callable on an existing class) registering
+    a ``CompressionOp`` under ``name``.  ``fixed`` kwargs are pinned by
+    the alias and cannot be overridden through the spec surface."""
+
+    def deco(cls):
+        if name in OP_REGISTRY:
+            raise ValueError(f"operator name {name!r} already registered")
+        for k in fixed:
+            if k not in {f.name for f in dataclasses.fields(cls)}:
+                raise TypeError(
+                    f"register_op({name!r}): {cls.__name__} has no "
+                    f"field {k!r}")
+        OP_REGISTRY[name] = RegisteredOp(
+            name, cls, tuple(sorted(fixed.items())), summary)
+        return cls
+
+    return deco
+
+
+register_op("identity", "no compression (vanilla / local SGD)")(Identity)
+register_op("topk", "Top_k sparsifier [SCJ18]")(TopK)
+register_op("randk", "Rand_k sparsifier [SCJ18]")(RandK)
+register_op("row_topk", "per-row Top_k (TP-shard-local, Cor. 1)")(RowTopK)
+register_op("qsgd", "QSGD quantizer [AGL+17], Definition 1")(QSGDQuantizer)
+register_op("klevel", "stochastic s-level quantizer [SYKM17]")(
+    StochasticKLevel)
+register_op("sign", "scaled 1-bit sign, Definition 2")(Sign)
+register_op("qtopk", "QSGD o Top_k (Lemmas 1-2)",
+            sparsifier="top")(QuantizedSparsifier)
+register_op("qrandk", "QSGD o Rand_k (Lemmas 1-2)",
+            sparsifier="rand")(QuantizedSparsifier)
+register_op("signtopk", "Sign o Top_k (Lemma 3)",
+            sparsifier="top")(SignSparsifier)
+register_op("signrandk", "Sign o Rand_k (Lemma 3)",
+            sparsifier="rand")(SignSparsifier)
+register_op("row_signtopk", "per-row SignTop_k (TP-shard-local)")(
+    RowSignTopK)
+
+
+class _OperatorsView(dict):
+    """Backward-compat ``OPERATORS`` mapping: name -> constructor."""
+
+    def __getitem__(self, name):
+        entry = super().__getitem__(name)
+        return partial(entry.cls, **dict(entry.fixed)) if entry.fixed \
+            else entry.cls
+
+
+OPERATORS = _OperatorsView(OP_REGISTRY)
 
 
 def make_operator(name: str, **kw) -> CompressionOp:
-    if name not in OPERATORS:
-        raise KeyError(f"unknown operator {name!r}; have {sorted(OPERATORS)}")
-    return OPERATORS[name](**kw)
+    """Construct a registered operator; loud errors for unknown names
+    and unknown/pinned kwargs (the registry's validation choke point)."""
+    if name not in OP_REGISTRY:
+        raise KeyError(
+            f"unknown operator {name!r}; registered: {sorted(OP_REGISTRY)}")
+    entry = OP_REGISTRY[name]
+    pinned = dict(entry.fixed)
+    clash = sorted(set(kw) & set(pinned))
+    if clash:
+        raise TypeError(
+            f"operator {name!r} pins {clash}; use a different registry "
+            f"name instead of overriding")
+    valid = entry.fields()
+    unknown = sorted(set(kw) - set(valid))
+    if unknown:
+        raise TypeError(
+            f"operator {name!r} has no parameter(s) {unknown}; "
+            f"valid: {sorted(valid)}")
+    return entry.cls(**pinned, **kw)
+
+
+def spec_name_of(op: CompressionOp) -> str:
+    """The registry name serializing this operator instance — the entry
+    of ``type(op)`` whose pinned kwargs match (most-pinned wins, so
+    ``QuantizedSparsifier(sparsifier='top')`` maps to ``qtopk``)."""
+    best = None
+    for entry in OP_REGISTRY.values():
+        if entry.cls is not type(op):
+            continue
+        if all(getattr(op, k) == v for k, v in entry.fixed):
+            if best is None or len(entry.fixed) > len(best.fixed):
+                best = entry
+    if best is None:
+        raise KeyError(
+            f"{type(op).__name__}({op!r}) matches no registered operator "
+            f"name; register it with register_op")
+    return best.name

@@ -60,6 +60,9 @@ class QsparseState(NamedTuple):
     master_view: Any = None
     down_memory: Any = None
     bits_down: Any = None
+    # optional per-leaf-group ledgers (engine leaf_ledger=True)
+    leaf_bits: Any = None
+    leaf_bits_down: Any = None
 
 
 def _replicate(tree, R: int):
@@ -72,6 +75,7 @@ def _from_engine(e: engine.EngineState, keep_view: bool) -> QsparseState:
         step=e.step, bits=e.bits, rounds=e.rounds,
         master_view=e.master_view if keep_view else None,
         down_memory=e.down_memory, bits_down=e.bits_down,
+        leaf_bits=e.leaf_bits, leaf_bits_down=e.leaf_bits_down,
     )
 
 
@@ -87,14 +91,16 @@ def _to_engine(state: QsparseState, R: int) -> engine.EngineState:
         local=state.local, memory=state.memory, inner=state.inner,
         step=state.step, bits=state.bits, rounds=state.rounds,
         down_memory=state.down_memory, bits_down=state.bits_down,
+        leaf_bits=state.leaf_bits, leaf_bits_down=state.leaf_bits_down,
     )
 
 
 def init(params, inner_opt: GradientTransform, R: int,
-         downlink=None) -> QsparseState:
+         downlink=None, leaf_ledger: bool = False) -> QsparseState:
     keep_view = not chn.as_channel(downlink, "downlink").is_identity()
     return _from_engine(
-        engine.init(params, inner_opt, R, downlink=downlink), keep_view)
+        engine.init(params, inner_opt, R, downlink=downlink,
+                    leaf_ledger=leaf_ledger), keep_view)
 
 
 def make_step(
@@ -106,6 +112,7 @@ def make_step(
     *,
     dispatch: Optional[DispatchConfig] = None,
     downlink=None,
+    leaf_ledger: bool = False,
 ):
     """Build the jittable Algorithm-1 step (engine with an all-equal mask).
 
@@ -117,10 +124,14 @@ def make_step(
     exact dense broadcast, today's trajectories bit-for-bit; see
     DESIGN.md §5).  Pass the same value to :func:`init` so the
     server-side error memory is allocated.
+
+    leaf_ledger: per-top-level-leaf-group wire-bit accounting (pass
+    the same flag to :func:`init`).
     """
     engine_step = engine.make_step(
         grad_fn, inner_opt, operator, lr_schedule, R,
         dispatch=dispatch, global_rounds=True, downlink=downlink,
+        leaf_ledger=leaf_ledger,
     )
     keep_view = not chn.as_channel(downlink, "downlink").is_identity()
 

@@ -611,7 +611,8 @@ def compress_tree(op_tree, key, grads,
 
 
 def channel_compress_tree(op_tree, key, acc,
-                          cfg: Optional[DispatchConfig] = None):
+                          cfg: Optional[DispatchConfig] = None,
+                          *, want_leaf_bits: bool = False):
     """Channel-aware tree compression (DESIGN.md §5): compress the
     error-compensated accumulator ``acc`` and hand back the updated
     error memory alongside.
@@ -625,6 +626,11 @@ def channel_compress_tree(op_tree, key, acc,
     error memory (computed in the same VMEM residency, §3.3); every
     other leaf derives it as ``acc − q`` — bit-identical either way,
     both are the same f32 elementwise subtract.
+
+    ``want_leaf_bits``: additionally return the per-leaf wire bits (a
+    list of f32 scalars in flatten order — the per-leaf ledger of
+    DESIGN.md §6) as a fourth element.  The total is always the sum of
+    that list, so the aggregate ledger is unchanged either way.
     """
     cfg = _resolve(cfg)
     leaves, treedef = jax.tree_util.tree_flatten(acc)
@@ -646,6 +652,9 @@ def channel_compress_tree(op_tree, key, acc,
     mems = [m if m is not None else a - o
             for m, a, o in zip(mems, leaves, outs)]
     total = jnp.sum(jnp.stack(bit_terms)) if bit_terms else jnp.float32(0)
-    return (jax.tree_util.tree_unflatten(treedef, outs),
-            jax.tree_util.tree_unflatten(treedef, mems),
-            total)
+    out = (jax.tree_util.tree_unflatten(treedef, outs),
+           jax.tree_util.tree_unflatten(treedef, mems),
+           total)
+    if want_leaf_bits:
+        return out + (list(bit_terms),)
+    return out

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import set_mesh
-from repro.configs import ARCHS, get_config
+from repro.configs import ARCHS, get_config, get_policy_preset
+from repro.core import policy as pol
 from repro.core.distributed import ShardCompressor, make_dist_steps
 from repro.data import LMTokenStream
 from repro.launch.mesh import data_axes, worker_count
@@ -33,6 +34,54 @@ from repro.models import get_model
 from repro.optim import momentum_sgd, warmup_piecewise
 from repro.sharding.specs import activation_policy, param_specs, sanitize_spec
 from repro.train import checkpoint
+
+
+def resolve_policy_arg(args) -> pol.ChannelSpec:
+    """One ChannelSpec from the CLI surface (DESIGN.md §6).
+
+    ``--policy`` takes an inline DSL string, ``@file.json`` (a
+    ``to_dict()`` serialization) or ``preset:<name>`` /``preset:arch``
+    (configs/policies.py).  The legacy ``--compressor``/``--downlink``
+    flags map onto the equivalent catch-all policy behind a one-time
+    deprecation warning; every name goes through the operator registry,
+    so an unknown compressor or downlink fails loudly instead of
+    silently meaning identity.
+    """
+    legacy = (args.compressor is not None or args.downlink is not None
+              or args.downlink_k_frac is not None)
+    if args.policy is not None:
+        if legacy:
+            raise SystemExit(
+                "--policy conflicts with the deprecated --compressor/"
+                "--downlink/--downlink-k-frac flags; put both directions "
+                "in the policy ('uplink >> downlink')")
+        if args.policy.startswith("preset:"):
+            spec = get_policy_preset(args.policy[len("preset:"):],
+                                     arch=args.arch)
+        else:
+            spec = pol.load(args.policy)
+        return pol.as_channel_spec(spec)
+    if legacy:
+        pol.warn_once(
+            "launch-legacy-flags",
+            "--compressor/--downlink/--downlink-k-frac are deprecated; "
+            "use --policy (e.g. --policy 'topk:k=0.01 >> topk:k=0.05')",
+            stacklevel=2)
+    up_name = args.compressor or "topk"
+    up = (pol.PolicySpec.catch_all("identity") if up_name == "none"
+          else pol.PolicySpec.catch_all(
+              pol.OpSpec(up_name, (("k", args.k_frac),))
+              if pol.OpSpec.parse(up_name).takes("k")
+              else pol.OpSpec.parse(up_name)))
+    down = None
+    if args.downlink is not None and args.downlink != "identity":
+        dk = (args.downlink_k_frac if args.downlink_k_frac is not None
+              else args.k_frac)
+        dspec = (pol.OpSpec(args.downlink, (("k", dk),))
+                 if pol.OpSpec.parse(args.downlink).takes("k")
+                 else pol.OpSpec.parse(args.downlink))
+        down = pol.PolicySpec.catch_all(dspec)
+    return pol.ChannelSpec(up, down)
 
 
 def main():
@@ -47,8 +96,14 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--H", type=int, default=4)
     ap.add_argument("--k-frac", type=float, default=0.01)
-    ap.add_argument("--compressor", default="topk",
-                    choices=["topk", "signtopk", "none"])
+    ap.add_argument("--policy", default=None,
+                    help="compression policy (DESIGN.md §6): inline DSL "
+                         "('norm->identity;.*->topk:k=0.01', uplink '>>' "
+                         "downlink), @file.json, or preset:<name>|"
+                         "preset:arch (configs/policies.py)")
+    ap.add_argument("--compressor", default=None,
+                    choices=["topk", "signtopk", "none"],
+                    help="DEPRECATED: use --policy")
     ap.add_argument("--dispatch", default="auto",
                     choices=["auto", "kernel", "reference"],
                     help="compression kernel routing (kernels/dispatch.py): "
@@ -58,15 +113,13 @@ def main():
                     choices=["dense_psum", "sparse_allgather"],
                     help="sync aggregation: dense psum, or compact "
                          "(idx, val) allgather (the sparse wire format)")
-    ap.add_argument("--downlink", default="identity",
-                    choices=["identity", "topk", "signtopk"],
-                    help="server→worker compression channel (DESIGN.md "
-                         "§5): identity = exact dense broadcast (charged "
-                         "on the downlink ledger), topk/signtopk = "
-                         "error-compensated compressed master delta")
+    ap.add_argument("--downlink", default=None,
+                    help="DEPRECATED: use --policy 'up >> down'.  "
+                         "Registry operator name for the server→worker "
+                         "channel (identity = exact dense broadcast)")
     ap.add_argument("--downlink-k-frac", type=float, default=None,
-                    help="survivor fraction of the downlink channel "
-                         "(default: --k-frac)")
+                    help="DEPRECATED: survivor fraction of the downlink "
+                         "channel (default: --k-frac)")
     ap.add_argument("--zero1", action="store_true")
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--ckpt", default=None)
@@ -88,22 +141,25 @@ def main():
             return l
         return jax.value_and_grad(loss)(params)
 
+    # params first: the policy resolves per leaf against their paths
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    channel_spec = resolve_policy_arg(args)
+    print("policy:", channel_spec.to_string(), flush=True)
+    uplink = ShardCompressor.from_spec(
+        channel_spec.uplink, params, dispatch=args.dispatch)
     downlink = None
-    if args.downlink != "identity":
-        downlink = ShardCompressor(
-            args.downlink,
-            args.downlink_k_frac if args.downlink_k_frac is not None
-            else args.k_frac,
-            dispatch=args.dispatch)
+    if channel_spec.downlink is not None:
+        downlink = ShardCompressor.from_spec(
+            channel_spec.downlink, params, dispatch=args.dispatch)
     init_fn, local_step, sync_step = make_dist_steps(
         grad_fn, momentum_sgd(0.9),
-        ShardCompressor(args.compressor, args.k_frac, dispatch=args.dispatch),
+        uplink if uplink is not None
+        else ShardCompressor("none", dispatch=args.dispatch),
         warmup_piecewise(args.lr, 5, [int(args.steps * 0.8)]),
         mesh, daxes, specs, zero1=args.zero1, aggregate=args.aggregate,
         downlink=downlink,
     )
     from jax.sharding import NamedSharding
-    params = model.init_params(jax.random.PRNGKey(0), cfg)
     put_specs = jax.tree_util.tree_map(
         lambda leaf, sp: NamedSharding(
             mesh, sanitize_spec(sp, leaf.shape, mesh)),
@@ -153,7 +209,10 @@ def main():
           f"downlink = {total:.3g} wire bits")
     assert np.isfinite(float(loss))
     if args.ckpt:
-        checkpoint.save(args.ckpt, state.master, step=args.steps)
+        # persist the policy spec so a resume reproduces the exact
+        # per-leaf operators (and hence the bits trajectories)
+        checkpoint.save(args.ckpt, state.master, step=args.steps,
+                        policy=channel_spec.to_dict())
         print("checkpoint saved to", args.ckpt)
 
 

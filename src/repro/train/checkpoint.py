@@ -32,11 +32,18 @@ def _flatten_with_paths(tree):
     return items, treedef
 
 
-def save(path: str, tree: Any, step: Optional[int] = None) -> None:
+def save(path: str, tree: Any, step: Optional[int] = None,
+         policy: Optional[dict] = None) -> None:
+    """``policy``: the run's serialized compression spec
+    (``core.policy`` ``to_dict()`` form) — persisted into the manifest
+    so a resume reproduces the exact per-leaf operators and hence the
+    bits trajectories (read it back with :func:`load_policy`)."""
     os.makedirs(path, exist_ok=True)
     items, _ = _flatten_with_paths(tree)
     arrays = {}
     manifest = {"keys": [], "step": step}
+    if policy is not None:
+        manifest["policy"] = policy
     for i, (key, leaf) in enumerate(items):
         name = f"a{i}"
         arr = np.asarray(jax.device_get(leaf))
@@ -77,6 +84,19 @@ def restore(path: str, like: Any, shardings: Any = None) -> Any:
             tree, like,
         )
     return tree
+
+
+def load_policy(path: str):
+    """The compression spec this checkpoint was trained with, as a
+    ``core.policy`` spec object (ChannelSpec/PolicySpec/OpSpec), or
+    None for pre-policy checkpoints."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    d = manifest.get("policy")
+    if d is None:
+        return None
+    from repro.core import policy as pol
+    return pol.from_dict(d)
 
 
 def latest_step(root: str) -> Optional[int]:

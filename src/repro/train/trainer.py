@@ -17,13 +17,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Iterable, Optional
+from typing import Any, Callable, Iterable, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine, schedule as sched
+from repro.core import engine, policy as pol, schedule as sched
 from repro.core.operators import CompressionOp
 from repro.kernels.dispatch import DispatchConfig
 from repro.optim.transforms import GradientTransform
@@ -44,12 +44,67 @@ class RunConfig:
     target_loss: Optional[float] = None
     dispatch: str = "auto"  # "auto" | "kernel" | "reference"
     pack: bool = True       # megabuffer-pack same-operator leaves per round
-    # server→worker compression channel (DESIGN.md §5): an operator (or
-    # tree) applied to each syncing worker's master delta with a
-    # server-side error memory.  None/Identity = exact dense broadcast
-    # (historical trajectories bit-for-bit), charged to the downlink
-    # ledger.
-    downlink_op: Optional[Any] = None
+    # THE compression-configuration surface (DESIGN.md §6): a
+    # ``core.policy`` spec — PolicySpec / ChannelSpec / OpSpec, the DSL
+    # string form ("topk:k=0.01", "norm->identity;.*->topk:k=0.01",
+    # uplink ">>" downlink), or a plain CompressionOp.  Resolved
+    # against the params at train() time into the per-leaf operator
+    # trees for both wire directions.  When set, the legacy
+    # ``operator`` argument and ``downlink_op`` field must be left
+    # unset.
+    policy: Optional[Union[str, pol.PolicySpec, pol.ChannelSpec,
+                           pol.OpSpec, CompressionOp]] = None
+    # per-top-level-leaf-group wire-bit ledger (History.leaf_bits /
+    # leaf_bits_down) — compare heterogeneous policies on the paper's
+    # x-axis per layer group.  Pure accounting; trajectories unchanged.
+    leaf_ledger: bool = False
+    # DEPRECATED (PR 4): the pre-policy downlink knob.  Use
+    # ``policy="<uplink> >> <downlink>"`` (or a ChannelSpec) instead;
+    # kept as a shim with a one-time warning.
+    downlink_op: Optional[Union[CompressionOp, str]] = None
+
+
+def _deprecated(name: str, instead: str):
+    pol.warn_once(name, f"{name} is deprecated; use {instead} instead")
+
+
+def resolve_run_channels(operator, run: RunConfig, params):
+    """Normalize the (operator, run.policy, run.downlink_op) surfaces
+    into resolved (uplink_tree, downlink_tree_or_None, channel_spec).
+
+    ``run.policy`` is the one true path; the legacy ``operator`` +
+    ``downlink_op`` pair keeps working behind a deprecation warning
+    (exactly the old semantics — bit-for-bit trajectories).
+    ``channel_spec`` is the serializable ChannelSpec persisted into
+    checkpoints when the policy surface was used (None for raw
+    operator objects, which have no canonical spec form).
+    """
+    if run.policy is not None:
+        if operator is not None:
+            raise ValueError(
+                "pass the compression through RunConfig.policy OR the "
+                "operator argument, not both")
+        if run.downlink_op is not None:
+            raise ValueError(
+                "RunConfig.downlink_op conflicts with RunConfig.policy; "
+                "put the downlink in the policy ('uplink >> downlink')")
+        spec = pol.as_channel_spec(run.policy)
+        up, down = spec.resolve(params)
+        return up, down, spec
+    if operator is None:
+        raise ValueError("no compression configured: set RunConfig.policy "
+                         "or pass an operator")
+    downlink = run.downlink_op
+    if downlink is not None:
+        _deprecated("RunConfig.downlink_op",
+                    "RunConfig.policy ('uplink >> downlink')")
+        if isinstance(downlink, str):
+            # registry-validated: unknown names raise KeyError here
+            # instead of silently meaning Identity
+            downlink = pol.resolve(downlink, params)
+    if isinstance(operator, (str, pol.OpSpec, pol.PolicySpec)):
+        operator = pol.resolve(operator, params)
+    return operator, downlink, None
 
 
 @dataclasses.dataclass
@@ -64,9 +119,14 @@ class History:
     bits_to_target: Optional[float] = None
     steps_to_target: Optional[int] = None
     wall_time: float = 0.0
+    # per-leaf-group ledger (RunConfig.leaf_ledger): group names plus,
+    # per log point, the cumulative [G] bits vector per direction
+    leaf_groups: list = dataclasses.field(default_factory=list)
+    leaf_bits: list = dataclasses.field(default_factory=list)
+    leaf_bits_down: list = dataclasses.field(default_factory=list)
 
     def summary(self) -> dict:
-        return {
+        out = {
             "final_loss": self.loss[-1] if self.loss else None,
             "total_bits": self.bits[-1] if self.bits else 0.0,
             "total_bits_down": self.bits_down[-1] if self.bits_down else 0.0,
@@ -75,6 +135,12 @@ class History:
             "steps_to_target": self.steps_to_target,
             "wall_time": self.wall_time,
         }
+        if self.leaf_groups and self.leaf_bits:
+            out["leaf_bits"] = dict(zip(self.leaf_groups,
+                                        self.leaf_bits[-1]))
+            out["leaf_bits_down"] = dict(zip(self.leaf_groups,
+                                             self.leaf_bits_down[-1]))
+        return out
 
 
 def make_mask(run: RunConfig) -> np.ndarray:
@@ -90,25 +156,33 @@ def train(
     grad_fn: Callable,                       # (params, batch)->(loss, grads)
     params: Any,
     inner_opt: GradientTransform,
-    operator: CompressionOp | Any,
-    lr_schedule: Callable,
-    batches: Iterable,
-    run: RunConfig,
+    operator: CompressionOp | Any = None,    # legacy; prefer run.policy
+    lr_schedule: Callable = None,
+    batches: Iterable = None,
+    run: RunConfig = None,
     eval_fn: Optional[Callable] = None,      # (master_params) -> metrics dict
     smooth: int = 20,
 ) -> tuple[Any, History]:
     """Runs Algorithm 1 (or Algorithm 2 when run.asynchronous) via the
-    unified engine."""
+    unified engine.  Compression comes from ``run.policy`` (a
+    ``core.policy`` spec resolved per leaf against ``params``) or the
+    legacy ``operator`` argument — identical math either way."""
     key = jax.random.PRNGKey(run.seed)
     hist = History()
     t0 = time.time()
     dispatch = DispatchConfig(mode=run.dispatch, pack=run.pack)
-    state = engine.init(params, inner_opt, run.R, downlink=run.downlink_op)
+    operator, downlink, channel_spec = resolve_run_channels(
+        operator, run, params)
+    state = engine.init(params, inner_opt, run.R, downlink=downlink,
+                        leaf_ledger=run.leaf_ledger)
     step_fn = jax.jit(engine.make_step(
         grad_fn, inner_opt, operator, lr_schedule, run.R,
         dispatch=dispatch, global_rounds=not run.asynchronous,
-        downlink=run.downlink_op))
+        downlink=downlink, leaf_ledger=run.leaf_ledger))
     mask = make_mask(run)
+    ckpt_policy = None if channel_spec is None else channel_spec.to_dict()
+    if run.leaf_ledger:
+        hist.leaf_groups = list(engine.leaf_group_names(params))
 
     recent = []
     for t, batch in enumerate(batches):
@@ -128,6 +202,11 @@ def train(
             hist.bits.append(float(state.bits))
             hist.bits_down.append(float(state.bits_down))
             hist.rounds.append(int(state.rounds))
+            if run.leaf_ledger:
+                hist.leaf_bits.append(
+                    [float(b) for b in np.asarray(state.leaf_bits)])
+                hist.leaf_bits_down.append(
+                    [float(b) for b in np.asarray(state.leaf_bits_down)])
         if (run.target_loss is not None and hist.bits_to_target is None
                 and sm <= run.target_loss and len(recent) == smooth):
             hist.bits_to_target = float(state.bits)
@@ -138,9 +217,10 @@ def train(
                 {k: float(v) for k, v in eval_fn(state.master).items()}
             )
         if run.ckpt_dir and run.ckpt_every and (t + 1) % run.ckpt_every == 0:
-            ckpt.save(f"{run.ckpt_dir}/step_{t + 1}", state.master, step=t + 1)
+            ckpt.save(f"{run.ckpt_dir}/step_{t + 1}", state.master,
+                      step=t + 1, policy=ckpt_policy)
     hist.wall_time = time.time() - t0
     if run.ckpt_dir:
         ckpt.save(f"{run.ckpt_dir}/final", state.master,
-                  step=run.total_steps)
+                  step=run.total_steps, policy=ckpt_policy)
     return state, hist

@@ -380,6 +380,83 @@ def test_legacy_tp_kernel_guard(subproc):
     assert "TP KERNEL GUARD OK" in out
 
 
+HETERO_POLICY = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.compat import set_mesh
+from repro.core.distributed import make_dist_steps, ShardCompressor
+from repro.core import policy as pol
+from repro.optim import sgd, constant
+
+# heterogeneous per-leaf policy (DESIGN.md §6) on the legacy TP=2
+# partial-manual mesh: Top_k on the matmul, QSGD on the embedding,
+# dense on the bias — through BOTH aggregation paths, which must agree
+# on states and counted bits (acceptance criterion).
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+R, d_in, d_out, V = 4, 256, 16, 64
+params = {"w": jnp.zeros((d_in, d_out)), "b": jnp.zeros((d_out,)),
+          "embed": jnp.zeros((V, d_in))}
+specs = {"w": P(None, "model"), "b": P("model"), "embed": P(None, None)}
+params = jax.device_put(params, jax.tree.map(
+    lambda s: NamedSharding(mesh, s), specs,
+    is_leaf=lambda z: isinstance(z, P)))
+Wtrue = 0.3 * jax.random.normal(jax.random.PRNGKey(0), (d_in, d_out))
+
+def grad_fn(p, batch):
+    x, y = batch
+    def f(pp):
+        h = jnp.take(pp["embed"], jnp.arange(8) % V, axis=0)
+        return (jnp.mean((x @ pp["w"] + pp["b"] - y) ** 2)
+                + 1e-3 * jnp.sum(h ** 2))
+    return jax.value_and_grad(f)(p)
+
+POLICY = "b->identity; embed->qsgd:s=15; .*->topk:k=0.05"
+
+def run(aggregate, disp):
+    comp = ShardCompressor.from_spec(POLICY, params, dispatch=disp)
+    assert comp.mode == "policy"
+    init_fn, ls_, ss_ = make_dist_steps(
+        grad_fn, sgd(), comp, constant(0.05), mesh, ("data",), specs,
+        aggregate=aggregate)
+    with set_mesh(mesh):
+        state = init_fn(params)
+        ls, ss = jax.jit(ls_), jax.jit(ss_)
+        key = jax.random.PRNGKey(1)
+        for t in range(12):
+            key, s1, s2 = jax.random.split(key, 3)
+            x = jax.random.normal(s1, (R, 8, d_in))
+            y = jnp.einsum("rbi,io->rbo", x, Wtrue)
+            if (t + 1) % 4 == 0:
+                state, loss = ss(state, (x, y), s2)
+            else:
+                state, loss = ls(state, (x, y), s2)
+    return state
+
+# the dense leg keeps reference dispatch (0.4.x TP>1 dense-psum kernel
+# guard); the sparse leg runs the compact kernels for the Top_k leaf
+sd = run("dense_psum", "reference")
+sp = run("sparse_allgather", "kernel")
+for k in ("w", "b", "embed"):
+    np.testing.assert_allclose(np.asarray(sd.master[k]),
+                               np.asarray(sp.master[k]),
+                               rtol=1e-4, atol=1e-5)
+# identical math (the QSGD draw shares the key stream across paths):
+# counted bits agree exactly, and the stochastic leaf transmitted
+np.testing.assert_allclose(float(sd.bits), float(sp.bits))
+assert float(sd.bits) > 0
+print("HETERO POLICY PARITY OK", float(sd.bits))
+"""
+
+
+def test_hetero_policy_dense_sparse_parity(subproc):
+    """A heterogeneous per-leaf policy (TopK + QSGD + identity) trains
+    through both distributed aggregation paths on the legacy 0.4.x
+    TP>1 mesh, with dense-psum and sparse-allgather agreeing on states
+    and counted bits."""
+    out = subproc(HETERO_POLICY, devices=8)
+    assert "HETERO POLICY PARITY OK" in out
+
+
 MULTIPOD = r"""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding

@@ -1,0 +1,477 @@
+"""Compression-policy API tests (DESIGN.md §6).
+
+Pins the acceptance contract of the policy redesign:
+ * every registered operator survives the full spec round trip
+   (parse → to_dict → from_dict → to_string → parse) with identical
+   resolved operators;
+ * a catch-all single-rule policy is bit-for-bit identical to the
+   pre-redesign single-operator trajectories (regression pin), through
+   the raw engine and through the trainer surface;
+ * rule order / first-match semantics are property-tested;
+ * the global-budget allocator splits k proportional to leaf size;
+ * a heterogeneous policy trains end-to-end with kernel dispatch and
+   megabuffer packing (one launch per operator family per direction)
+   and an exact per-leaf-group bits ledger;
+ * the deprecated RunConfig/CLI surfaces keep working behind one-time
+   warnings, and unknown names fail loudly everywhere.
+"""
+
+import argparse
+import re
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine, operators as ops, policy as pol, qsparse
+from repro.kernels import dispatch as dsp
+from repro.optim import constant, sgd
+from repro.train import checkpoint as ckpt
+from repro.train import trainer
+
+
+# ---------------------------------------------------------------------------
+# spec round trips
+# ---------------------------------------------------------------------------
+
+
+def _example_spec(name: str) -> pol.OpSpec:
+    """A non-trivial spec per registered op (sets k when it exists)."""
+    entry = ops.OP_REGISTRY[name]
+    kw = {}
+    if "k" in entry.fields():
+        kw["k"] = 0.25
+    if "s" in entry.fields():
+        kw["s"] = 7
+    return pol.OpSpec(name, tuple(kw.items()))
+
+
+@pytest.mark.parametrize("name", sorted(ops.OP_REGISTRY))
+def test_opspec_roundtrip_every_registered_op(name):
+    """parse → to_dict → from_dict → to_string → parse: identical
+    resolved operators at every hop."""
+    spec = _example_spec(name)
+    op0 = spec.build()
+    hops = [
+        pol.OpSpec.parse(spec.to_string()),
+        pol.OpSpec.from_dict(spec.to_dict()),
+        pol.OpSpec.parse(
+            pol.OpSpec.from_dict(
+                pol.OpSpec.parse(spec.to_string()).to_dict()).to_string()),
+    ]
+    for h in hops:
+        assert h == spec
+        assert h.build() == op0
+
+
+@pytest.mark.parametrize("name", sorted(ops.OP_REGISTRY))
+def test_opspec_of_inverts_construction(name):
+    op = ops.make_operator(name)
+    spec = pol.OpSpec.of(op)
+    assert spec.name == name or spec.build() == op
+    assert spec.build() == op
+
+
+def test_unknown_names_and_kwargs_fail_loudly():
+    with pytest.raises(KeyError, match="registered"):
+        pol.OpSpec.parse("nope")
+    with pytest.raises(TypeError, match="no parameter"):
+        pol.OpSpec.parse("topk:frac=0.5")
+    with pytest.raises(KeyError, match="registered"):
+        ops.make_operator("nope")
+    with pytest.raises(TypeError, match="pins"):
+        ops.make_operator("qtopk", sparsifier="rand")
+    with pytest.raises(ValueError, match="key=value"):
+        pol.OpSpec.parse("topk:k")
+
+
+def test_policy_and_channel_roundtrip():
+    text = ("budget=0.25;ln|bias->identity;embed->qsgd:s=15;"
+            "topk:value_bits=16 >> signtopk:k=0.05")
+    spec = pol.parse(text)
+    assert isinstance(spec, pol.ChannelSpec)
+    assert pol.parse(spec.to_string()) == spec
+    assert pol.from_dict(spec.to_dict()) == spec
+    # single side round trips as a PolicySpec
+    side = pol.parse("a->topk:k=3;.*->identity")
+    assert isinstance(side, pol.PolicySpec)
+    assert pol.parse(side.to_string()) == side
+    assert pol.from_dict(side.to_dict()) == side
+
+
+def test_load_json_file(tmp_path):
+    import json
+    spec = pol.parse("embed->qsgd:s=15;.*->topk:k=0.01 >> topk:k=0.05")
+    f = tmp_path / "policy.json"
+    f.write_text(json.dumps(spec.to_dict()))
+    assert pol.load(f"@{f}") == spec
+
+
+# ---------------------------------------------------------------------------
+# resolution: first-match rule order (property), budget, errors
+# ---------------------------------------------------------------------------
+
+
+_PATTERNS = ["^a", "a$", "ab", "b", r"\d", ".*"]
+_TREE = {"ab": jnp.zeros(16), "ba": jnp.zeros(16),
+         "nested": {"a1": jnp.zeros(16), "bb2": jnp.zeros(16)}}
+
+
+@settings(max_examples=40, deadline=None)
+@given(order=st.permutations(list(range(len(_PATTERNS)))),
+       n_rules=st.integers(1, len(_PATTERNS)))
+def test_first_match_rule_order_property(order, n_rules):
+    """The resolved leaf operator is exactly the op of the first rule
+    (in spec order) whose regex search-matches the leaf path — rule
+    order is semantic, later matches never win."""
+    chosen = [_PATTERNS[i] for i in order[:n_rules]]
+    rules = tuple(
+        pol.PolicyRule(pat, pol.OpSpec("topk", (("k", i + 2),)))
+        for i, pat in enumerate(chosen))
+    spec = pol.PolicySpec(rules)
+    paths, _, _ = pol.tree_paths(_TREE)
+    expected = {}
+    for p in paths:
+        m = next((i for i, pat in enumerate(chosen) if re.search(pat, p)),
+                 None)
+        expected[p] = m
+    if any(v is None for v in expected.values()):
+        with pytest.raises(ValueError, match="catch-all"):
+            spec.resolve(_TREE)
+        return
+    tree = spec.resolve(_TREE)
+    leaves = jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda z: isinstance(z, ops.CompressionOp))
+    for p, op in zip(paths, leaves):
+        assert op.k == expected[p] + 2, (p, op, chosen)
+
+
+def test_budget_allocator_proportional_to_leaf_size():
+    params = {"big": jnp.zeros((100, 10)), "small": jnp.zeros((50, 5)),
+              "ln": jnp.zeros(7), "pinned": jnp.zeros(400)}
+    spec = pol.parse(
+        "budget=0.1;pinned->topk:k=5;big|small->topk;.*->identity")
+    tree = spec.resolve(params)
+    flat = dict(zip(pol.tree_paths(params)[0],
+                    jax.tree_util.tree_leaves(
+                        tree,
+                        is_leaf=lambda z: isinstance(z, ops.CompressionOp))))
+    # K = 0.1 * (1000 + 250) = 125, split 1000:250
+    assert flat["big"].k == 100
+    assert flat["small"].k == 25
+    assert flat["pinned"].k == 5          # explicit k untouched
+    assert isinstance(flat["ln"], ops.Identity)
+    # absolute count form
+    spec2 = pol.parse("budget=500;big|small->topk;.*->identity")
+    tree2 = spec2.resolve(params)
+    flat2 = dict(zip(pol.tree_paths(params)[0],
+                     jax.tree_util.tree_leaves(
+                         tree2,
+                         is_leaf=lambda z: isinstance(z, ops.CompressionOp))))
+    assert flat2["big"].k == 400 and flat2["small"].k == 100
+
+
+def test_unmatched_leaf_is_an_error_not_identity():
+    params = {"w": jnp.zeros(8), "unmatched": jnp.zeros(8)}
+    spec = pol.parse("w->topk:k=2")
+    with pytest.raises(ValueError, match="unmatched"):
+        spec.resolve(params)
+
+
+# ---------------------------------------------------------------------------
+# regression pin: catch-all policy == historical single-op trajectories
+# ---------------------------------------------------------------------------
+
+R, D = 4, 48
+
+
+def _problem():
+    cs = jax.random.normal(jax.random.PRNGKey(1), (R, D))
+
+    def grad_fn(p, data):
+        c, noise = data
+        return (0.5 * jnp.sum((p["w"] - c) ** 2),
+                {"w": p["w"] - c + 0.01 * noise, "b": 0.1 * p["b"] + 0.01})
+
+    def batches(T, seed=2):
+        k = jax.random.PRNGKey(seed)
+        out = []
+        for _ in range(T):
+            k, s = jax.random.split(k)
+            out.append((cs, jax.random.normal(s, (R, D))))
+        return out
+
+    params = {"w": jnp.zeros(D), "b": jnp.zeros(12)}
+    return params, grad_fn, batches
+
+
+def _run(params, grad_fn, batches, operator, T=16, H=4, **cfg):
+    from repro.core import schedule
+    inner = sgd()
+    state = qsparse.init(params, inner, R, **cfg)
+    step = qsparse.make_step(grad_fn, inner, operator, constant(0.05), R,
+                             **cfg)
+    mask = schedule.fixed_schedule(T, H)
+    return qsparse.run(state, step, batches(T), mask, jax.random.PRNGKey(3))
+
+
+def test_catch_all_policy_bit_identical_to_single_op():
+    """Acceptance pin: resolve('topk:k=10') reproduces the historical
+    broadcast-operator trajectories bit-for-bit — same masters, locals,
+    memories, losses and ledger."""
+    params, grad_fn, batches = _problem()
+    s0, l0 = _run(params, grad_fn, batches, ops.TopK(k=10))
+    op_tree = pol.resolve("topk:k=10", params)
+    s1, l1 = _run(params, grad_fn, batches, op_tree)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(s0.master[k]),
+                                      np.asarray(s1.master[k]))
+        np.testing.assert_array_equal(np.asarray(s0.local[k]),
+                                      np.asarray(s1.local[k]))
+        np.testing.assert_array_equal(np.asarray(s0.memory[k]),
+                                      np.asarray(s1.memory[k]))
+    assert l0 == l1
+    assert float(s0.bits) == float(s1.bits)
+    assert float(s0.bits_down) == float(s1.bits_down)
+
+
+def test_trainer_policy_matches_operator_surface():
+    """RunConfig.policy and the legacy operator argument produce
+    bit-identical runs (the spec path adds no math)."""
+    params, grad_fn, batches = _problem()
+    T = 12
+    st0, h0 = trainer.train(grad_fn, params, sgd(), ops.TopK(k=0.2),
+                            constant(0.05), batches(T),
+                            trainer.RunConfig(total_steps=T, R=R, H=4,
+                                              log_every=4,
+                                              dispatch="reference"))
+    st1, h1 = trainer.train(grad_fn, params, sgd(), None, constant(0.05),
+                            batches(T),
+                            trainer.RunConfig(total_steps=T, R=R, H=4,
+                                              log_every=4,
+                                              dispatch="reference",
+                                              policy="topk:k=0.2"))
+    np.testing.assert_array_equal(np.asarray(st0.master["w"]),
+                                  np.asarray(st1.master["w"]))
+    assert h0.bits == h1.bits and h0.loss == h1.loss
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous policy end to end (engine, kernels, packing, ledger)
+# ---------------------------------------------------------------------------
+
+
+def test_hetero_policy_trains_with_packing_and_leaf_ledger():
+    """TopK on matmul kernels, QSGD on the embedding, dense on norms —
+    through the engine with kernel dispatch and pack=True: per-family
+    launch counts stay one per operator family per direction, and the
+    per-leaf-group bits ledger is exact."""
+    Rr = 2
+    params = {
+        "embed": 0.1 * jax.random.normal(jax.random.PRNGKey(0), (24, 128)),
+        "layers": {
+            "w1": 0.1 * jax.random.normal(jax.random.PRNGKey(1), (4, 256)),
+            "w2": 0.1 * jax.random.normal(jax.random.PRNGKey(2), (4, 256)),
+        },
+        "ln": jnp.ones(16),
+    }
+    policy = pol.parse(
+        "ln->identity;embed->qsgd:s=15;layers->topk:k=0.05"
+        " >> ln->identity;.*->topk:k=0.1")
+    up, down = pol.as_channel_spec(policy).resolve(params)
+
+    def grad_fn(p, data):
+        loss = sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                   for l in jax.tree_util.tree_leaves(p))
+        return loss, jax.tree_util.tree_map(
+            lambda l: 2.0 * l.astype(jnp.float32) + 0.01 * data, p)
+
+    inner = sgd()
+    cfg = dsp.DispatchConfig(mode="kernel", pack=True, min_size=1)
+    state = engine.init(params, inner, Rr, downlink=down, leaf_ledger=True)
+    step = engine.make_step(grad_fn, inner, up, constant(0.05), Rr,
+                            dispatch=cfg, downlink=down, leaf_ledger=True)
+    # one launch per operator family per direction per sync round
+    dsp.reset_launches()
+    jax.jit(step).lower(state, jnp.zeros((Rr,)), jnp.ones((Rr,), bool),
+                        jax.random.PRNGKey(0))
+    # uplink: one topk bucket (w1+w2 share (row,k,sign)) + one qsgd;
+    # downlink: embed/w1/w2 all global-TopK rows but two row lengths
+    # (embed 3072 vs layers 1024) -> two topk launches
+    assert dsp.LAUNCHES["qsgd"] == 1
+    assert dsp.LAUNCHES["topk_compress"] == 3
+    fn = jax.jit(step)
+    key = jax.random.PRNGKey(4)
+    for t in range(6):
+        key, sub = jax.random.split(key)
+        state, loss = fn(state, jnp.zeros((Rr,)),
+                         jnp.asarray((t + 1) % 2 == 0), sub)
+    assert np.isfinite(float(loss))
+    groups = engine.leaf_group_names(params)
+    assert groups == ("embed", "layers", "ln")
+    # the per-group ledgers sum exactly to the aggregate ledgers
+    np.testing.assert_allclose(float(jnp.sum(state.leaf_bits)),
+                               float(state.bits), rtol=1e-6)
+    np.testing.assert_allclose(float(jnp.sum(state.leaf_bits_down)),
+                               float(state.bits_down), rtol=1e-6)
+    # identity group: uplink charges exactly the dense cost per worker
+    # per round (Identity transmits dense); downlink Identity rule too
+    rounds = 3
+    i_ln = groups.index("ln")
+    assert float(state.leaf_bits[i_ln]) == rounds * Rr * 32 * 16
+    assert float(state.leaf_bits_down[i_ln]) == rounds * Rr * 32 * 16
+    # every group transmitted something in both directions
+    assert all(float(b) > 0 for b in state.leaf_bits)
+    assert all(float(b) > 0 for b in state.leaf_bits_down)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims + loud errors on the config surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_runconfig_downlink_op_shim_warns_and_works():
+    params, grad_fn, batches = _problem()
+    pol._WARNED_KEYS.clear()
+    cfg = trainer.RunConfig(total_steps=4, R=R, H=2,
+                            dispatch="reference",
+                            downlink_op=ops.TopK(k=5))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        up, down, spec = trainer.resolve_run_channels(
+            ops.TopK(k=10), cfg, params)
+    assert any("deprecated" in str(x.message) for x in w)
+    assert isinstance(down, ops.TopK) and spec is None
+    # one-time: a second resolve does not warn again
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        trainer.resolve_run_channels(ops.TopK(k=10), cfg, params)
+    assert not any("deprecated" in str(x.message) for x in w2)
+
+
+def test_runconfig_policy_conflicts_and_registry_errors():
+    params, grad_fn, batches = _problem()
+    cfg = trainer.RunConfig(total_steps=4, R=R, policy="topk:k=2")
+    with pytest.raises(ValueError, match="not both"):
+        trainer.resolve_run_channels(ops.TopK(k=2), cfg, params)
+    cfg2 = trainer.RunConfig(total_steps=4, R=R, policy="topk:k=2",
+                             downlink_op=ops.TopK(k=2))
+    with pytest.raises(ValueError, match="downlink"):
+        trainer.resolve_run_channels(None, cfg2, params)
+    with pytest.raises(ValueError, match="no compression"):
+        trainer.resolve_run_channels(
+            None, trainer.RunConfig(total_steps=4, R=R), params)
+    # unknown downlink names go through the registry: loud KeyError,
+    # never a silent identity (the old --downlink-k-frac=None path)
+    cfg3 = trainer.RunConfig(total_steps=4, R=R, downlink_op="nope")
+    with pytest.raises(KeyError, match="registered"):
+        trainer.resolve_run_channels(ops.TopK(k=2), cfg3, params)
+
+
+def test_launcher_legacy_flags_map_to_policy():
+    from repro.launch import train as lt
+
+    def ns(**kw):
+        base = dict(policy=None, compressor=None, downlink=None,
+                    downlink_k_frac=None, k_frac=0.02, arch="yi-6b")
+        base.update(kw)
+        return argparse.Namespace(**base)
+
+    pol._WARNED_KEYS.clear()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        spec = lt.resolve_policy_arg(
+            ns(compressor="topk", downlink="topk"))
+    assert any("deprecated" in str(x.message) for x in w)
+    assert spec.uplink.rules[0].op == pol.OpSpec("topk", (("k", 0.02),))
+    assert spec.downlink.rules[0].op == pol.OpSpec("topk", (("k", 0.02),))
+    # --downlink-k-frac overrides; fallback to --k-frac otherwise
+    spec2 = lt.resolve_policy_arg(
+        ns(compressor="topk", downlink="signtopk", downlink_k_frac=0.5))
+    assert spec2.downlink.rules[0].op == pol.OpSpec(
+        "signtopk", (("k", 0.5),))
+    # one-time warning
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        lt.resolve_policy_arg(ns(compressor="topk"))
+    assert not any("deprecated" in str(x.message) for x in w2)
+    # unknown downlink name: loud registry error, not silent identity
+    with pytest.raises(KeyError, match="registered"):
+        lt.resolve_policy_arg(ns(downlink="nope"))
+    # --policy + legacy flags conflict
+    with pytest.raises(SystemExit):
+        lt.resolve_policy_arg(ns(policy="topk:k=0.01", compressor="topk"))
+    # no flags at all: the historical default (catch-all topk @ k-frac)
+    spec3 = lt.resolve_policy_arg(ns())
+    assert spec3.uplink.rules[0].op == pol.OpSpec("topk", (("k", 0.02),))
+    assert spec3.downlink is None
+
+
+def test_checkpoint_persists_policy(tmp_path):
+    spec = pol.as_channel_spec(pol.parse(
+        "embed->qsgd:s=15;.*->topk:k=0.01 >> topk:k=0.05"))
+    tree = {"w": jnp.arange(4.0)}
+    path = str(tmp_path / "ck")
+    ckpt.save(path, tree, step=3, policy=spec.to_dict())
+    assert ckpt.load_policy(path) == spec
+    # pre-policy checkpoints read back as None
+    path2 = str(tmp_path / "old")
+    ckpt.save(path2, tree, step=1)
+    assert ckpt.load_policy(path2) is None
+
+
+def test_shard_compressor_normalizes_absolute_k_to_leaf_fraction():
+    """The shard paths select per compression *row*: an absolute
+    whole-leaf k (e.g. from the budget allocator) must become the
+    equivalent leaf fraction in from_spec, not a per-row count — else
+    a budget of 164 survivors on a (64, 256) leaf would transmit
+    164 *per row* (~64x over budget, silently near-dense)."""
+    from repro.core.distributed import ShardCompressor
+
+    params = {"w": jnp.zeros((64, 256)), "ln": jnp.zeros(16)}
+    comp = ShardCompressor.from_spec(
+        "budget=164;w->topk;.*->identity", params, dispatch="reference")
+    flat = dict(zip(pol.tree_paths(params)[0],
+                    jax.tree_util.tree_leaves(
+                        comp.ops,
+                        is_leaf=lambda z: isinstance(z, ops.CompressionOp))))
+    w_op = flat["w"]
+    assert isinstance(w_op.k, float) and 0.0 < w_op.k < 1.0
+    np.testing.assert_allclose(w_op.k, 164 / (64 * 256), rtol=1e-6)
+    # end to end: survivors stay near the budget, not nrows * budget
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 256)),
+         "ln": jnp.zeros(16)}
+    out, _bits = comp(g, None)
+    nnz = int(jnp.sum(out["w"] != 0.0))
+    assert nnz <= 3 * 64, nnz          # <= round-up of 164/64 per row
+    assert nnz < 164 * 8               # nowhere near the per-row blowup
+    # fractional and per-row ops pass through untouched
+    comp2 = ShardCompressor.from_spec(
+        "w->topk:k=0.05;.*->row_topk:k=7,row_len=8", params,
+        dispatch="reference")
+    flat2 = dict(zip(pol.tree_paths(params)[0],
+                     jax.tree_util.tree_leaves(
+                         comp2.ops,
+                         is_leaf=lambda z: isinstance(z, ops.CompressionOp))))
+    assert flat2["w"].k == 0.05
+    assert flat2["ln"].k == 7
+
+
+def test_trainer_leaf_ledger_history():
+    params, grad_fn, batches = _problem()
+    T = 8
+    cfg = trainer.RunConfig(total_steps=T, R=R, H=4, log_every=4,
+                            dispatch="reference", leaf_ledger=True,
+                            policy="w->topk:k=10;.*->identity")
+    state, hist = trainer.train(grad_fn, params, sgd(), None,
+                                constant(0.05), batches(T), cfg)
+    assert hist.leaf_groups == ["b", "w"]
+    assert hist.leaf_bits and len(hist.leaf_bits[-1]) == 2
+    np.testing.assert_allclose(sum(hist.leaf_bits[-1]), hist.bits[-1],
+                               rtol=1e-6)
+    np.testing.assert_allclose(sum(hist.leaf_bits_down[-1]),
+                               hist.bits_down[-1], rtol=1e-6)
+    assert "leaf_bits" in hist.summary()
