@@ -112,6 +112,62 @@ def run():
     rows.extend(_bench_packing())
     rows.extend(_bench_channel_round())
     rows.extend(_bench_hetero_policy())
+    rows.extend(_bench_runtime())
+    return rows
+
+
+def _bench_runtime():
+    """Round-program runtime vs the per-step host loop (DESIGN.md §7):
+    the same T-step fixed-H schedule driven per step (one jitted,
+    donated dispatch + loss fetch per step) vs as compiled round
+    programs (lax.scan over the local phase, sync at the tail, one
+    fetch per round).  us_per_call is per *step*; with H=8 the local
+    phase dominates, so the row pair gates the host-overhead win the
+    runtime exists for.  Identical wire bits — a ledger-parity pin."""
+    from repro.core import engine, schedule
+    from repro.optim import constant, sgd
+
+    R_, D_, H_, T_ = 4, 4096, 8, 48
+    cs = jax.random.normal(jax.random.PRNGKey(30), (R_, D_))
+    params = {"w": jnp.zeros(D_)}
+    inner = sgd()
+    op = ops.TopK(k=0.01)
+
+    def grad_fn(p, data):
+        c, noise = data
+        g = p["w"] - c + 0.01 * noise
+        return 0.5 * jnp.sum((p["w"] - c) ** 2), {"w": g}
+
+    k = jax.random.PRNGKey(31)
+    bs = []
+    for _ in range(T_):
+        k, s = jax.random.split(k)
+        bs.append((cs, jax.random.normal(s, (R_, D_))))
+    mask = schedule.fixed_schedule(T_, H_)
+    step = engine.make_step(grad_fn, inner, op, constant(0.05), R_,
+                            global_rounds=True)
+    sstep = engine.make_superstep(grad_fn, inner, op, constant(0.05), R_,
+                                  global_rounds=True)
+
+    def host_loop():
+        st = engine.init(params, inner, R_)
+        st, _ = engine.run(st, step, bs, mask, jax.random.PRNGKey(32))
+        return st.bits
+
+    def superstep():
+        st = engine.init(params, inner, R_)
+        st, _ = engine.run_rounds(st, sstep, bs, mask,
+                                  jax.random.PRNGKey(32))
+        return st.bits
+
+    rows = []
+    for name, fn in (("host_loop", host_loop), ("superstep", superstep)):
+        bits, us_total = _time(fn, n=3)
+        us_step = us_total / T_
+        rows.append(BenchRow(
+            f"round/steps_per_s/{name}", us_step,
+            f"steps_per_s={1e6 / max(us_step, 1e-9):.1f};H={H_};T={T_}",
+            wire_bits=float(bits), path=name))
     return rows
 
 

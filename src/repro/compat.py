@@ -43,6 +43,24 @@ else:
                           check_rep=bool(check_vma) and not auto, auto=auto)
 
 
+def round_scan_supported(mesh, data_axes) -> bool:
+    """Can ``lax.scan`` with xs wrap this mesh's partial-manual
+    shard_map steps — the fused round-program runtime (DESIGN.md §7)?
+
+    Modern jax: always.  0.4.x: only when every non-data (auto /
+    tensor-parallel) axis has size 1 — the legacy SPMD partitioner
+    CHECK-crashes partitioning scan-with-xs across a >1 auto axis of a
+    partial-manual program (the same limitation that skips the TP>1
+    dry-run compile; see ROADMAP).  Callers fall back to the per-step
+    path when this is False.
+    """
+    if MODERN:
+        return True
+    daxes = set(data_axes)
+    return all(mesh.shape[a] == 1 for a in mesh.axis_names
+               if a not in daxes)
+
+
 def sharding_constraints_usable() -> bool:
     """Can with_sharding_constraint be emitted *here*?  Modern jax: always.
     0.4.x: not while tracing inside a shard_map/pmap body — a constraint

@@ -101,6 +101,44 @@ def make_step(
     return step_fn
 
 
+def make_superstep(
+    grad_fn: Callable,
+    inner_opt: GradientTransform,
+    operator,
+    lr_schedule: Callable,
+    R: int,
+    *,
+    dispatch: Optional[DispatchConfig] = None,
+    downlink=None,
+    leaf_ledger: bool = False,
+):
+    """Round program for Algorithm 2 (DESIGN.md §7): rounds close at
+    every step where *any* worker syncs, so the scanned local phase
+    covers the strictly-uncommunicated steps and the tail carries the
+    per-worker sync row.  Signature ``(state, batch_block, tail_flags,
+    key) -> (state, losses[L], key)``; bit-for-bit the per-step
+    trajectories.  Drive with :func:`run_rounds`."""
+    engine_super = engine.make_superstep(
+        grad_fn, inner_opt, operator, lr_schedule, R,
+        dispatch=dispatch, global_rounds=False, downlink=downlink,
+        leaf_ledger=leaf_ledger,
+    )
+
+    def superstep(state: AsyncQsparseState, batch_block, tail_flags, key):
+        new, losses, key = engine_super(
+            engine.EngineState(*state), batch_block, tail_flags, key)
+        return AsyncQsparseState(*new), losses, key
+
+    return superstep
+
+
 def run(state, step_fn, batches, sync_mask, key, jit: bool = True):
     """sync_mask: bool[T, R] from schedule.async_schedule."""
     return engine.run(state, step_fn, batches, sync_mask, key, jit=jit)
+
+
+def run_rounds(state, superstep, batches, sync_mask, key, jit: bool = True):
+    """Round-program driver: sync_mask bool[T, R] is segmented into
+    rounds at the any-worker-syncs steps (core/rounds.py)."""
+    return engine.run_rounds(state, superstep, batches, sync_mask, key,
+                             jit=jit)

@@ -45,8 +45,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.compat import (MODERN, axis_size, shard_map,
-                          sharding_constraints_usable)
+from repro.compat import (MODERN, axis_size, round_scan_supported,
+                          shard_map, sharding_constraints_usable)
 from repro.core import bits as bitlib
 from repro.core import channel as chn
 from repro.core.operators import (
@@ -1073,6 +1073,92 @@ def make_dist_steps(
         )
 
     return init_fn, local_step, sync_step
+
+
+_ROUND_FALLBACK_WARNED = set()
+
+
+def make_dist_round(
+    grad_fn: Callable,
+    inner_opt: GradientTransform,
+    compressor: ShardCompressor,
+    lr_schedule: Callable,
+    mesh,
+    data_axes: Sequence[str] = ("data",),
+    param_specs=None,
+    zero1: bool = False,
+    aggregate: str = "dense_psum",
+    downlink: Optional[ShardCompressor] = None,
+):
+    """Round-program runtime for the mesh engine (DESIGN.md §7).
+
+    Returns ``(init_fn, round_fn, fused)``.  ``round_fn(state,
+    batch_block, key) -> (state, losses[L], key)`` executes one sync
+    round — L−1 local steps then the sync step at the tail, where L is
+    the block's leading dim (the host schedule guarantees the tail is
+    the round's sync step; use L=1 blocks for back-to-back syncs).
+
+    With ``fused`` (modern jax, or a legacy mesh whose tensor-parallel
+    axes are all size 1 — ``compat.round_scan_supported``) the whole
+    round is ONE donated jitted program: ``lax.scan`` over the
+    shard_mapped local step with the batch block as xs, the shard_mapped
+    sync step once at the tail, per-step losses accumulated on device
+    and the PRNG key split in-program with the host loop's sequence —
+    bit-for-bit the per-step trajectories.  On 0.4.x TP>1 meshes the
+    legacy SPMD partitioner cannot partition scan-with-xs around the
+    partial-manual steps (ROADMAP known issue), so ``round_fn``
+    degrades to the per-step host composition (identical math and key
+    stream, only dispatch overhead differs) with a one-time warning.
+    """
+    init_fn, local_step, sync_step = make_dist_steps(
+        grad_fn, inner_opt, compressor, lr_schedule, mesh, data_axes,
+        param_specs, zero1=zero1, aggregate=aggregate, downlink=downlink)
+    fused = round_scan_supported(mesh, data_axes)
+
+    if fused:
+        def round_program(state, batch_block, key):
+            def body(carry, batch):
+                state, key = carry
+                key, sub = jax.random.split(key)
+                state, loss = local_step(state, batch, sub)
+                return (state, key), loss
+
+            head = jax.tree_util.tree_map(lambda x: x[:-1], batch_block)
+            tail = jax.tree_util.tree_map(lambda x: x[-1], batch_block)
+            (state, key), head_losses = jax.lax.scan(
+                body, (state, key), head)
+            key, sub = jax.random.split(key)
+            state, tail_loss = sync_step(state, tail, sub)
+            return (state, jnp.concatenate([head_losses, tail_loss[None]]),
+                    key)
+
+        from repro.core.engine import donated_jit
+        return init_fn, donated_jit(round_program), True
+
+    if "round" not in _ROUND_FALLBACK_WARNED:
+        warnings.warn(
+            "the fused round program (lax.scan over the shard_mapped "
+            "local step) cannot be partitioned on a 0.4.x jax mesh with "
+            "a >1 tensor-parallel axis; falling back to per-step "
+            "dispatch — identical trajectories, only host overhead "
+            "differs. Use a TP=1 mesh or a modern jax for the fused "
+            "path.", stacklevel=2)
+        _ROUND_FALLBACK_WARNED.add("round")
+    from repro.core.engine import donated_jit
+    ls = donated_jit(local_step)
+    ss = donated_jit(sync_step)
+
+    def round_fallback(state, batch_block, key):
+        L = jax.tree_util.tree_leaves(batch_block)[0].shape[0]
+        losses = []
+        for i in range(L):
+            batch = jax.tree_util.tree_map(lambda x, i=i: x[i], batch_block)
+            key, sub = jax.random.split(key)
+            state, loss = (ss if i == L - 1 else ls)(state, batch, sub)
+            losses.append(loss)
+        return state, jnp.stack(losses), key
+
+    return init_fn, round_fallback, False
 
 
 def _zero1_axis(shape, spec, W: int):

@@ -54,15 +54,18 @@ drives it directly with a [T, R] mask.
 
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import channel as chn
 from repro.core.operators import CompressionOp
 from repro.kernels import dispatch as dsp
 from repro.optim.transforms import GradientTransform, apply_updates
+
 
 
 class EngineState(NamedTuple):
@@ -116,8 +119,11 @@ def init(params, inner_opt: GradientTransform, R: int,
     down = chn.as_channel(downlink, "downlink")
     G = len(leaf_group_names(params)) if leaf_ledger else 0
     return EngineState(
-        master=params,
-        master_view=local,
+        # own copies: the state is donated by engine.run/run_rounds, so
+        # master may not alias the caller's params and master_view may
+        # not alias local (one buffer cannot fill two donated slots)
+        master=jax.tree_util.tree_map(jnp.copy, params),
+        master_view=jax.tree_util.tree_map(jnp.copy, local),
         local=local,
         memory=jax.tree_util.tree_map(jnp.zeros_like, local),
         inner=jax.vmap(inner_opt.init)(local),
@@ -131,6 +137,24 @@ def init(params, inner_opt: GradientTransform, R: int,
         leaf_bits_down=(jnp.zeros((G,), jnp.float32) if leaf_ledger
                         else None),
     )
+
+
+def _make_local_phase(grad_fn: Callable, inner_opt: GradientTransform,
+                      lr_schedule: Callable):
+    """The per-step local phase (Algorithm 1/2 lines 5-7), shared by the
+    per-step ``make_step`` and the scanned ``make_superstep``."""
+
+    def local_phase(state: EngineState, batch):
+        lr = lr_schedule(state.step)
+
+        def one(params, inner, data):
+            loss, grads = grad_fn(params, data)
+            updates, inner = inner_opt.update(grads, inner, params, lr)
+            return apply_updates(params, updates), inner, loss
+
+        return jax.vmap(one)(state.local, state.inner, batch)
+
+    return local_phase
 
 
 def make_step(
@@ -176,15 +200,7 @@ def make_step(
     down_ch = chn.as_channel(downlink, "downlink", dispatch)
     compressed_down = not down_ch.is_identity()
 
-    def local_phase(state: EngineState, batch):
-        lr = lr_schedule(state.step)
-
-        def one(params, inner, data):
-            loss, grads = grad_fn(params, data)
-            updates, inner = inner_opt.update(grads, inner, params, lr)
-            return apply_updates(params, updates), inner, loss
-
-        return jax.vmap(one)(state.local, state.inner, batch)
+    local_phase = _make_local_phase(grad_fn, inner_opt, lr_schedule)
 
     def sync_phase(state: EngineState, half, inner, sync_mask, key):
         """Masked compress-and-aggregate (Algorithm 1/2 lines 8-20)."""
@@ -376,6 +392,135 @@ def make_step(
     return step_fn
 
 
+def make_superstep(
+    grad_fn: Callable,               # (params, batch) -> (loss, grads)
+    inner_opt: GradientTransform,
+    operator: CompressionOp | Any,
+    lr_schedule: Callable,
+    R: int,
+    *,
+    dispatch: Optional[dsp.DispatchConfig] = None,
+    global_rounds: bool = False,
+    downlink=None,
+    leaf_ledger: bool = False,
+):
+    """Build the round program (DESIGN.md §7): one compiled function per
+    sync round — ``lax.scan`` over the local phase with the round's
+    batch block as xs, the sync phase once at the tail.
+
+    The built superstep takes ``(state, batch_block, tail_mask, key)``
+    where ``batch_block`` stacks the round's L per-step batches on a new
+    leading axis ([L, R, ...] leaves) and ``tail_mask`` is the tail
+    step's sync row (bool[R]; a scalar broadcasts; all-False for a
+    trailing partial round — the sync phase is then skipped by the same
+    ``lax.cond`` the per-step path uses).  It returns
+    ``(new_state, losses, key)`` with ``losses`` the [L] per-step mean
+    losses (one device→host fetch per round) and ``key`` the advanced
+    PRNG key.
+
+    Bit-for-bit contract: the key is split *inside* the program with
+    exactly the per-step host loop's sequence (one split per step, the
+    subkey consumed only by the sync phase), and the scanned local body
+    is the no-sync branch of the per-step ``lax.cond`` verbatim — so
+    superstep trajectories equal per-step trajectories on every state
+    leaf and every ledger, for any schedule.  Jit with the state
+    donated (``donate_argnums=0``) to update the EngineState buffers in
+    place; :func:`run_rounds` does both.
+    """
+    step_fn = make_step(
+        grad_fn, inner_opt, operator, lr_schedule, R, dispatch=dispatch,
+        global_rounds=global_rounds, downlink=downlink,
+        leaf_ledger=leaf_ledger)
+    local_phase = _make_local_phase(grad_fn, inner_opt, lr_schedule)
+
+    def superstep(state: EngineState, batch_block, tail_mask, key):
+        if state.bits_down is None:  # states minted before the ledger split
+            state = state._replace(bits_down=jnp.zeros((), jnp.float32))
+
+        def body(carry, batch):
+            state, key = carry
+            # same stream as the host loop: split per step, subkey
+            # unused on pure-local steps (the sync phase is the only
+            # consumer), carried key advances identically
+            key, _sub = jax.random.split(key)
+            half, inner, losses = local_phase(state, batch)
+            state = state._replace(local=half, inner=inner,
+                                   step=state.step + 1)
+            return (state, key), jnp.mean(losses)
+
+        head = jax.tree_util.tree_map(lambda x: x[:-1], batch_block)
+        tail = jax.tree_util.tree_map(lambda x: x[-1], batch_block)
+        (state, key), head_losses = jax.lax.scan(body, (state, key), head)
+        key, sub = jax.random.split(key)
+        state, tail_loss = step_fn(state, tail, tail_mask, sub)
+        return state, jnp.concatenate([head_losses, tail_loss[None]]), key
+
+    return superstep
+
+
+def donated_jit(fn):
+    """``jax.jit`` with the first argument (the state) donated.
+
+    On backends without buffer aliasing, donation degrades to copies
+    and jax warns per executable; the suppression here is scoped to
+    *these* calls (not a process-global filter), so unrelated donated
+    jits elsewhere keep their diagnostic.  The raw jitted function is
+    exposed as ``.jitted``.
+    """
+    jfn = jax.jit(fn, donate_argnums=(0,))
+    if _donation_supported():
+        try:
+            jfn.jitted = jfn  # uniform surface with the filtered wrapper
+            return jfn
+        except AttributeError:
+            pass  # non-writable jit object: fall through to the wrapper
+
+    def call(*args, **kwargs):
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            return jfn(*args, **kwargs)
+
+    call.jitted = jfn
+    return call
+
+
+_DONATION_OK: Optional[bool] = None
+
+
+def _donation_supported() -> bool:
+    """Does this backend alias donated buffers (no per-compile 'not
+    usable' warning)?  Probed once per process with a scalar jit, so
+    the steady-state donated dispatch path carries no warnings-context
+    overhead when — as on TPU and current CPU jaxlibs — donation
+    simply works."""
+    global _DONATION_OK
+    if _DONATION_OK is None:
+        with warnings.catch_warnings(record=True) as wlog:
+            warnings.simplefilter("always")
+            jax.jit(lambda x: x + 1, donate_argnums=(0,))(
+                jnp.zeros(())).block_until_ready()
+        _DONATION_OK = not any(
+            "donated buffers were not usable" in str(w.message)
+            for w in wlog)
+    return _DONATION_OK
+
+
+def _donated(fn, attr: str = "_donated_jit"):
+    """One :func:`donated_jit` per step function, cached on the
+    function itself so repeated ``run``/``run_rounds`` calls over the
+    same step reuse one executable instead of re-tracing (and
+    re-allocating) every call."""
+    cached = getattr(fn, attr, None)
+    if cached is None:
+        cached = donated_jit(fn)
+        try:
+            setattr(fn, attr, cached)
+        except AttributeError:  # non-writable callables: still jitted
+            pass
+    return cached
+
+
 def run(
     state: EngineState,
     step_fn,
@@ -384,14 +529,74 @@ def run(
     key,
     jit: bool = True,
 ) -> tuple[EngineState, list[float]]:
-    """Drive T steps (host loop; step_fn jitted once)."""
-    fn = jax.jit(step_fn) if jit else step_fn
+    """Drive T steps (per-step host loop).
+
+    The step is jitted once per ``step_fn`` with the EngineState
+    donated — buffers update in place across steps on backends with
+    aliasing — and per-step losses stay on device until the loop ends
+    (one deferred fetch, not T synchronizing transfers).  ``jit=False``
+    runs the identical loop and loss accounting eagerly.  The state
+    argument is consumed: don't reuse the passed-in buffers afterwards.
+    """
+    fn = _donated(step_fn) if jit else step_fn
     losses = []
     for t, batch in enumerate(batches):
         key, sub = jax.random.split(key)
         state, loss = fn(state, batch, jnp.asarray(sync_mask[t]), sub)
-        losses.append(float(loss))
-    return state, losses
+        losses.append(loss)
+    return state, [float(l) for l in losses]
+
+
+def stack_block(step_batches):
+    """Stack a round's per-step batches into one [L, ...] block."""
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *step_batches)
+
+
+def run_rounds(
+    state: EngineState,
+    superstep,                    # from make_superstep
+    batches,                      # iterable of [R, ...] batches
+    sync_mask,                    # bool[T] (all-agree) or bool[T, R]
+    key,
+    jit: bool = True,
+) -> tuple[EngineState, list[float]]:
+    """Drive a whole schedule as compiled round programs (DESIGN.md §7).
+
+    Segments ``sync_mask`` into round plans (``core/rounds.py``), stacks
+    each round's batches into one block, and runs each round as a single
+    donated program.  Rounds of equal length share one executable; the
+    per-step losses come back as one array per round and are fetched
+    once at the end, and block assembly for round i+1 overlaps round i's
+    device execution (async dispatch = free host-side prefetch).
+    Trajectories are bit-for-bit the per-step path's (see
+    :func:`make_superstep`).  The state argument is consumed.
+    """
+    from repro.core import rounds as rnd
+    plans = rnd.compile_rounds(sync_mask)
+    fn = _donated(superstep) if jit else superstep
+    losses = []
+    it = iter(batches)
+    for plan in plans:
+        steps = []
+        for _ in range(plan.length):
+            try:
+                steps.append(next(it))
+            except StopIteration:
+                break
+        if not steps:
+            break
+        # a truncated block (batch stream shorter than the schedule,
+        # matching run()'s graceful stop) never reaches the plan's tail
+        # step — the last step it does reach is mid-round, i.e. no-sync
+        tail = (plan.mask if len(steps) == plan.length
+                else np.zeros_like(plan.mask))
+        state, ls, key = fn(state, stack_block(steps), jnp.asarray(tail),
+                            key)
+        losses.append(ls)
+        if len(steps) < plan.length:
+            break
+    return state, [float(x) for ls in losses for x in np.asarray(ls)]
 
 
 # ---------------------------------------------------------------------------

@@ -143,6 +143,41 @@ def make_step(
     return step_fn
 
 
+def make_superstep(
+    grad_fn: Callable,
+    inner_opt: GradientTransform,
+    operator: CompressionOp | Any,
+    lr_schedule: Callable,
+    R: int,
+    *,
+    dispatch: Optional[DispatchConfig] = None,
+    downlink=None,
+    leaf_ledger: bool = False,
+):
+    """Round program for Algorithm 1 (DESIGN.md §7): one compiled
+    function per sync round — ``lax.scan`` over the local steps with
+    the batch block as xs, the sync phase once at the tail.  Signature
+    ``(state, batch_block, tail_sync, key) -> (state, losses[L], key)``
+    with ``tail_sync`` the scalar "is t+1 in I_T" of the round's last
+    step.  Bit-for-bit the per-step trajectories (see
+    ``engine.make_superstep``); drive with :func:`run_rounds`."""
+    engine_super = engine.make_superstep(
+        grad_fn, inner_opt, operator, lr_schedule, R,
+        dispatch=dispatch, global_rounds=True, downlink=downlink,
+        leaf_ledger=leaf_ledger,
+    )
+    keep_view = not chn.as_channel(downlink, "downlink").is_identity()
+
+    def superstep(state: QsparseState, batch_block, tail_sync, key):
+        mask = jnp.broadcast_to(jnp.asarray(tail_sync, bool).reshape(-1),
+                                (R,))
+        new, losses, key = engine_super(_to_engine(state, R), batch_block,
+                                        mask, key)
+        return _from_engine(new, keep_view), losses, key
+
+    return superstep
+
+
 def run(
     state: QsparseState,
     step_fn,
@@ -151,8 +186,21 @@ def run(
     key,
     jit: bool = True,
 ) -> tuple[QsparseState, list[float]]:
-    """Drive T steps (host loop; step_fn jitted once)."""
+    """Drive T steps (host loop; step_fn jitted once, state donated)."""
     return engine.run(state, step_fn, batches, sync_mask, key, jit=jit)
+
+
+def run_rounds(
+    state: QsparseState,
+    superstep,                    # from make_superstep
+    batches,
+    sync_mask,                    # bool[T]
+    key,
+    jit: bool = True,
+) -> tuple[QsparseState, list[float]]:
+    """Drive the schedule as compiled round programs (DESIGN.md §7)."""
+    return engine.run_rounds(state, superstep, batches, sync_mask, key,
+                             jit=jit)
 
 
 # ---------------------------------------------------------------------------

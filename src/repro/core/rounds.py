@@ -1,0 +1,142 @@
+"""Schedule compiler for the round-program runtime (DESIGN.md §7).
+
+Local computation is the headline of Qsparse-local-SGD: between
+error-compensated syncs every worker takes H uncommunicated steps, yet
+a per-step host loop pays one dispatch (plus a loss transfer) for each
+of them — the cheapest phase of the algorithm carries the most host
+overhead.  The round runtime inverts that: a *round* is a maximal run
+of steps none of which syncs, closed by the first step where any
+worker's sync mask fires (or by the end of the schedule), and each
+round executes as ONE compiled program — ``lax.scan`` over the local
+phase with the batch block as xs, the sync phase once at the tail
+(``engine.make_superstep``).
+
+This module is the pure-host half: it segments any sync schedule —
+shared ``[T]`` masks (Algorithm 1), per-worker ``[T, R]`` masks
+(Algorithm 2), staggered round-robin, arbitrary mixtures — into
+:class:`RoundPlan`\\ s.  The segmentation is exactly invertible
+(:func:`expand_rounds`), which the property tests pin: concatenating
+the plans reproduces the original mask bit for bit, including trailing
+partial rounds that never sync.
+
+Plan format
+-----------
+``RoundPlan(start, length, mask)``:
+
+* ``start``  — 0-based global step index of the round's first step;
+* ``length`` — number of steps in the round (≥ 1).  Steps
+  ``start .. start+length-2`` are pure-local (their mask rows are all
+  False by construction); step ``start+length-1`` is the tail;
+* ``mask``   — the tail step's sync row, shape ``[R]`` (or the scalar
+  the caller's ``[T]`` mask carried).  All-False for a trailing
+  partial round, in which case the tail is a pure-local step too and
+  the compiled program's ``lax.cond`` skips the sync phase — no
+  separate compilation.
+
+Rounds of equal ``length`` share one XLA executable (the tail mask is
+data, not structure), so a fixed-H schedule compiles at most twice
+(H and the trailing partial length) and a random async schedule at
+most ``max gap`` times.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+
+class RoundPlan(NamedTuple):
+    start: int          # global step index of the round's first step
+    length: int         # steps in the round (head locals + tail)
+    mask: np.ndarray    # tail-step sync row, bool[R] (or scalar bool)
+
+    @property
+    def syncs(self) -> bool:
+        """Does any worker sync at this round's tail step?"""
+        return bool(np.any(self.mask))
+
+    @property
+    def stop(self) -> int:
+        """One past the round's last global step index."""
+        return self.start + self.length
+
+
+def _as_rows(mask) -> tuple[np.ndarray, bool]:
+    """Normalize a [T] or [T, R] mask to [T, R'] rows + whether the
+    caller's rows were scalar (shared/Algorithm-1 form)."""
+    m = np.asarray(mask, dtype=bool)
+    if m.ndim == 1:
+        return m[:, None], True
+    if m.ndim != 2:
+        raise ValueError(
+            f"sync mask must be [T] or [T, R], got shape {m.shape}")
+    return m, False
+
+
+def compile_rounds(mask) -> list[RoundPlan]:
+    """Segment a sync schedule into round plans.
+
+    ``mask`` is bool ``[T]`` (shared I_T) or ``[T, R]`` (per-worker
+    I_T^{(r)}).  A round closes at every step where *any* worker syncs
+    — the engine's sync phase runs whenever ``any(s)`` — so by
+    construction every non-tail row of every plan is all-False.  Steps
+    after the schedule's last sync form one trailing partial round
+    whose tail mask is all-False.
+    """
+    rows, scalar = _as_rows(mask)
+    T = rows.shape[0]
+    plans: list[RoundPlan] = []
+    start = 0
+    any_sync = rows.any(axis=1)
+    for t in range(T):
+        if any_sync[t]:
+            tail = rows[t, 0] if scalar else rows[t].copy()
+            plans.append(RoundPlan(start, t - start + 1, np.asarray(tail)))
+            start = t + 1
+    if start < T:  # trailing partial round: never syncs
+        tail = (np.zeros((), bool) if scalar
+                else np.zeros(rows.shape[1], bool))
+        plans.append(RoundPlan(start, T - start, tail))
+    return plans
+
+
+def expand_rounds(plans: Sequence[RoundPlan], R: int | None = None
+                  ) -> np.ndarray:
+    """Inverse of :func:`compile_rounds`: rebuild the full [T] / [T, R]
+    mask the plans were compiled from (the property the tests pin).
+
+    ``R`` overrides the worker count when the plans carry scalar tail
+    masks but the caller wants the broadcast [T, R] form.
+    """
+    if not plans:
+        shape = (0,) if R is None else (0, R)
+        return np.zeros(shape, bool)
+    T = plans[-1].stop
+    tail0 = np.asarray(plans[0].mask)
+    if tail0.ndim == 0 and R is None:
+        out = np.zeros(T, bool)
+    else:
+        Rr = tail0.shape[0] if tail0.ndim else R
+        out = np.zeros((T, Rr), bool)
+    pos = 0
+    for p in plans:
+        if p.start != pos:
+            raise ValueError(
+                f"plans are not contiguous: expected start {pos}, "
+                f"got {p.start}")
+        if p.length < 1:
+            raise ValueError(f"round of length {p.length} at step {p.start}")
+        out[p.stop - 1] = np.asarray(p.mask)
+        pos = p.stop
+    return out
+
+
+def round_lengths(plans: Sequence[RoundPlan]) -> list[int]:
+    """Distinct round lengths, in first-appearance order — one XLA
+    compilation of the superstep per entry."""
+    seen: list[int] = []
+    for p in plans:
+        if p.length not in seen:
+            seen.append(p.length)
+    return seen

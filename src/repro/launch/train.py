@@ -27,7 +27,9 @@ import numpy as np
 from repro.compat import set_mesh
 from repro.configs import ARCHS, get_config, get_policy_preset
 from repro.core import policy as pol
-from repro.core.distributed import ShardCompressor, make_dist_steps
+from repro.core.distributed import (ShardCompressor, make_dist_round,
+                                    make_dist_steps)
+from repro.core.engine import stack_block
 from repro.data import LMTokenStream
 from repro.launch.mesh import data_axes, worker_count
 from repro.models import get_model
@@ -113,6 +115,14 @@ def main():
                     choices=["dense_psum", "sparse_allgather"],
                     help="sync aggregation: dense psum, or compact "
                          "(idx, val) allgather (the sparse wire format)")
+    ap.add_argument("--runtime", default="round",
+                    choices=["round", "step"],
+                    help="execution runtime (DESIGN.md §7): 'round' "
+                         "compiles each sync round (H local steps + "
+                         "sync) into one scanned, donated program; "
+                         "'step' keeps per-step dispatch.  Identical "
+                         "trajectories; 0.4.x TP>1 meshes auto-fall "
+                         "back to per-step with a warning")
     ap.add_argument("--downlink", default=None,
                     help="DEPRECATED: use --policy 'up >> down'.  "
                          "Registry operator name for the server→worker "
@@ -151,14 +161,22 @@ def main():
     if channel_spec.downlink is not None:
         downlink = ShardCompressor.from_spec(
             channel_spec.downlink, params, dispatch=args.dispatch)
-    init_fn, local_step, sync_step = make_dist_steps(
+    engine_args = (
         grad_fn, momentum_sgd(0.9),
         uplink if uplink is not None
         else ShardCompressor("none", dispatch=args.dispatch),
         warmup_piecewise(args.lr, 5, [int(args.steps * 0.8)]),
-        mesh, daxes, specs, zero1=args.zero1, aggregate=args.aggregate,
-        downlink=downlink,
+        mesh, daxes, specs,
     )
+    engine_kw = dict(zero1=args.zero1, aggregate=args.aggregate,
+                     downlink=downlink)
+    if args.runtime == "round":
+        init_fn, round_fn, fused = make_dist_round(*engine_args, **engine_kw)
+        print(f"runtime: round ({'fused' if fused else 'per-step fallback'})",
+              flush=True)
+    else:
+        init_fn, local_step, sync_step = make_dist_steps(*engine_args,
+                                                         **engine_kw)
     from jax.sharding import NamedSharding
     put_specs = jax.tree_util.tree_map(
         lambda leaf, sp: NamedSharding(
@@ -167,10 +185,24 @@ def main():
         is_leaf=lambda z: hasattr(z, "shape") and not isinstance(z, dict),
     )
     from repro.kernels.dispatch import LAUNCHES, reset_launches
+
+    def make_batch(batch, sub):
+        b = {"tokens": jnp.asarray(batch["tokens"])}
+        if cfg.modality:
+            b["prefix_embeds"] = 0.02 * jax.random.normal(
+                sub, (R, args.batch, cfg.n_frontend_tokens, cfg.d_model))
+        return b
+
+    def launch_note_once():
+        return " ".join(f"{k}={v}" for k, v in LAUNCHES.items() if v) or "none"
+
+    def log_step(t, kind, loss, up, down, note=""):
+        print(f"step {t + 1:4d} [{kind}] loss {loss:.4f} "
+              f"bits up {up:.3g} down {down:.3g}{note}", flush=True)
+
     with set_mesh(mesh):
         params = jax.device_put(params, put_specs)
         state = init_fn(params)
-        ls, ss = jax.jit(local_step), jax.jit(sync_step)
         stream = LMTokenStream(vocab=cfg.vocab, R=R, order=64, seed=0)
         key = jax.random.PRNGKey(1)
         t0 = time.time()
@@ -180,34 +212,64 @@ def main():
         # direction per sync round, regardless of leaf count
         reset_launches()
         launch_note = None
-        for t, batch in enumerate(
-                stream.batches(args.batch, args.seq, args.steps, seed=1)):
-            key, sub = jax.random.split(key)
-            b = {"tokens": jnp.asarray(batch["tokens"])}
-            if cfg.modality:
-                b["prefix_embeds"] = 0.02 * jax.random.normal(
-                    sub, (R, args.batch, cfg.n_frontend_tokens, cfg.d_model))
-            if (t + 1) % args.H == 0 or t == args.steps - 1:
-                state, loss = ss(state, b, sub)
-                kind = "sync "
+        if args.runtime == "round":
+            # round runtime (DESIGN.md §7): accumulate steps until the
+            # schedule's next sync, run the block as one program.  The
+            # round program splits the PRNG key in-program with the
+            # same per-step sequence this host mirror uses for batch
+            # construction, so trajectories match --runtime step.
+            pending, block_start, mirror = [], 0, key
+            for t, batch in enumerate(
+                    stream.batches(args.batch, args.seq, args.steps,
+                                   seed=1)):
+                mirror, sub = jax.random.split(mirror)
+                pending.append(make_batch(batch, sub))
+                if not ((t + 1) % args.H == 0 or t == args.steps - 1):
+                    continue
+                block = stack_block(pending)
+                prev_up, prev_down = float(state.bits), float(state.bits_down)
+                state, losses, key = round_fn(state, block, key)
+                mirror = key
                 if launch_note is None:
-                    launch_note = " ".join(
-                        f"{k}={v}" for k, v in LAUNCHES.items() if v) or "none"
-                note = f" launches/round [{launch_note}]"
-            else:
-                state, loss = ls(state, b, sub)
-                kind = "local"
-                note = ""
-            print(f"step {t + 1:4d} [{kind}] loss {float(loss):.4f} "
-                  f"bits up {float(state.bits):.3g} "
-                  f"down {float(state.bits_down):.3g}{note}", flush=True)
+                    launch_note = launch_note_once()
+                losses = np.asarray(losses)
+                for i in range(len(pending)):
+                    tail = i == len(pending) - 1
+                    last_loss = float(losses[i])
+                    log_step(
+                        block_start + i, "sync " if tail else "local",
+                        last_loss,
+                        float(state.bits) if tail else prev_up,
+                        float(state.bits_down) if tail else prev_down,
+                        f" launches/round [{launch_note}]" if tail else "")
+                pending, block_start = [], t + 1
+        else:
+            ls, ss = jax.jit(local_step), jax.jit(sync_step)
+            for t, batch in enumerate(
+                    stream.batches(args.batch, args.seq, args.steps,
+                                   seed=1)):
+                key, sub = jax.random.split(key)
+                b = make_batch(batch, sub)
+                if (t + 1) % args.H == 0 or t == args.steps - 1:
+                    state, loss = ss(state, b, sub)
+                    kind = "sync "
+                    if launch_note is None:
+                        launch_note = launch_note_once()
+                    note = f" launches/round [{launch_note}]"
+                else:
+                    state, loss = ls(state, b, sub)
+                    kind = "local"
+                    note = ""
+                last_loss = float(loss)
+                log_step(t, kind, last_loss, float(state.bits),
+                         float(state.bits_down), note)
         dt = time.time() - t0
     total = float(state.bits) + float(state.bits_down)
     print(f"\n{args.steps} steps in {dt:.1f}s ({args.steps / dt:.2f} it/s); "
           f"R={R} workers, {int(state.rounds)} sync rounds, "
           f"{float(state.bits):.3g} uplink + {float(state.bits_down):.3g} "
           f"downlink = {total:.3g} wire bits")
-    assert np.isfinite(float(loss))
+    assert np.isfinite(last_loss)
     if args.ckpt:
         # persist the policy spec so a resume reproduces the exact
         # per-leaf operators (and hence the bits trajectories)

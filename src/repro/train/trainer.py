@@ -8,9 +8,24 @@ dispatches to the Pallas kernels per ``RunConfig.dispatch``
 same-operator leaves megabuffer-packed into one kernel launch per
 family per sync round (``RunConfig.pack``, DESIGN.md §3.4).
 
+Two runtimes drive the schedule (``RunConfig.runtime``, DESIGN.md §7):
+
+* ``"round"`` (default) — the schedule is segmented into round plans
+  (``core/rounds.py``) and each round (H local steps + sync) runs as
+  ONE compiled, donated program (``engine.make_superstep``): per-step
+  losses come back as one array per round, ledger scalars are fetched
+  once per round, and the next round's batch block is assembled while
+  the device executes the current one.  Trajectories — states and
+  every bits ledger — are bit-for-bit the per-step path's.
+* ``"step"``  — the historical per-step host loop (one jitted, donated
+  step per iteration).
+
 Handles: sync/async schedules, LR schedules, the bits ledger (the
 paper's evaluation axis), periodic eval, target-loss early stats (bits
-to reach target), and checkpointing.
+to reach target), and checkpointing — with identical per-step History
+semantics under both runtimes (mid-round log points read the ledger of
+the last completed round, which is exactly the per-step value, since
+bits/rounds/master only change at sync steps).
 """
 
 from __future__ import annotations
@@ -23,7 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine, policy as pol, schedule as sched
+from repro.core import engine, policy as pol, rounds as rnd, \
+    schedule as sched
 from repro.core.operators import CompressionOp
 from repro.kernels.dispatch import DispatchConfig
 from repro.optim.transforms import GradientTransform
@@ -44,6 +60,11 @@ class RunConfig:
     target_loss: Optional[float] = None
     dispatch: str = "auto"  # "auto" | "kernel" | "reference"
     pack: bool = True       # megabuffer-pack same-operator leaves per round
+    # execution runtime (DESIGN.md §7): "round" compiles each sync
+    # round (H local steps + sync) into one scanned, donated program;
+    # "step" keeps the per-step host loop.  Bit-for-bit identical
+    # trajectories and History either way.
+    runtime: str = "round"  # "round" | "step"
     # THE compression-configuration surface (DESIGN.md §6): a
     # ``core.policy`` spec — PolicySpec / ChannelSpec / OpSpec, the DSL
     # string form ("topk:k=0.01", "norm->identity;.*->topk:k=0.01",
@@ -124,6 +145,11 @@ class History:
     leaf_groups: list = dataclasses.field(default_factory=list)
     leaf_bits: list = dataclasses.field(default_factory=list)
     leaf_bits_down: list = dataclasses.field(default_factory=list)
+    # round runtime (DESIGN.md §7): one (start_step, length, n_synced)
+    # tuple per executed round program.  The per-round loss blocks
+    # flatten into the per-step ``loss``/``steps`` view above, so the
+    # per-step History is identical under both runtimes.
+    round_blocks: list = dataclasses.field(default_factory=list)
 
     def summary(self) -> dict:
         out = {
@@ -166,7 +192,13 @@ def train(
     """Runs Algorithm 1 (or Algorithm 2 when run.asynchronous) via the
     unified engine.  Compression comes from ``run.policy`` (a
     ``core.policy`` spec resolved per leaf against ``params``) or the
-    legacy ``operator`` argument — identical math either way."""
+    legacy ``operator`` argument; the schedule executes as round
+    programs (``run.runtime == "round"``, the default) or the per-step
+    host loop — identical math and History either way."""
+    if run.runtime not in ("round", "step"):
+        raise ValueError(
+            f"RunConfig.runtime must be 'round' or 'step', "
+            f"got {run.runtime!r}")
     key = jax.random.PRNGKey(run.seed)
     hist = History()
     t0 = time.time()
@@ -175,23 +207,31 @@ def train(
         operator, run, params)
     state = engine.init(params, inner_opt, run.R, downlink=downlink,
                         leaf_ledger=run.leaf_ledger)
-    step_fn = jax.jit(engine.make_step(
-        grad_fn, inner_opt, operator, lr_schedule, run.R,
-        dispatch=dispatch, global_rounds=not run.asynchronous,
-        downlink=downlink, leaf_ledger=run.leaf_ledger))
     mask = make_mask(run)
     ckpt_policy = None if channel_spec is None else channel_spec.to_dict()
     if run.leaf_ledger:
         hist.leaf_groups = list(engine.leaf_group_names(params))
 
+    # ---- per-step bookkeeping, shared by both runtimes --------------
+    # ``led`` carries the ledger scalars the step's state would hold;
+    # in the round runtime mid-round steps read the previous round's
+    # snapshot (bits/rounds only change at sync steps, so the values
+    # are exactly the per-step path's).
     recent = []
-    for t, batch in enumerate(batches):
-        if t >= run.total_steps:
-            break
-        key, sub = jax.random.split(key)
-        batch = jax.tree_util.tree_map(jnp.asarray, batch)
-        state, loss = step_fn(state, batch, jnp.asarray(mask[t]), sub)
-        lossf = float(loss)
+
+    def snapshot_ledger(st) -> dict:
+        led = {
+            "bits": float(st.bits),
+            "bits_down": float(st.bits_down),
+            "rounds": int(st.rounds),
+        }
+        if run.leaf_ledger:
+            led["leaf_bits"] = [float(b) for b in np.asarray(st.leaf_bits)]
+            led["leaf_bits_down"] = [
+                float(b) for b in np.asarray(st.leaf_bits_down)]
+        return led
+
+    def bookkeep_loss(t: int, lossf: float, led: dict):
         recent.append(lossf)
         if len(recent) > smooth:
             recent.pop(0)
@@ -199,28 +239,112 @@ def train(
         if (t + 1) % run.log_every == 0 or t == run.total_steps - 1:
             hist.steps.append(t + 1)
             hist.loss.append(sm)
-            hist.bits.append(float(state.bits))
-            hist.bits_down.append(float(state.bits_down))
-            hist.rounds.append(int(state.rounds))
+            hist.bits.append(led["bits"])
+            hist.bits_down.append(led["bits_down"])
+            hist.rounds.append(led["rounds"])
             if run.leaf_ledger:
-                hist.leaf_bits.append(
-                    [float(b) for b in np.asarray(state.leaf_bits)])
-                hist.leaf_bits_down.append(
-                    [float(b) for b in np.asarray(state.leaf_bits_down)])
+                hist.leaf_bits.append(list(led["leaf_bits"]))
+                hist.leaf_bits_down.append(list(led["leaf_bits_down"]))
         if (run.target_loss is not None and hist.bits_to_target is None
                 and sm <= run.target_loss and len(recent) == smooth):
-            hist.bits_to_target = float(state.bits)
+            hist.bits_to_target = led["bits"]
             hist.steps_to_target = t + 1
+
+    def maybe_eval_ckpt(t: int, master):
+        """Eval/checkpoint side effects of step t (reads ``master``,
+        which in the round runtime must be the master the per-step path
+        would hold after step t — mid-round that is the previous
+        round's, materialized *before* the round program donates it)."""
         if eval_fn and run.eval_every and (t + 1) % run.eval_every == 0:
             hist.eval_steps.append(t + 1)
             hist.eval_metrics.append(
-                {k: float(v) for k, v in eval_fn(state.master).items()}
-            )
+                {k: float(v) for k, v in eval_fn(master).items()})
         if run.ckpt_dir and run.ckpt_every and (t + 1) % run.ckpt_every == 0:
-            ckpt.save(f"{run.ckpt_dir}/step_{t + 1}", state.master,
+            ckpt.save(f"{run.ckpt_dir}/step_{t + 1}", master,
                       step=t + 1, policy=ckpt_policy)
+
+    if run.runtime == "round":
+        superstep = engine.make_superstep(
+            grad_fn, inner_opt, operator, lr_schedule, run.R,
+            dispatch=dispatch, global_rounds=not run.asynchronous,
+            downlink=downlink, leaf_ledger=run.leaf_ledger)
+        state, key = _drive_rounds(
+            state, superstep, batches, mask, key, run, hist,
+            snapshot_ledger, bookkeep_loss, maybe_eval_ckpt)
+    else:
+        step_fn = engine.donated_jit(engine.make_step(
+            grad_fn, inner_opt, operator, lr_schedule, run.R,
+            dispatch=dispatch, global_rounds=not run.asynchronous,
+            downlink=downlink, leaf_ledger=run.leaf_ledger))
+        for t, batch in enumerate(batches):
+            if t >= run.total_steps:
+                break
+            key, sub = jax.random.split(key)
+            batch = jax.tree_util.tree_map(jnp.asarray, batch)
+            state, loss = step_fn(state, batch, jnp.asarray(mask[t]), sub)
+            bookkeep_loss(t, float(loss), snapshot_ledger(state))
+            maybe_eval_ckpt(t, state.master)
     hist.wall_time = time.time() - t0
     if run.ckpt_dir:
         ckpt.save(f"{run.ckpt_dir}/final", state.master,
                   step=run.total_steps, policy=ckpt_policy)
     return state, hist
+
+
+def _drive_rounds(state, superstep, batches, mask, key, run: RunConfig,
+                  hist: History, snapshot_ledger, bookkeep_loss,
+                  maybe_eval_ckpt):
+    """The round-runtime drive loop (DESIGN.md §7): one donated program
+    per round, next block assembled while the device runs the current
+    round, ledger scalars + the [L] loss array fetched once per round.
+
+    Donation discipline: every read of a state (ledger snapshot, eval,
+    checkpoint) happens before the *next* round program consumes its
+    buffers — mid-round eval/ckpt points (whose per-step semantics
+    freeze the previous sync's master) run before the round is
+    dispatched, tail points after.
+    """
+    plans = rnd.compile_rounds(mask[:run.total_steps])
+    fn = engine.donated_jit(superstep)
+    it = iter(batches)
+
+    def take(n: int) -> list:
+        out = []
+        for _ in range(n):
+            try:
+                out.append(next(it))
+            except StopIteration:
+                break
+        return out
+
+    led = snapshot_ledger(state)
+    block_steps = take(plans[0].length) if plans else []
+    for pi, plan in enumerate(plans):
+        if not block_steps:
+            break  # batch stream exhausted mid-schedule
+        L = len(block_steps)
+        # a truncated block never reaches the plan's tail step, whose
+        # mask row is the only one that can sync — so its tail is the
+        # (all-False) mask row of the last step it does reach
+        tail_mask = (plan.mask if L == plan.length
+                     else np.zeros_like(plan.mask))
+        # mid-round eval/ckpt points read the pre-round master (it only
+        # changes at sync): run them before the program donates it
+        for i in range(L - 1):
+            maybe_eval_ckpt(plan.start + i, state.master)
+        block = engine.stack_block(block_steps)
+        state, losses_dev, key = fn(state, block,
+                                    jnp.asarray(tail_mask), key)
+        # prefetch: assemble the next round's batches while the device
+        # executes this round (dispatch above is async)
+        block_steps = (take(plans[pi + 1].length)
+                       if pi + 1 < len(plans) else [])
+        losses = np.asarray(losses_dev)   # one fetch per round
+        new_led = snapshot_ledger(state)
+        for i in range(L):
+            bookkeep_loss(plan.start + i, float(losses[i]),
+                          new_led if i == L - 1 else led)
+        maybe_eval_ckpt(plan.start + L - 1, state.master)
+        hist.round_blocks.append((plan.start, L, int(np.sum(tail_mask))))
+        led = new_led
+    return state, key

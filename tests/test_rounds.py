@@ -1,0 +1,333 @@
+"""Round-program runtime (DESIGN.md §7): schedule→round-plan
+segmentation properties, and superstep-vs-per-step bit-for-bit parity
+on states and every bits ledger across sync / async / downlink /
+heterogeneous-policy configurations — engine, wrappers, and trainer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (async_qsparse, engine, operators as ops,
+                        policy as pol, qsparse, rounds as rnd, schedule)
+from repro.optim import constant, sgd
+from repro.train.trainer import RunConfig, train
+
+R, D = 4, 48
+
+
+# ---------------------------------------------------------------------------
+# segmentation: concatenated plans reproduce the original mask exactly
+# ---------------------------------------------------------------------------
+
+
+def _check_plans(mask):
+    plans = rnd.compile_rounds(mask)
+    m = np.asarray(mask, bool)
+    # exact reconstruction (the runtime's correctness precondition)
+    np.testing.assert_array_equal(rnd.expand_rounds(plans), m)
+    # structural invariants: contiguity, ≥1-step rounds, all-local heads
+    pos = 0
+    rows = m if m.ndim == 2 else m[:, None]
+    for p in plans:
+        assert p.start == pos and p.length >= 1
+        assert not rows[p.start:p.stop - 1].any(), "head step syncs"
+        pos = p.stop
+    assert pos == m.shape[0]
+    # every sync row closes a round: plan count is #sync steps (+1 for a
+    # trailing partial round)
+    n_sync = int(rows.any(axis=1).sum())
+    trailing = rows.shape[0] > 0 and not rows[-1].any()
+    assert len(plans) == n_sync + int(trailing)
+    if trailing:
+        assert not plans[-1].syncs
+    return plans
+
+
+@settings(max_examples=40, deadline=None)
+@given(T=st.integers(1, 120), H=st.integers(1, 13))
+def test_plans_reproduce_fixed_schedule(T, H):
+    mask = schedule.fixed_schedule(T, H)
+    plans = _check_plans(mask)
+    # fixed schedules compile to at most two distinct round lengths
+    assert len(rnd.round_lengths(plans)) <= 2
+
+
+@settings(max_examples=40, deadline=None)
+@given(T=st.integers(1, 120), Rr=st.integers(1, 8), H=st.integers(1, 9),
+       seed=st.integers(0, 10_000))
+def test_plans_reproduce_async_schedule(T, Rr, H, seed):
+    _check_plans(schedule.async_schedule(T, Rr, H, seed=seed))
+
+
+@settings(max_examples=40, deadline=None)
+@given(T=st.integers(1, 80), Rr=st.integers(1, 6), H=st.integers(2, 8))
+def test_plans_reproduce_staggered_round_robin(T, Rr, H):
+    """Worker r syncs at steps t+1 ≡ r (mod H): every step syncs some
+    worker once R ≥ H, so rounds collapse to single steps."""
+    mask = np.zeros((T, Rr), bool)
+    for r in range(Rr):
+        for t in range(T):
+            if (t + 1) % H == r % H:
+                mask[t, r] = True
+    plans = _check_plans(mask)
+    if Rr >= H:
+        assert all(p.length == 1 for p in plans)
+
+
+@settings(max_examples=40, deadline=None)
+@given(T=st.integers(1, 64), Rr=st.integers(1, 5),
+       p=st.floats(0.0, 1.0), seed=st.integers(0, 999))
+def test_plans_reproduce_random_mask(T, Rr, p, seed):
+    """Arbitrary [T, R] masks — including all-False (one trailing
+    partial round) and dense ones — reconstruct exactly."""
+    rng = np.random.RandomState(seed)
+    _check_plans(rng.rand(T, Rr) < p)
+
+
+def test_trailing_partial_round():
+    mask = np.zeros(7, bool)
+    mask[2] = True  # last sync at step 3; steps 4-7 never sync
+    plans = _check_plans(mask)
+    assert [(p.start, p.length, p.syncs) for p in plans] == [
+        (0, 3, True), (3, 4, False)]
+
+
+def test_empty_and_shape_errors():
+    assert rnd.compile_rounds(np.zeros((0, 3), bool)) == []
+    assert rnd.expand_rounds([], R=3).shape == (0, 3)
+    with pytest.raises(ValueError):
+        rnd.compile_rounds(np.zeros((2, 3, 4), bool))
+
+
+# ---------------------------------------------------------------------------
+# superstep ≡ per-step, bit for bit (states + all ledgers)
+# ---------------------------------------------------------------------------
+
+
+def _problem(T, seed=2):
+    cs = jax.random.normal(jax.random.PRNGKey(1), (R, D))
+
+    def grad_fn(params, data):
+        c, noise = data
+        g = params["w"] - c + 0.01 * noise
+        return 0.5 * jnp.sum((params["w"] - c) ** 2), {"w": g}
+
+    k = jax.random.PRNGKey(seed)
+    bs = []
+    for _ in range(T):
+        k, s = jax.random.split(k)
+        bs.append((cs, jax.random.normal(s, (R, D))))
+    return grad_fn, bs
+
+
+def _assert_state_equal(s1, s2):
+    for f in s1._fields:
+        a, b = getattr(s1, f), getattr(s2, f)
+        if a is None:
+            assert b is None, f
+            continue
+        for x, y in zip(jax.tree_util.tree_leaves(a),
+                        jax.tree_util.tree_leaves(b)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=f)
+
+
+def _engine_parity(operator, mask, *, downlink=None, leaf_ledger=False,
+                   global_rounds=False, T=14):
+    grad_fn, bs = _problem(T)
+    params = {"w": jnp.zeros(D), "v": {"a": jnp.ones(D) * 0.1}}
+
+    def grad2(p, data):
+        loss, g = grad_fn({"w": p["w"]}, data)
+        return loss, {"w": g["w"], "v": {"a": p["v"]["a"] * 0.01}}
+
+    inner = sgd()
+    kw = dict(downlink=downlink, leaf_ledger=leaf_ledger)
+    s1 = engine.init(params, inner, R, **kw)
+    step = engine.make_step(grad2, inner, operator, constant(0.05), R,
+                            global_rounds=global_rounds, **kw)
+    s1, l1 = engine.run(s1, step, bs, mask, jax.random.PRNGKey(3))
+    s2 = engine.init(params, inner, R, **kw)
+    sstep = engine.make_superstep(grad2, inner, operator, constant(0.05), R,
+                                  global_rounds=global_rounds, **kw)
+    s2, l2 = engine.run_rounds(s2, sstep, bs, mask, jax.random.PRNGKey(3))
+    _assert_state_equal(s1, s2)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_superstep_parity_sync():
+    _engine_parity(ops.TopK(k=8), schedule.fixed_schedule(14, 4),
+                   global_rounds=True)
+
+
+def test_superstep_parity_async():
+    _engine_parity(ops.TopK(k=8), schedule.async_schedule(14, R, 5, seed=3))
+
+
+def test_superstep_parity_downlink():
+    _engine_parity(ops.TopK(k=8), schedule.async_schedule(14, R, 4, seed=1),
+                   downlink=ops.TopK(k=16))
+
+
+def test_superstep_parity_hetero_policy_leaf_ledger():
+    params = {"w": jnp.zeros(D), "v": {"a": jnp.ones(D) * 0.1}}
+    op_tree = pol.resolve("v->qsgd:s=15;.*->topk:k=8", params)
+    _engine_parity(op_tree, schedule.fixed_schedule(14, 4),
+                   leaf_ledger=True, global_rounds=True)
+
+
+def test_superstep_parity_trailing_partial():
+    mask = schedule.fixed_schedule(14, 4).copy()
+    mask[-1] = False  # steps 13-14 never sync: trailing partial round
+    mask[-2] = False
+    _engine_parity(ops.TopK(k=8), mask, global_rounds=True)
+
+
+def test_run_jit_false_same_accounting():
+    """jit=False exercises the identical loop and ledger accounting
+    (compiled-vs-eager float rounding aside — ledgers count survivors,
+    which exact-k selection pins)."""
+    grad_fn, bs = _problem(10)
+    params = {"w": jnp.zeros(D)}
+    inner = sgd()
+    mask = schedule.fixed_schedule(10, 3)
+    step = qsparse.make_step(grad_fn, inner, ops.TopK(k=8), constant(0.05),
+                             R)
+    s1 = qsparse.init(params, inner, R)
+    s1, l1 = qsparse.run(s1, step, bs, mask, jax.random.PRNGKey(3))
+    s2 = qsparse.init(params, inner, R)
+    s2, l2 = qsparse.run(s2, step, bs, mask, jax.random.PRNGKey(3),
+                         jit=False)
+    assert float(s1.bits) == float(s2.bits)
+    assert float(s1.bits_down) == float(s2.bits_down)
+    assert int(s1.rounds) == int(s2.rounds)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s1.master["w"]),
+                               np.asarray(s2.master["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_run_reuses_one_donated_executable():
+    """run()/run_rounds() jit each step/superstep ONCE (cached on the
+    function, state donated) — repeated drives reuse the executable."""
+    grad_fn, bs = _problem(6)
+    params = {"w": jnp.zeros(D)}
+    inner = sgd()
+    mask = schedule.fixed_schedule(6, 3)
+    step = qsparse.make_step(grad_fn, inner, ops.TopK(k=8), constant(0.05),
+                             R)
+    s, _ = qsparse.run(qsparse.init(params, inner, R), step, bs, mask,
+                       jax.random.PRNGKey(0))
+    jitted = step._donated_jit
+    s, _ = qsparse.run(qsparse.init(params, inner, R), step, bs, mask,
+                       jax.random.PRNGKey(0))
+    assert step._donated_jit is jitted
+    # one executable, not one per run()
+    assert jitted.jitted._cache_size() == 1
+
+
+def test_run_rounds_short_batch_stream():
+    """A batch iterable shorter than the schedule stops gracefully at
+    the same prefix run() executes — the truncated round's tail is a
+    mid-round (no-sync) step, exactly the per-step path's masks."""
+    grad_fn, bs = _problem(13)
+    params = {"w": jnp.zeros(D)}
+    inner = sgd()
+    mask = schedule.fixed_schedule(13, 4)
+    bs = bs[:6]  # last full step is t=5, mid-round (sync is at t=7)
+    step = qsparse.make_step(grad_fn, inner, ops.TopK(k=8), constant(0.05),
+                             R)
+    s1 = qsparse.init(params, inner, R)
+    s1, l1 = qsparse.run(s1, step, bs, mask, jax.random.PRNGKey(3))
+    sstep = qsparse.make_superstep(grad_fn, inner, ops.TopK(k=8),
+                                   constant(0.05), R)
+    s2 = qsparse.init(params, inner, R)
+    s2, l2 = qsparse.run_rounds(s2, sstep, bs, mask, jax.random.PRNGKey(3))
+    assert len(l1) == len(l2) == 6
+    _assert_state_equal(s1, s2)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+# ---------------------------------------------------------------------------
+# wrappers + trainer
+# ---------------------------------------------------------------------------
+
+
+def test_qsparse_superstep_parity():
+    grad_fn, bs = _problem(13)
+    params = {"w": jnp.zeros(D)}
+    inner = sgd()
+    mask = schedule.fixed_schedule(13, 4)
+    step = qsparse.make_step(grad_fn, inner, ops.TopK(k=8), constant(0.05),
+                             R)
+    s1 = qsparse.init(params, inner, R)
+    s1, l1 = qsparse.run(s1, step, bs, mask, jax.random.PRNGKey(3))
+    sstep = qsparse.make_superstep(grad_fn, inner, ops.TopK(k=8),
+                                   constant(0.05), R)
+    s2 = qsparse.init(params, inner, R)
+    s2, l2 = qsparse.run_rounds(s2, sstep, bs, mask, jax.random.PRNGKey(3))
+    _assert_state_equal(s1, s2)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_async_superstep_parity():
+    grad_fn, bs = _problem(13)
+    params = {"w": jnp.zeros(D)}
+    inner = sgd()
+    mask = schedule.async_schedule(13, R, 4, seed=5)
+    step = async_qsparse.make_step(grad_fn, inner, ops.TopK(k=8),
+                                   constant(0.05), R)
+    s1 = async_qsparse.init(params, inner, R)
+    s1, l1 = async_qsparse.run(s1, step, bs, mask, jax.random.PRNGKey(3))
+    sstep = async_qsparse.make_superstep(grad_fn, inner, ops.TopK(k=8),
+                                         constant(0.05), R)
+    s2 = async_qsparse.init(params, inner, R)
+    s2, l2 = async_qsparse.run_rounds(s2, sstep, bs, mask,
+                                      jax.random.PRNGKey(3))
+    _assert_state_equal(s1, s2)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+@pytest.mark.parametrize("asynchronous", [False, True])
+@pytest.mark.parametrize("policy", ["topk:k=8", "topk:k=8 >> topk:k=16"])
+def test_trainer_runtime_parity(asynchronous, policy):
+    """RunConfig.runtime='round' vs 'step': identical History — the
+    per-round loss blocks flatten to the same per-step view, mid-round
+    log points read the same (previous-sync) ledger and master."""
+    T = 17
+    grad_fn, bs = _problem(T)
+    params = {"w": jnp.zeros(D)}
+
+    def eval_fn(m):
+        return {"n": jnp.linalg.norm(m["w"])}
+
+    results = {}
+    for runtime in ("step", "round"):
+        run = RunConfig(total_steps=T, R=R, H=4, asynchronous=asynchronous,
+                        log_every=3, eval_every=5, leaf_ledger=True,
+                        policy=policy, runtime=runtime, target_loss=200.0)
+        results[runtime] = train(grad_fn, params, sgd(), None,
+                                 constant(0.05), bs, run, eval_fn=eval_fn,
+                                 smooth=4)
+    (s1, h1), (s2, h2) = results["step"], results["round"]
+    np.testing.assert_array_equal(np.asarray(s1.master["w"]),
+                                  np.asarray(s2.master["w"]))
+    for f in ("steps", "loss", "bits", "bits_down", "rounds", "leaf_bits",
+              "leaf_bits_down", "eval_steps", "eval_metrics",
+              "bits_to_target", "steps_to_target"):
+        assert getattr(h1, f) == getattr(h2, f), f
+    # the per-round blocks tile the schedule exactly
+    assert h2.round_blocks and not h1.round_blocks
+    assert sum(b[1] for b in h2.round_blocks) == T
+    starts = [b[0] for b in h2.round_blocks]
+    assert starts == sorted(starts) and starts[0] == 0
+
+
+def test_trainer_runtime_validation():
+    run = RunConfig(total_steps=2, R=R, runtime="warp")
+    with pytest.raises(ValueError, match="runtime"):
+        train(lambda p, b: (0.0, p), {"w": jnp.zeros(D)}, sgd(),
+              ops.TopK(k=8), constant(0.1), [], run)
