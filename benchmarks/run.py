@@ -26,6 +26,7 @@ SUITES = [
     ("async", "benchmarks.bench_async"),             # Fig 7
     ("nonconvex", "benchmarks.bench_nonconvex"),     # Fig 1-3
     ("scaled", "benchmarks.bench_scaled"),           # Fig 8 / App D
+    ("scenarios", "benchmarks.bench_scenarios"),     # fleet scenario lab (§8)
     ("roofline", "benchmarks.roofline"),             # deliverable (g)
 ]
 

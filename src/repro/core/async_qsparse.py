@@ -74,6 +74,7 @@ def make_step(
     dispatch: Optional[DispatchConfig] = None,
     downlink=None,
     leaf_ledger: bool = False,
+    aggregate: str = "mean_R",
 ):
     """sync_flags: bool[R] — which workers hit a sync index at t+1.
 
@@ -86,11 +87,15 @@ def make_step(
     syncing worker's master delta x̄_{t+1} − x_t^{(r)} with a
     server-side error memory (None/Identity = exact broadcast).  Pass
     the same value to :func:`init`.
+
+    aggregate: the master's division rule over the syncing subset
+    (engine.make_step / DESIGN.md §8) — "mean_R" (the paper's Σ/R,
+    default), "mean_S", or "support_weighted".
     """
     engine_step = engine.make_step(
         grad_fn, inner_opt, operator, lr_schedule, R,
         dispatch=dispatch, global_rounds=False, downlink=downlink,
-        leaf_ledger=leaf_ledger,
+        leaf_ledger=leaf_ledger, aggregate=aggregate,
     )
 
     def step_fn(state: AsyncQsparseState, batch, sync_flags, key):
@@ -111,6 +116,7 @@ def make_superstep(
     dispatch: Optional[DispatchConfig] = None,
     downlink=None,
     leaf_ledger: bool = False,
+    aggregate: str = "mean_R",
 ):
     """Round program for Algorithm 2 (DESIGN.md §7): rounds close at
     every step where *any* worker syncs, so the scanned local phase
@@ -121,7 +127,7 @@ def make_superstep(
     engine_super = engine.make_superstep(
         grad_fn, inner_opt, operator, lr_schedule, R,
         dispatch=dispatch, global_rounds=False, downlink=downlink,
-        leaf_ledger=leaf_ledger,
+        leaf_ledger=leaf_ledger, aggregate=aggregate,
     )
 
     def superstep(state: AsyncQsparseState, batch_block, tail_flags, key):

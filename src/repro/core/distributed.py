@@ -470,7 +470,7 @@ _TP_KERNEL_WARNED = set()
 
 
 def _legacy_tp_kernel_guard(compressor: Optional[ShardCompressor], mesh,
-                            daxes, aggregate: str,
+                            daxes, wire: str,
                             direction: str = "uplink"):
     """0.4.x partial-manual guard (ROADMAP known issue): on TP>1 legacy
     meshes the ``dense_psum`` sync body cannot host Pallas kernels —
@@ -483,7 +483,7 @@ def _legacy_tp_kernel_guard(compressor: Optional[ShardCompressor], mesh,
     per direction instead of hard-crashing — outputs and ledger are
     identical, only speed differs.
     """
-    if MODERN or aggregate != "dense_psum" or compressor is None:
+    if MODERN or wire != "dense_psum" or compressor is None:
         return compressor
     tp = any(mesh.shape[a] > 1 for a in mesh.axis_names if a not in daxes)
     if not (tp and compressor.would_kernel_dispatch()):
@@ -540,8 +540,10 @@ def make_dist_steps(
     data_axes: Sequence[str] = ("data",),
     param_specs=None,                  # pytree of P for leaves (model axis)
     zero1: bool = False,
-    aggregate: str = "dense_psum",     # "dense_psum" | "sparse_allgather"
+    aggregate: str = "mean_R",         # master division rule (DESIGN.md §8)
     downlink: Optional[ShardCompressor] = None,
+    wire: str = "dense_psum",          # "dense_psum" | "sparse_allgather"
+    partial: bool = False,
 ):
     """Returns (init_fn, local_step, sync_step).
 
@@ -556,16 +558,54 @@ def make_dist_steps(
     the uplink compresses against that lagging view.  None (or mode
     "none") keeps the exact dense broadcast — bit-for-bit today's
     trajectories — while charging its dense cost to ``bits_down``.
+
+    ``wire``: the sync round's wire format — "dense_psum" (in-body
+    pmean ring all-reduce) or "sparse_allgather" (compact (idx, val)
+    survivor buffers leave the manual region, dense decode in the auto
+    region; DESIGN.md §3.3).  Identical math and ledger either way.
+
+    ``aggregate``: the master's division rule over the syncing subset
+    (DESIGN.md §8) — "mean_R" (the paper's Σ/R, bit-for-bit historical),
+    "mean_S" (divide by |S|), or "support_weighted" (per-coordinate
+    survivor counts with the zero-support guard).  For backward
+    compatibility a wire-format value passed here is remapped onto
+    ``wire=`` with a one-time warning.
+
+    ``partial``: accept per-step participation masks (fleet scenarios,
+    ``core/scenarios.py``) — ``sync_step``/``round_fn`` then take a
+    trailing ``sync_mask`` bool[R] argument; workers with a False bit
+    contribute nothing, keep their error memory, and continue from
+    their own half-step iterate against a lagging master *view* (the
+    state carries ``view`` even without a downlink).  With
+    ``partial=False`` nothing changes: no extra state, bit-for-bit
+    today's trajectories.
     """
+    from repro.core import policy as pol
+    from repro.core.scenarios import validate_aggregate
+    if aggregate in ("dense_psum", "sparse_allgather"):
+        pol.warn_once(
+            "dist-aggregate-wire",
+            "aggregate= now names the aggregation rule ('mean_R' | "
+            "'mean_S' | 'support_weighted'); wire formats moved to "
+            f"wire=. Mapping aggregate={aggregate!r} to wire= with "
+            "aggregate='mean_R' (the historical behaviour).")
+        wire, aggregate = aggregate, "mean_R"
+    validate_aggregate(aggregate)
+    if wire not in ("dense_psum", "sparse_allgather"):
+        raise ValueError(f"unknown wire {wire!r}; expected 'dense_psum' "
+                         f"| 'sparse_allgather'")
     daxes = tuple(data_axes)
     R = worker_count(mesh, daxes)
     manual = set(daxes)
-    compressor = _legacy_tp_kernel_guard(compressor, mesh, daxes, aggregate)
-    downlink = _legacy_tp_kernel_guard(downlink, mesh, daxes, aggregate,
+    compressor = _legacy_tp_kernel_guard(compressor, mesh, daxes, wire)
+    downlink = _legacy_tp_kernel_guard(downlink, mesh, daxes, wire,
                                        direction="downlink")
     up = chn.ShardChannel(compressor, "uplink")
     down = chn.ShardChannel(downlink, "downlink")
     down_active = not down.is_identity()
+    # partial participation needs each worker's lagging master view even
+    # without a compressed downlink (non-syncers fall behind the master)
+    carry_view = down_active or partial
 
     def _spec_leaves_for(tree):
         is_spec = lambda z: isinstance(z, P) or z is None
@@ -626,6 +666,29 @@ def make_dist_steps(
         loss = jax.lax.pmean(loss, daxes)
         return _expand(half), _expand(inner_new), loss
 
+    # ---- aggregation rules (DESIGN.md §8) -------------------------------
+    def _aggregate_psum(g, s_f):
+        """Masked payload tree → the master's per-coordinate divisor.
+        ``s_f`` is this worker's participation as f32 (1.0 when the
+        step was built without masks).  mean_R keeps the historical
+        ``pmean`` lowering verbatim."""
+        if aggregate == "mean_R":
+            return jax.tree_util.tree_map(
+                lambda gg: jax.lax.pmean(gg, daxes), g)
+        if aggregate == "mean_S":
+            n_sync = (jnp.maximum(jax.lax.psum(s_f, daxes), 1.0)
+                      if partial else jnp.float32(R))
+            return jax.tree_util.tree_map(
+                lambda gg: jax.lax.psum(gg, daxes) / n_sync, g)
+        # support_weighted: per-coordinate survivor count over the
+        # syncing workers' payloads (masked workers' g is exactly 0, so
+        # they support nothing); zero-support coords have a zero
+        # numerator too — the max(cnt, 1) guard leaves the master alone
+        return jax.tree_util.tree_map(
+            lambda gg: jax.lax.psum(gg, daxes) / jnp.maximum(
+                jax.lax.psum((gg != 0).astype(jnp.float32), daxes), 1.0),
+            g)
+
     # ---- sync step ------------------------------------------------------
     def make_sync_body(z1, pregathered: bool = False,
                        with_down: bool = False):
@@ -635,13 +698,20 @@ def make_dist_steps(
       x_t^{(r)}, and after the master update the server compresses each
       worker's master delta against its error memory md^{(r)} — all
       shard-local threshold selection, sort- and collective-free, so
-      the body stays partition-safe on 0.4.x partial-manual meshes."""
+      the body stays partition-safe on 0.4.x partial-manual meshes.
+
+      With ``partial`` (closure) the signature additionally gains a
+      worker-sharded sync_mask and carries the view even without a
+      downlink: masked-out workers transmit zeros (their payload is
+      zeroed *before* the psum), keep their error memory and their
+      half-step local iterate, and their view stays on the master copy
+      they last received."""
       def sync_body(master, local, memory, inner, *rest):
-        if with_down:
-            view, down_mem, step, batch, key = rest
-        else:
-            view = down_mem = None
-            step, batch, key = rest
+        rest = list(rest)
+        view = rest.pop(0) if carry_view else None
+        down_mem = rest.pop(0) if with_down else None
+        smask = rest.pop(0) if partial else None
+        step, batch, key = rest
         lr = lr_schedule(step)
         half, inner_new, loss = _local(master, local, memory, inner, step,
                                        batch, lr)
@@ -651,16 +721,24 @@ def make_dist_steps(
         # unless the caller already replicated it in the auto region
         # (0.4.x cannot partition all_gather inside partial-manual).
         full_master = master if pregathered else _gather_master(master, z1)
-        ref = _squeeze(view) if with_down else full_master
+        ref = _squeeze(view) if carry_view else full_master
         delta = jax.tree_util.tree_map(
             lambda m, x, h: m + x.astype(jnp.float32) - h.astype(jnp.float32),
             mem, ref, half,
         )
         g, new_mem, wire_bits = up.apply(
             delta, param_specs, key=jax.random.fold_in(key, 1))
-        g_mean = jax.tree_util.tree_map(
-            lambda gg: jax.lax.pmean(gg, daxes), g
-        )
+        if partial:
+            s = smask[0]
+            s_f = s.astype(jnp.float32)
+            g = jax.tree_util.tree_map(
+                lambda gg: jnp.where(s, gg, jnp.zeros_like(gg)), g)
+            new_mem = jax.tree_util.tree_map(
+                lambda old, nm: jnp.where(s, nm, old), mem, new_mem)
+            wire_bits = jnp.where(s, wire_bits, 0.0)
+        else:
+            s, s_f = None, jnp.float32(1.0)
+        g_mean = _aggregate_psum(g, s_f)
         new_full_master = jax.tree_util.tree_map(
             lambda x, gg: (x.astype(jnp.float32) - gg).astype(x.dtype),
             full_master, g_mean,
@@ -668,15 +746,25 @@ def make_dist_steps(
         new_master = _scatter_master(new_full_master, z1)
         total_bits = jax.lax.psum(wire_bits, daxes)
         loss = jax.lax.pmean(loss, daxes)
+
+        def picked(new, old):
+            """Per-worker select: the new value only where s_r."""
+            if not partial:
+                return new
+            return jax.tree_util.tree_map(
+                lambda n, o: jnp.where(s, n.astype(o.dtype), o), new, old)
+
         if not with_down:
-            return (
+            new_local = picked(new_full_master, half)
+            out = (
                 new_master,
-                _expand(new_full_master),   # exact broadcast
+                _expand(new_local),   # exact broadcast (syncers only)
                 _expand(new_mem),
                 _expand(inner_new),
-                total_bits,
-                loss,
             )
+            if carry_view:
+                out = out + (_expand(picked(new_full_master, ref)),)
+            return out + (total_bits, loss)
         # downlink: error-compensated compression of the master delta
         dm = _squeeze(down_mem)
         dacc = jax.tree_util.tree_map(
@@ -690,10 +778,16 @@ def make_dist_steps(
             lambda vv, qq: (vv.astype(jnp.float32) + qq).astype(vv.dtype),
             ref, q,
         )
+        if partial:
+            new_view = picked(new_view, ref)
+            new_dm = jax.tree_util.tree_map(
+                lambda old, nm: jnp.where(s, nm, old), dm, new_dm)
+            dbits = jnp.where(s, dbits, 0.0)
+        new_local = picked(new_view, half)
         total_down = jax.lax.psum(dbits, daxes)
         return (
             new_master,
-            _expand(new_view),   # x̂_{t+1} = x_{t+1} = view
+            _expand(new_local),  # x̂_{t+1} = x_{t+1} = view (syncers)
             _expand(new_mem),
             _expand(inner_new),
             _expand(new_view),
@@ -712,28 +806,18 @@ def make_dist_steps(
     worker_specs = P(daxes)
     batch_spec = P(daxes)
 
-    def _shmap(body, master_specs, out_specs):
+    def _shmap(body, master_specs, out_specs, extra_worker: int = 0):
+        """``extra_worker`` counts additional worker-sharded operands
+        threaded between the core state and (step, batch, key): the
+        downlink channel state (view, down_memory) and/or the per-step
+        sync mask of a partial-participation run."""
         return shard_map(
             body,
             mesh=mesh,
             in_specs=(
-                master_specs, worker_specs, worker_specs, worker_specs,
-                P(), batch_spec, P(),
-            ),
-            out_specs=out_specs,
-            axis_names=manual,
-            check_vma=True,
-        )
-
-    def _shmap_down(body, master_specs, out_specs):
-        """As _shmap but with the downlink channel state (view,
-        down_memory) threaded through as worker-sharded operands."""
-        return shard_map(
-            body,
-            mesh=mesh,
-            in_specs=(
-                master_specs, worker_specs, worker_specs, worker_specs,
-                worker_specs, worker_specs, P(), batch_spec, P(),
+                (master_specs, worker_specs, worker_specs, worker_specs)
+                + (worker_specs,) * extra_worker
+                + (P(), batch_spec, P())
             ),
             out_specs=out_specs,
             axis_names=manual,
@@ -768,7 +852,16 @@ def make_dist_steps(
             loss,
         )
 
-    def sync_step_dense(state: DistQsparseState, batch, key):
+    def _prep_mask(sync_mask):
+        if sync_mask is None:
+            raise ValueError(
+                "this step was built with partial=True: pass the bool[R] "
+                "sync_mask of the step (which workers sync now)")
+        return jnp.asarray(sync_mask).reshape((R,)).astype(bool)
+
+    def sync_step_dense(state: DistQsparseState, batch, key,
+                        sync_mask=None):
+        m = _prep_mask(sync_mask) if partial else None
         z1 = _z1mask(state.master)
         mspecs = _master_in_specs(z1)
         master_in = state.master
@@ -781,42 +874,62 @@ def make_dist_steps(
                 lambda x: jax.lax.with_sharding_constraint(
                     x, NamedSharding(mesh, P())), state.master)
             in_mspecs = P()
+        extra_in = ()
+        if carry_view:
+            extra_in += (state.view,)
         if down_active:
-            sync_mapped = _shmap_down(
+            extra_in += (state.down_memory,)
+        if partial:
+            extra_in += (m,)
+        rounds_inc = jnp.any(m).astype(jnp.int32) if partial else 1
+        if down_active:
+            sync_mapped = _shmap(
                 make_sync_body(z1, pregather, with_down=True), in_mspecs,
                 (mspecs, worker_specs, worker_specs, worker_specs,
-                 worker_specs, worker_specs, P(), P(), P()))
+                 worker_specs, worker_specs, P(), P(), P()),
+                extra_worker=len(extra_in))
             (master, local, memory, inner_new, view, down_mem, wire_bits,
              down_bits, loss) = sync_mapped(
                 master_in, state.local, state.memory, state.inner,
-                state.view, state.down_memory, state.step, batch, key,
+                *extra_in, state.step, batch, key,
             )
             return (
                 DistQsparseState(
                     master=master, local=local, memory=memory,
                     inner=inner_new, step=state.step + 1,
                     bits=state.bits + wire_bits,
-                    rounds=state.rounds + 1, view=view,
+                    rounds=state.rounds + rounds_inc, view=view,
                     down_memory=down_mem,
                     bits_down=_bits_down_of(state) + down_bits,
                 ),
                 loss,
             )
+        out_specs = (mspecs, worker_specs, worker_specs, worker_specs)
+        if carry_view:
+            out_specs = out_specs + (worker_specs,)
         sync_mapped = _shmap(
             make_sync_body(z1, pregather), in_mspecs,
-            (mspecs, worker_specs, worker_specs, worker_specs, P(), P()))
-        master, local, memory, inner_new, wire_bits, loss = sync_mapped(
+            out_specs + (P(), P()), extra_worker=len(extra_in))
+        out = sync_mapped(
             master_in, state.local, state.memory, state.inner,
-            state.step, batch, key,
+            *extra_in, state.step, batch, key,
         )
+        if carry_view:
+            master, local, memory, inner_new, view, wire_bits, loss = out
+        else:
+            master, local, memory, inner_new, wire_bits, loss = out
+            view = state.view
+        # exact broadcast cost: only the syncing workers receive x_{t+1}
+        down_cost = (jnp.sum(m.astype(jnp.float32))
+                     * jnp.float32(down.dense_bits(state.master))
+                     if partial else _exact_down_bits(state.master))
         return (
             DistQsparseState(
                 master=master, local=local, memory=memory, inner=inner_new,
                 step=state.step + 1, bits=state.bits + wire_bits,
-                rounds=state.rounds + 1, view=state.view,
+                rounds=state.rounds + rounds_inc, view=view,
                 down_memory=state.down_memory,
-                bits_down=_bits_down_of(state)
-                + _exact_down_bits(state.master),
+                bits_down=_bits_down_of(state) + down_cost,
             ),
             loss,
         )
@@ -845,35 +958,52 @@ def make_dist_steps(
                 arrays.append(sel)
         return arrays
 
-    def make_sparse_sync_body(z1, with_view: bool = False):
-      def sparse_sync_body(master, local, memory, inner, view,
-                           step, batch, key):
+    def make_sparse_sync_body(z1):
+      def sparse_sync_body(master, local, memory, inner, *rest):
+        rest = list(rest)
+        view = rest.pop(0) if carry_view else None
+        smask = rest.pop(0) if partial else None
+        step, batch, key = rest
         lr = lr_schedule(step)
         half, inner_new, loss = _local(master, local, memory, inner, step,
                                        batch, lr)
         mem = _squeeze(memory)
-        # with a compressed downlink the uplink reference point is the
-        # worker's lagging view, not the true master
-        ref = _squeeze(view) if with_view else _gather_master(master, z1)
+        # with a compressed downlink (or a partial-participation run)
+        # the uplink reference point is the worker's lagging view, not
+        # the true master
+        ref = _squeeze(view) if carry_view else _gather_master(master, z1)
         delta = jax.tree_util.tree_map(
             lambda m, x, h: m + x.astype(jnp.float32) - h.astype(jnp.float32),
             mem, ref, half,
         )
         payloads, _treedef, wire_bits, new_mem = compressor.compact(
             delta, param_specs, key=jax.random.fold_in(key, 1))
-        arrays = _compact_arrays(payloads)
+        if partial:
+            # masked-out workers transmit nothing: zero their payload
+            # values (sentinel-style — the auto-region scatter-add and
+            # the support counts both see zeros), keep their memory
+            s = smask[0]
+            new_mem = jax.tree_util.tree_map(
+                lambda old, nm: jnp.where(s, nm, old), mem, new_mem)
+            wire_bits = jnp.where(s, wire_bits, 0.0)
+            arrays = []
+            for pl in payloads:
+                if pl[0] == "dense":
+                    arrays.append(
+                        jnp.where(s, pl[1], jnp.zeros_like(pl[1])))
+                else:
+                    _, idx, sel, _ax, _moved = pl
+                    arrays.append(idx)
+                    arrays.append(jnp.where(s, sel, jnp.zeros_like(sel)))
+        else:
+            arrays = _compact_arrays(payloads)
         total_bits = jax.lax.psum(wire_bits, daxes)
         loss = jax.lax.pmean(loss, daxes)
-        return (
-            _expand(new_mem), _expand(inner_new),
-            [a[None] for a in arrays], total_bits, loss,
-        )
-      if with_view:
-          return sparse_sync_body
-      # historical signature (no view operand)
-      return (lambda master, local, memory, inner, step, batch, key:
-              sparse_sync_body(master, local, memory, inner, None,
-                               step, batch, key))
+        out = (_expand(new_mem), _expand(inner_new))
+        if partial:
+            out = out + (_expand(half),)
+        return out + ([a[None] for a in arrays], total_bits, loss)
+      return sparse_sync_body
 
     def make_sparse_down_body():
       """Second manual region of the sparse downlink: the server-side
@@ -882,7 +1012,10 @@ def make_dist_steps(
       the buffers leave via out_specs and the dense decode happens in
       the auto region — sort-free, collective-free (bar the scalar
       bits psum), partition-safe on 0.4.x."""
-      def down_body(new_master, view, down_mem, key):
+      def down_body(new_master, view, down_mem, *rest):
+        rest = list(rest)
+        smask = rest.pop(0) if partial else None
+        (key,) = rest
         v = _squeeze(view)
         dm = _squeeze(down_mem)
         dacc = jax.tree_util.tree_map(
@@ -892,28 +1025,50 @@ def make_dist_steps(
         )
         payloads, _treedef, dbits, new_dm = down.compact(
             dacc, param_specs, key=jax.random.fold_in(key, 2))
+        if partial:
+            # dropped workers receive nothing: server memory and bits
+            # freeze; their q is discarded in the auto-region select
+            s = smask[0]
+            new_dm = jax.tree_util.tree_map(
+                lambda old, nm: jnp.where(s, nm, old), dm, new_dm)
+            dbits = jnp.where(s, dbits, 0.0)
         arrays = _compact_arrays(payloads)
         total_down = jax.lax.psum(dbits, daxes)
         return (_expand(new_dm), [a[None] for a in arrays], total_down)
       return down_body
 
-    def sync_step_sparse(state: DistQsparseState, batch, key):
+    def sync_step_sparse(state: DistQsparseState, batch, key,
+                         sync_mask=None):
+        m = _prep_mask(sync_mask) if partial else None
         z1 = _z1mask(state.master)
         meta = _leaf_meta(state.master)
-        n_arrays = sum(1 if m[0] == "dense" else 2 for m in meta)
-        view_specs = (worker_specs,) if down_active else ()
-        view_args = (state.view,) if down_active else ()
+        n_arrays = sum(1 if mt[0] == "dense" else 2 for mt in meta)
+        extra_in, extra_specs = (), ()
+        if carry_view:
+            extra_in += (state.view,)
+            extra_specs += (worker_specs,)
+        if partial:
+            extra_in += (m,)
+            extra_specs += (worker_specs,)
+        half_specs = (worker_specs,) if partial else ()
         mapped = shard_map(
-            make_sparse_sync_body(z1, with_view=down_active), mesh=mesh,
+            make_sparse_sync_body(z1), mesh=mesh,
             in_specs=(_master_in_specs(z1), worker_specs, worker_specs,
-                      worker_specs) + view_specs + (P(), batch_spec, P()),
-            out_specs=(worker_specs, worker_specs,
-                       [P(tuple(daxes))] * n_arrays, P(), P()),
+                      worker_specs) + extra_specs + (P(), batch_spec, P()),
+            out_specs=(worker_specs, worker_specs) + half_specs
+            + ([P(tuple(daxes))] * n_arrays, P(), P()),
             axis_names=manual, check_vma=True,
         )
-        memory, inner_new, arrays, wire_bits, loss = mapped(
+        out = mapped(
             state.master, state.local, state.memory, state.inner,
-            *view_args, state.step, batch, key)
+            *extra_in, state.step, batch, key)
+        if partial:
+            memory, inner_new, half_all, arrays, wire_bits, loss = out
+        else:
+            memory, inner_new, arrays, wire_bits, loss = out
+            half_all = None
+        n_sync = (jnp.maximum(jnp.sum(m.astype(jnp.float32)), 1.0)
+                  if partial else None)
         # auto-region combine: dense mean per leaf, constrained to the
         # master's own sharding so the dense tree is never replicated
         # (zero1 leaves: sharded over the worker axes; each chip
@@ -925,7 +1080,16 @@ def make_dist_steps(
         for (kind, ax, moved), mleaf, z1m in zip(meta, master_leaves,
                                                  z1_leaves):
             if kind == "dense":
-                means.append(jnp.mean(next(it), axis=0))
+                arr = next(it)
+                if aggregate == "mean_R":
+                    means.append(jnp.mean(arr, axis=0))
+                elif aggregate == "mean_S":
+                    d = n_sync if partial else jnp.float32(arr.shape[0])
+                    means.append(jnp.sum(arr, axis=0) / d)
+                else:  # support_weighted
+                    cnt = jnp.sum((arr != 0).astype(jnp.float32), axis=0)
+                    means.append(jnp.sum(arr, axis=0)
+                                 / jnp.maximum(cnt, 1.0))
                 continue
             idx_all = next(it)      # [W, ..., kcap]
             sel_all = next(it)
@@ -939,55 +1103,85 @@ def make_dist_steps(
                 (-1, W_ * sel_all.shape[-1]))
             dense = decode_rows(ii, ss, moved[-1])
             dense = jnp.moveaxis(dense.reshape(moved), -1, ax)
-            if z1m >= 0:
-                dense = jax.lax.with_sharding_constraint(
-                    dense, NamedSharding(
-                        mesh, P(*([None] * z1m), tuple(daxes))))
-            means.append(dense / W_)
+            z1spec = NamedSharding(mesh, P(*([None] * z1m), tuple(daxes))) \
+                if z1m >= 0 else None
+            if z1spec is not None:
+                dense = jax.lax.with_sharding_constraint(dense, z1spec)
+            if aggregate == "mean_R":
+                means.append(dense / W_)
+            elif aggregate == "mean_S":
+                means.append(dense / (n_sync if partial
+                                      else jnp.float32(W_)))
+            else:  # support_weighted: survivor count per coordinate
+                cnt = decode_rows(ii, (ss != 0).astype(jnp.float32),
+                                  moved[-1])
+                cnt = jnp.moveaxis(cnt.reshape(moved), -1, ax)
+                if z1spec is not None:
+                    cnt = jax.lax.with_sharding_constraint(cnt, z1spec)
+                means.append(dense / jnp.maximum(cnt, 1.0))
         # zero1 masters keep their global shape (only the sharding
         # differs), so the update is uniform across both layouts.
         g_mean = jax.tree_util.tree_unflatten(mtd, means)
         new_master = jax.tree_util.tree_map(
             lambda x, gg: (x.astype(jnp.float32) - gg).astype(x.dtype),
             state.master, g_mean)
+        rounds_inc = jnp.any(m).astype(jnp.int32) if partial else 1
+
+        def _select(old_all):
+            """Broadcast the new master to the (syncing) workers; the
+            dropped workers keep ``old_all`` (their half-step iterate
+            or stale view)."""
+            def leaf(x, o):
+                b = jnp.broadcast_to(x[None], o.shape).astype(o.dtype)
+                if partial:
+                    b = jnp.where(
+                        m.reshape((-1,) + (1,) * (o.ndim - 1)), b, o)
+                return jax.lax.with_sharding_constraint(
+                    b, NamedSharding(mesh, P(tuple(daxes))))
+            return jax.tree_util.tree_map(leaf, new_master, old_all)
+
         if down_active:
             new_local, view, down_mem, down_bits = _sparse_downlink(
-                state, new_master, key)
+                state, new_master, key, m, half_all)
             return (
                 DistQsparseState(
                     master=new_master, local=new_local, memory=memory,
                     inner=inner_new, step=state.step + 1,
-                    bits=state.bits + wire_bits, rounds=state.rounds + 1,
+                    bits=state.bits + wire_bits,
+                    rounds=state.rounds + rounds_inc,
                     view=view, down_memory=down_mem,
                     bits_down=_bits_down_of(state) + down_bits,
                 ),
                 loss,
             )
-        new_local = jax.tree_util.tree_map(
-            lambda x, old: jax.lax.with_sharding_constraint(
-                jnp.broadcast_to(x[None], old.shape).astype(old.dtype),
-                NamedSharding(mesh, P(tuple(daxes)))),
-            new_master, state.local)
+        new_local = _select(half_all if partial else state.local)
+        new_view = _select(state.view) if carry_view else state.view
+        down_cost = (jnp.sum(m.astype(jnp.float32))
+                     * jnp.float32(down.dense_bits(state.master))
+                     if partial else _exact_down_bits(state.master))
         return (
             DistQsparseState(
                 master=new_master, local=new_local, memory=memory,
                 inner=inner_new, step=state.step + 1,
-                bits=state.bits + wire_bits, rounds=state.rounds + 1,
-                view=state.view, down_memory=state.down_memory,
-                bits_down=_bits_down_of(state)
-                + _exact_down_bits(state.master),
+                bits=state.bits + wire_bits,
+                rounds=state.rounds + rounds_inc,
+                view=new_view, down_memory=state.down_memory,
+                bits_down=_bits_down_of(state) + down_cost,
             ),
             loss,
         )
 
-    def _sparse_downlink(state, new_master, key):
+    def _sparse_downlink(state, new_master, key, smask=None,
+                         half_all=None):
         """Sparse-path downlink: a second manual region emits each
         worker's compact (idx, val) downlink buffers + updated server
         memory; the per-worker dense decode (scatter-add, sentinel
         slots drop) runs in the auto region, exactly like the uplink
-        combine — no mean: each worker applies only its own q."""
+        combine — no mean: each worker applies only its own q.  With
+        ``partial`` the dropped workers (smask False) keep their view,
+        server memory and half-step local iterate ``half_all``."""
         dmeta = _leaf_meta(state.master, downlink)
-        n_down = sum(1 if m[0] == "dense" else 2 for m in dmeta)
+        n_down = sum(1 if mt[0] == "dense" else 2 for mt in dmeta)
         master_in = new_master
         if zero1:
             # replicate the (z1-sharded) new master in the auto region
@@ -995,14 +1189,17 @@ def make_dist_steps(
             master_in = jax.tree_util.tree_map(
                 lambda x: jax.lax.with_sharding_constraint(
                     x, NamedSharding(mesh, P())), new_master)
+        mask_in = (smask,) if partial else ()
+        mask_specs = (worker_specs,) if partial else ()
         down_mapped = shard_map(
             make_sparse_down_body(), mesh=mesh,
-            in_specs=(P(), worker_specs, worker_specs, P()),
+            in_specs=(P(), worker_specs, worker_specs)
+            + mask_specs + (P(),),
             out_specs=(worker_specs, [P(tuple(daxes))] * n_down, P()),
             axis_names=manual, check_vma=True,
         )
         down_mem, darrays, down_bits = down_mapped(
-            master_in, state.view, state.down_memory, key)
+            master_in, state.view, state.down_memory, *mask_in, key)
         it = iter(darrays)
         view_leaves, vtd = jax.tree_util.tree_flatten(state.view)
         new_view_leaves = []
@@ -1022,12 +1219,24 @@ def make_dist_steps(
             new_view_leaves.append(
                 (vleaf.astype(jnp.float32) + q).astype(vleaf.dtype))
         new_view = jax.tree_util.tree_unflatten(vtd, new_view_leaves)
+        if partial:
+            mb = lambda o: smask.reshape((-1,) + (1,) * (o.ndim - 1))
+            new_view = jax.tree_util.tree_map(
+                lambda nv, v: jnp.where(mb(v), nv, v),
+                new_view, state.view)
         new_view = jax.tree_util.tree_map(
             lambda x: jax.lax.with_sharding_constraint(
                 x, NamedSharding(mesh, P(tuple(daxes)))), new_view)
+        if partial:
+            new_local = jax.tree_util.tree_map(
+                lambda nv, h: jax.lax.with_sharding_constraint(
+                    jnp.where(mb(h), nv.astype(h.dtype), h),
+                    NamedSharding(mesh, P(tuple(daxes)))),
+                new_view, half_all)
+            return new_local, new_view, down_mem, down_bits
         return new_view, new_view, down_mem, down_bits
 
-    sync_step = (sync_step_sparse if aggregate == "sparse_allgather"
+    sync_step = (sync_step_sparse if wire == "sparse_allgather"
                  else sync_step_dense)
 
     # ---- init ------------------------------------------------------------
@@ -1042,17 +1251,18 @@ def make_dist_steps(
             )
             inner = _expand(inner_opt.init(p))
             master = _scatter_master(p, z1)
+            out = [master, local, memory, inner]
+            if carry_view:
+                # every worker's initial view is the initial master
+                out.append(local)
             if down_active:
-                # every worker's initial view is the initial master;
-                # the server-side downlink error memory starts at zero
-                return (master, local, memory, inner, local,
-                        down.init_memory(local))
-            return master, local, memory, inner
+                # server-side downlink error memory starts at zero
+                out.append(down.init_memory(local))
+            return tuple(out)
 
         out_specs = (_master_in_specs(z1), worker_specs, worker_specs,
                      worker_specs)
-        if down_active:
-            out_specs = out_specs + (worker_specs, worker_specs)
+        out_specs += (worker_specs,) * (int(carry_view) + int(down_active))
         mapped = shard_map(
             body, mesh=mesh, in_specs=(P(),),
             out_specs=out_specs,
@@ -1062,7 +1272,8 @@ def make_dist_steps(
         # older jax; under jit it lowers fine on every version
         out = jax.jit(mapped)(params)
         master, local, memory, inner = out[:4]
-        view, down_mem = (out[4], out[5]) if down_active else (None, None)
+        view = out[4] if carry_view else None
+        down_mem = out[4 + int(carry_view)] if down_active else None
         return DistQsparseState(
             master=master, local=local, memory=memory, inner=inner,
             step=jnp.zeros((), jnp.int32),
@@ -1087,8 +1298,10 @@ def make_dist_round(
     data_axes: Sequence[str] = ("data",),
     param_specs=None,
     zero1: bool = False,
-    aggregate: str = "dense_psum",
+    aggregate: str = "mean_R",
     downlink: Optional[ShardCompressor] = None,
+    wire: str = "dense_psum",
+    partial: bool = False,
 ):
     """Round-program runtime for the mesh engine (DESIGN.md §7).
 
@@ -1097,6 +1310,15 @@ def make_dist_round(
     round — L−1 local steps then the sync step at the tail, where L is
     the block's leading dim (the host schedule guarantees the tail is
     the round's sync step; use L=1 blocks for back-to-back syncs).
+
+    With ``partial=True`` (scenario runs, core/scenarios.py) the round
+    signature gains the tail's per-worker mask: ``round_fn(state,
+    batch_block, tail_mask, key)`` with ``tail_mask`` bool[R] — which
+    workers contribute to the round's sync.  ``aggregate`` names the
+    master's division rule (mean_R | mean_S | support_weighted) and
+    ``wire`` the transport (dense_psum | sparse_allgather); legacy
+    callers passing a wire format as ``aggregate=`` are shimmed with a
+    one-time warning (see make_dist_steps).
 
     With ``fused`` (modern jax, or a legacy mesh whose tensor-parallel
     axes are all size 1 — ``compat.round_scan_supported``) the whole
@@ -1112,11 +1334,12 @@ def make_dist_round(
     """
     init_fn, local_step, sync_step = make_dist_steps(
         grad_fn, inner_opt, compressor, lr_schedule, mesh, data_axes,
-        param_specs, zero1=zero1, aggregate=aggregate, downlink=downlink)
+        param_specs, zero1=zero1, aggregate=aggregate, downlink=downlink,
+        wire=wire, partial=partial)
     fused = round_scan_supported(mesh, data_axes)
 
     if fused:
-        def round_program(state, batch_block, key):
+        def round_core(state, batch_block, key, *tail_mask):
             def body(carry, batch):
                 state, key = carry
                 key, sub = jax.random.split(key)
@@ -1128,9 +1351,15 @@ def make_dist_round(
             (state, key), head_losses = jax.lax.scan(
                 body, (state, key), head)
             key, sub = jax.random.split(key)
-            state, tail_loss = sync_step(state, tail, sub)
+            state, tail_loss = sync_step(state, tail, sub, *tail_mask)
             return (state, jnp.concatenate([head_losses, tail_loss[None]]),
                     key)
+
+        if partial:
+            def round_program(state, batch_block, tail_mask, key):
+                return round_core(state, batch_block, key, tail_mask)
+        else:
+            round_program = round_core
 
         from repro.core.engine import donated_jit
         return init_fn, donated_jit(round_program), True
@@ -1148,15 +1377,24 @@ def make_dist_round(
     ls = donated_jit(local_step)
     ss = donated_jit(sync_step)
 
-    def round_fallback(state, batch_block, key):
+    def fallback_core(state, batch_block, key, *tail_mask):
         L = jax.tree_util.tree_leaves(batch_block)[0].shape[0]
         losses = []
         for i in range(L):
             batch = jax.tree_util.tree_map(lambda x, i=i: x[i], batch_block)
             key, sub = jax.random.split(key)
-            state, loss = (ss if i == L - 1 else ls)(state, batch, sub)
+            if i == L - 1:
+                state, loss = ss(state, batch, sub, *tail_mask)
+            else:
+                state, loss = ls(state, batch, sub)
             losses.append(loss)
         return state, jnp.stack(losses), key
+
+    if partial:
+        def round_fallback(state, batch_block, tail_mask, key):
+            return fallback_core(state, batch_block, key, tail_mask)
+    else:
+        round_fallback = fallback_core
 
     return init_fn, round_fallback, False
 

@@ -168,6 +168,7 @@ def make_step(
     global_rounds: bool = False,
     downlink=None,
     leaf_ledger: bool = False,
+    aggregate: str = "mean_R",
 ):
     """Build the jittable unified step.
 
@@ -182,6 +183,19 @@ def make_step(
     (+1 whenever any worker syncs; Algorithm-1 bookkeeping), False:
     worker sync events (+Σ s_r; Algorithm-2 bookkeeping).
 
+    aggregate: how the master divides the syncing subset's payload sum
+    (DESIGN.md §8) — "mean_R" is the paper's Σ/R (bit-for-bit the
+    historical trajectories; under partial participation it scales
+    updates down by |S|/R — see ``scenarios.warn_if_biased``),
+    "mean_S" divides by the syncing-subset size |S| (≡ mean_R when all
+    R workers sync), "support_weighted" divides each coordinate by its
+    survivor count — the number of syncing workers whose compressed
+    payload carried that coordinate — so sparse payloads don't dilute
+    each other; zero-support coordinates keep the master value (the
+    payload sum is exactly 0 there and the ``max(count, 1)`` guard
+    makes the quotient 0).  With Identity compression every syncing
+    worker supports every coordinate, so support_weighted ≡ mean_S.
+
     downlink: server→worker compression — an operator (or tree, or
     ``channel.Channel``) applied to the per-worker master delta with a
     server-side error memory (state.down_memory; pass the same
@@ -195,6 +209,8 @@ def make_step(
     the paper's bits x-axis per layer group, not just in aggregate.
     Pure accounting: trajectories are unchanged.
     """
+    from repro.core.scenarios import validate_aggregate
+    validate_aggregate(aggregate)
     up_ch = (operator if isinstance(operator, chn.Channel)
              else chn.Channel(operator, "uplink", dispatch))
     down_ch = chn.as_channel(downlink, "downlink", dispatch)
@@ -245,10 +261,30 @@ def make_step(
         )
         new_leaf_bits = (state.leaf_bits + jnp.sum(gvec_all, axis=0)
                          if leaf_ledger else state.leaf_bits)
-        # master applies (1/R) Σ over the syncing subset S
-        g_sum = jax.tree_util.tree_map(
-            lambda g: jnp.sum(g, axis=0) / R, g_all
-        )
+        # master divides the syncing subset's payload sum per
+        # ``aggregate`` (module docstring / DESIGN.md §8)
+        if aggregate == "mean_R":
+            # the paper's (1/R) Σ over S — the exact historical
+            # expression, kept verbatim for bit-for-bit trajectories
+            g_sum = jax.tree_util.tree_map(
+                lambda g: jnp.sum(g, axis=0) / R, g_all
+            )
+        elif aggregate == "mean_S":
+            # |S| ≥ 1 here: the sync phase only runs when any(s)
+            n_sync = jnp.maximum(
+                jnp.sum(sync_mask.astype(jnp.float32)), 1.0)
+            g_sum = jax.tree_util.tree_map(
+                lambda g: jnp.sum(g, axis=0) / n_sync, g_all
+            )
+        else:  # support_weighted: per-coordinate survivor count
+            # (g is already zero-masked for non-syncing workers, so the
+            # count only sees syncing payloads; where it is 0 the
+            # numerator is exactly 0 too — master keeps its value)
+            g_sum = jax.tree_util.tree_map(
+                lambda g: jnp.sum(g, axis=0) / jnp.maximum(
+                    jnp.sum((g != 0).astype(jnp.float32), axis=0), 1.0),
+                g_all
+            )
         new_master = jax.tree_util.tree_map(
             lambda x, g: (x.astype(jnp.float32) - g).astype(x.dtype),
             state.master, g_sum,
@@ -403,6 +439,7 @@ def make_superstep(
     global_rounds: bool = False,
     downlink=None,
     leaf_ledger: bool = False,
+    aggregate: str = "mean_R",
 ):
     """Build the round program (DESIGN.md §7): one compiled function per
     sync round — ``lax.scan`` over the local phase with the round's
@@ -430,7 +467,7 @@ def make_superstep(
     step_fn = make_step(
         grad_fn, inner_opt, operator, lr_schedule, R, dispatch=dispatch,
         global_rounds=global_rounds, downlink=downlink,
-        leaf_ledger=leaf_ledger)
+        leaf_ledger=leaf_ledger, aggregate=aggregate)
     local_phase = _make_local_phase(grad_fn, inner_opt, lr_schedule)
 
     def superstep(state: EngineState, batch_block, tail_mask, key):
@@ -597,6 +634,45 @@ def run_rounds(
         if len(steps) < plan.length:
             break
     return state, [float(x) for ls in losses for x in np.asarray(ls)]
+
+
+# ---------------------------------------------------------------------------
+# fleet-scale worker axis (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def shard_worker_axis(state: EngineState, mesh, axis: str = "data"
+                      ) -> EngineState:
+    """Shard the state's leading worker axis over a mesh axis.
+
+    The engine keeps the whole fleet on-device (one vmapped worker
+    axis); past one device's memory, place the per-worker fields
+    (local/memory/inner/master_view/down_memory) ``P(axis)`` and
+    replicate the master and scalars — under jit the partitioner then
+    runs the vmapped local phase worker-parallel and inserts one
+    cross-device reduction for the sync-phase Σ over workers.  R must
+    divide by the axis size.  Reduction order may differ from the
+    single-device layout (same math, float-rounding level); for
+    bit-pinned comparisons keep R on one device.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rep = NamedSharding(mesh, P())
+    wrk = NamedSharding(mesh, P(axis))
+
+    def put(tree, sh):
+        if tree is None:
+            return None
+        return jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, sh), tree)
+
+    return state._replace(
+        master=put(state.master, rep),
+        master_view=put(state.master_view, wrk),
+        local=put(state.local, wrk),
+        memory=put(state.memory, wrk),
+        inner=put(state.inner, wrk),
+        down_memory=put(state.down_memory, wrk),
+    )
 
 
 # ---------------------------------------------------------------------------

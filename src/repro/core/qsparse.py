@@ -113,6 +113,7 @@ def make_step(
     dispatch: Optional[DispatchConfig] = None,
     downlink=None,
     leaf_ledger: bool = False,
+    aggregate: str = "mean_R",
 ):
     """Build the jittable Algorithm-1 step (engine with an all-equal mask).
 
@@ -127,11 +128,15 @@ def make_step(
 
     leaf_ledger: per-top-level-leaf-group wire-bit accounting (pass
     the same flag to :func:`init`).
+
+    aggregate: the master's division rule (engine.make_step /
+    DESIGN.md §8) — with Algorithm 1's all-agree masks "mean_S" equals
+    the default "mean_R" bit-for-bit.
     """
     engine_step = engine.make_step(
         grad_fn, inner_opt, operator, lr_schedule, R,
         dispatch=dispatch, global_rounds=True, downlink=downlink,
-        leaf_ledger=leaf_ledger,
+        leaf_ledger=leaf_ledger, aggregate=aggregate,
     )
     keep_view = not chn.as_channel(downlink, "downlink").is_identity()
 
@@ -153,6 +158,7 @@ def make_superstep(
     dispatch: Optional[DispatchConfig] = None,
     downlink=None,
     leaf_ledger: bool = False,
+    aggregate: str = "mean_R",
 ):
     """Round program for Algorithm 1 (DESIGN.md §7): one compiled
     function per sync round — ``lax.scan`` over the local steps with
@@ -164,7 +170,7 @@ def make_superstep(
     engine_super = engine.make_superstep(
         grad_fn, inner_opt, operator, lr_schedule, R,
         dispatch=dispatch, global_rounds=True, downlink=downlink,
-        leaf_ledger=leaf_ledger,
+        leaf_ledger=leaf_ledger, aggregate=aggregate,
     )
     keep_view = not chn.as_channel(downlink, "downlink").is_identity()
 

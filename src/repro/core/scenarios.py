@@ -1,0 +1,291 @@
+"""Fleet scenario simulator (DESIGN.md §8): declarative partial-
+participation / straggler / dropout specs compiled to the engine's
+``[T, R]`` per-worker sync mask.
+
+The paper's convergence theory (Theorems 1-4) assumes every worker
+contributes to every sync round; a production fleet does not.  The
+engine already executes *arbitrary* per-worker masks (the generalized
+``s ∈ {0,1}^R`` of ``core/engine.py``), so fleet behaviour is purely a
+mask-generation problem plus an aggregation-rule question:
+
+  * **participation** — each scheduled sync event survives i.i.d. with
+    probability p (a worker that misses its sync keeps training locally
+    against its lagging view; its error memory keeps accumulating).
+  * **mid-round dropout** — a second, independent thinning applied to
+    the survivors: the worker reached the round but its payload was
+    lost (network partition, preemption) — statistically identical to
+    non-participation at the mask layer, kept as a separate knob so
+    specs document *why* a sync is missing and failure-injection tests
+    can target it.
+  * **stragglers** — a fixed fraction of workers sync k× less often
+    (they only land every ``straggler_stale_rounds``-th of their
+    scheduled syncs), modelling persistently slow hosts whose
+    contributions are k rounds stale.
+  * **heterogeneous H** — per-worker local-step periods drawn uniformly
+    from ``hetero_H=(lo, hi)`` instead of the shared ``H``.
+
+Masks are plain numpy bool arrays, deterministic in ``seed``; with all
+knobs at their defaults ``Scenario().mask(T, R, H)`` is bit-for-bit the
+trainer's synchronous fixed schedule, so a scenario run degenerates
+exactly to the paper's Algorithm 1/2.
+
+The matching aggregation rules (``aggregate=`` in ``core/engine.py`` /
+``core/distributed.py``) are:
+
+  * ``mean_R`` — the paper's Σ/R (divide by the *fleet* size).  Under
+    partial participation this silently scales the update by |S|/R;
+    :func:`warn_if_biased` emits a one-time warning for such runs.
+  * ``mean_S`` — divide by the syncing-subset size |S|; equals mean_R
+    bit-for-bit when every worker participates.
+  * ``support_weighted`` — FedDropoutAvg-style per-coordinate mean:
+    each coordinate is divided by its *survivor count* (the number of
+    syncing workers whose compressed payload carried that coordinate),
+    with zero-support coordinates falling back to the master value
+    (the numerator is exactly zero there, so the guard is the
+    ``max(count, 1)`` denominator).  With Identity compression every
+    syncing worker supports every coordinate, so it equals mean_S
+    bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core import policy as pol, schedule as sched
+
+#: aggregation rules understood by the engines (see module docstring)
+AGGREGATES = ("mean_R", "mean_S", "support_weighted")
+
+
+def validate_aggregate(aggregate: str) -> str:
+    if aggregate not in AGGREGATES:
+        raise ValueError(
+            f"unknown aggregate {aggregate!r}; expected one of "
+            f"{AGGREGATES} (wire formats moved to wire=, see "
+            f"core/distributed.py)")
+    return aggregate
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Declarative fleet-behaviour spec; ``mask(T, R, H)`` compiles it.
+
+    All knobs default to the lossless fleet: ``Scenario().mask(T, R, H)``
+    is exactly the synchronous fixed schedule broadcast to R workers.
+    """
+
+    participation: float = 1.0        # P(scheduled sync survives)
+    dropout_mid_round: float = 0.0    # P(survivor drops mid-round)
+    straggler_frac: float = 0.0       # fraction of persistently slow workers
+    straggler_stale_rounds: int = 4   # stragglers land every k-th sync only
+    hetero_H: Optional[tuple] = None  # per-worker H ~ U{lo..hi}; None = shared
+    seed: int = 0
+
+    def __post_init__(self):
+        if not (0.0 <= self.participation <= 1.0):
+            raise ValueError(f"participation must be in [0, 1], "
+                             f"got {self.participation}")
+        if not (0.0 <= self.dropout_mid_round <= 1.0):
+            raise ValueError(f"dropout_mid_round must be in [0, 1], "
+                             f"got {self.dropout_mid_round}")
+        if not (0.0 <= self.straggler_frac <= 1.0):
+            raise ValueError(f"straggler_frac must be in [0, 1], "
+                             f"got {self.straggler_frac}")
+        if self.straggler_stale_rounds < 1:
+            raise ValueError("straggler_stale_rounds must be >= 1")
+        if self.hetero_H is not None:
+            lo, hi = self.hetero_H
+            if not (1 <= int(lo) <= int(hi)):
+                raise ValueError(f"hetero_H must be (lo, hi) with "
+                                 f"1 <= lo <= hi, got {self.hetero_H}")
+
+    # ---- mask compilation ------------------------------------------------
+
+    def mask(self, T: int, R: int, H: int = 1) -> np.ndarray:
+        """The ``[T, R]`` bool sync mask of this scenario.
+
+        Worker r's base schedule is ``fixed_schedule(T, H_r)`` (H_r = H,
+        or drawn from ``hetero_H``); stragglers then keep only every
+        ``straggler_stale_rounds``-th of their scheduled syncs, and each
+        remaining sync event survives participation and mid-round
+        dropout independently.  Deterministic in ``seed`` (one
+        ``RandomState`` consumed in worker-major order); all-False rows
+        and columns are legal engine inputs (pure-local steps / workers
+        that never sync).
+        """
+        if T < 1 or R < 1:
+            raise ValueError(f"need T >= 1 and R >= 1, got T={T}, R={R}")
+        rng = np.random.RandomState(self.seed)
+        if self.hetero_H is not None:
+            lo, hi = int(self.hetero_H[0]), int(self.hetero_H[1])
+            Hs = rng.randint(lo, hi + 1, size=R)
+        else:
+            Hs = np.full(R, int(H))
+        n_strag = int(round(self.straggler_frac * R))
+        stragglers = set(
+            rng.choice(R, size=n_strag, replace=False)) if n_strag else set()
+        mask = np.zeros((T, R), bool)
+        for r in range(R):
+            col = sched.fixed_schedule(T, int(Hs[r]))
+            events = np.flatnonzero(col)
+            if r in stragglers:
+                # keep every k-th scheduled sync (1-indexed events), so a
+                # straggler's contribution is always ~k rounds stale
+                keep = (np.arange(1, len(events) + 1)
+                        % self.straggler_stale_rounds) == 0
+                events = events[keep]
+            if self.participation < 1.0 and len(events):
+                events = events[rng.rand(len(events)) < self.participation]
+            if self.dropout_mid_round > 0.0 and len(events):
+                events = events[
+                    rng.rand(len(events)) >= self.dropout_mid_round]
+            mask[events, r] = True
+        return mask
+
+    # ---- spec string surface --------------------------------------------
+
+    def to_string(self) -> str:
+        """Canonical ``k=v,...`` spec string (round-trips via parse)."""
+        parts = []
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if v == f.default:
+                continue
+            if f.name == "hetero_H":
+                parts.append(f"hetero_H={int(v[0])}-{int(v[1])}")
+            else:
+                parts.append(f"{f.name}={v}")
+        return ",".join(parts)
+
+
+#: named fleet presets (``--scenario preset:<name>``)
+PRESETS = {
+    # the lossless fleet: pure Algorithm-1 schedule
+    "lossless": Scenario(),
+    # the CI failure-injection profile: partial participation,
+    # mid-round payload loss, a slow eighth of the fleet, and
+    # heterogeneous local-step periods — every knob nonzero
+    "flaky_fleet": Scenario(participation=0.85, dropout_mid_round=0.05,
+                            straggler_frac=0.125, straggler_stale_rounds=3,
+                            hetero_H=(1, 8), seed=7),
+    # isolate one failure mode each
+    "dropout": Scenario(participation=0.7, seed=11),
+    "stragglers": Scenario(straggler_frac=0.25, straggler_stale_rounds=4,
+                           seed=13),
+    "hetero": Scenario(hetero_H=(1, 16), seed=17),
+}
+
+
+def parse(spec) -> Scenario:
+    """A Scenario from a spec string, preset name, or Scenario.
+
+    Accepts ``"preset:<name>"`` (see :data:`PRESETS`), a ``k=v,...``
+    string (``"participation=0.8,straggler_frac=0.1,seed=3"``, with
+    ``hetero_H=lo-hi``), or an existing :class:`Scenario` (returned
+    as-is).  Unknown keys and presets raise.
+    """
+    if isinstance(spec, Scenario):
+        return spec
+    if not isinstance(spec, str):
+        raise TypeError(f"scenario spec must be a Scenario or str, "
+                        f"got {type(spec).__name__}")
+    s = spec.strip()
+    if s.startswith("preset:"):
+        name = s[len("preset:"):]
+        try:
+            return PRESETS[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown scenario preset {name!r}; available: "
+                f"{sorted(PRESETS)}") from None
+    kwargs = {}
+    fields = {f.name: f for f in dataclasses.fields(Scenario)}
+    for item in filter(None, (p.strip() for p in s.split(","))):
+        if "=" not in item:
+            raise ValueError(f"bad scenario item {item!r}: expected k=v")
+        k, v = (x.strip() for x in item.split("=", 1))
+        if k not in fields:
+            raise KeyError(f"unknown scenario field {k!r}; available: "
+                           f"{sorted(fields)}")
+        if k == "hetero_H":
+            lo, _, hi = v.partition("-")
+            kwargs[k] = (int(lo), int(hi or lo))
+        elif k in ("straggler_stale_rounds", "seed"):
+            kwargs[k] = int(v)
+        else:
+            kwargs[k] = float(v)
+    return Scenario(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# mask diagnostics
+# ---------------------------------------------------------------------------
+
+
+def is_partial(mask) -> bool:
+    """Does any sync step have a strict subset of workers syncing?
+    (the regime where mean_R's Σ/R silently downscales the update)"""
+    m = np.asarray(mask, bool)
+    if m.ndim == 1:
+        return False
+    rows = m.sum(axis=1)
+    return bool(np.any((rows > 0) & (rows < m.shape[1])))
+
+
+def participation_of(mask) -> float:
+    """Mean fraction of workers syncing over the steps where anyone
+    does (1.0 for an all-agree schedule; 0.0 when nothing syncs)."""
+    m = np.asarray(mask, bool)
+    if m.ndim == 1:
+        m = m[:, None]
+    any_rows = m.any(axis=1)
+    if not any_rows.any():
+        return 0.0
+    return float(m[any_rows].mean())
+
+
+def warn_if_biased(mask, aggregate: str) -> bool:
+    """One-time warning for the silent Σ/R bias: under partial
+    participation ``mean_R`` scales every update down by |S|/R (the
+    paper-faithful default, but rarely what a fleet operator means).
+    Returns whether the warning condition held."""
+    biased = aggregate == "mean_R" and is_partial(mask)
+    if biased:
+        pol.warn_once(
+            "scenario-mean_R-partial",
+            "scenario has partial participation (mean fraction "
+            f"{participation_of(mask):.2f}) with aggregate='mean_R': "
+            "the paper's Σ/R divides by the full fleet size, scaling "
+            "each update down by |S|/R. Pass aggregate='mean_S' or "
+            "'support_weighted' for unbiased partial-participation "
+            "averaging.")
+    return biased
+
+
+# ---------------------------------------------------------------------------
+# failure injection (the differential-test surface)
+# ---------------------------------------------------------------------------
+
+
+def inject_dropout(mask, worker: int, step: int) -> np.ndarray:
+    """Mask-layer failure: remove worker's sync at ``step`` entirely
+    (its payload never arrives; the master round proceeds without it)."""
+    m = np.array(mask, bool, copy=True)
+    if not m[step, worker]:
+        raise ValueError(f"worker {worker} does not sync at step {step}")
+    m[step, worker] = False
+    return m
+
+
+def defer_sync(mask, worker: int, step: int, later: int) -> np.ndarray:
+    """Stale-arrival failure: worker's sync at ``step`` lands at
+    ``later`` instead (the payload survived but arrived rounds late —
+    the async regime of ``core/async_qsparse.py``)."""
+    if later <= step:
+        raise ValueError(f"deferred step {later} must follow {step}")
+    m = inject_dropout(mask, worker, step)
+    m[later, worker] = True
+    return m

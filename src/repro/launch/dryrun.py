@@ -169,7 +169,7 @@ def lower_train(cfg, mesh, *, zero1: bool = False, compressor_mode: str = "topk"
     init_fn, local_step, sync_step = make_dist_steps(
         grad_fn, momentum_sgd(0.9), ShardCompressor(compressor_mode, k_frac),
         constant(1e-3), mesh, daxes, specs, zero1=zero1,
-        aggregate=aggregate,
+        wire=aggregate,
     )
     params_sds, _ = abstract_params(cfg, mesh, model)
     state_sds = jax.eval_shape(init_fn, params_sds)

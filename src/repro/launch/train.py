@@ -111,10 +111,26 @@ def main():
                     help="compression kernel routing (kernels/dispatch.py): "
                          "auto = fused Pallas Top_k on TPU, reference "
                          "elsewhere")
-    ap.add_argument("--aggregate", default="dense_psum",
+    ap.add_argument("--aggregate", default="mean_R",
+                    choices=["mean_R", "mean_S", "support_weighted",
+                             "dense_psum", "sparse_allgather"],
+                    help="master division rule over the syncing subset "
+                         "(DESIGN.md §8): mean_R (the paper's Σ/R), "
+                         "mean_S (Σ/|S|), or support_weighted (per-"
+                         "coordinate survivor count).  The legacy wire "
+                         "values dense_psum|sparse_allgather are shimmed "
+                         "onto --wire with a one-time warning")
+    ap.add_argument("--wire", default="dense_psum",
                     choices=["dense_psum", "sparse_allgather"],
-                    help="sync aggregation: dense psum, or compact "
+                    help="sync transport: dense psum, or compact "
                          "(idx, val) allgather (the sparse wire format)")
+    ap.add_argument("--scenario", default=None,
+                    help="fleet scenario (core/scenarios.py, DESIGN.md "
+                         "§8): 'preset:<name>' (e.g. preset:flaky_fleet) "
+                         "or 'k=v,...' (participation=0.8,"
+                         "straggler_frac=0.1,seed=3) — generates the "
+                         "[T, R] per-worker sync mask; --H is the base "
+                         "sync period")
     ap.add_argument("--runtime", default="round",
                     choices=["round", "step"],
                     help="execution runtime (DESIGN.md §7): 'round' "
@@ -168,8 +184,19 @@ def main():
         warmup_piecewise(args.lr, 5, [int(args.steps * 0.8)]),
         mesh, daxes, specs,
     )
+    scenario_mask = None
+    if args.scenario is not None:
+        from repro.core import scenarios as scn
+        scenario = scn.parse(args.scenario)
+        scenario_mask = scenario.mask(args.steps, R, H=args.H)
+        scn.warn_if_biased(scenario_mask, args.aggregate)
+        print(f"scenario: {scenario.to_string() or 'lossless'} "
+              f"(participation {scn.participation_of(scenario_mask):.2f}, "
+              f"{int(scenario_mask.any(axis=1).sum())} sync steps)",
+              flush=True)
     engine_kw = dict(zero1=args.zero1, aggregate=args.aggregate,
-                     downlink=downlink)
+                     downlink=downlink, wire=args.wire,
+                     partial=scenario_mask is not None)
     if args.runtime == "round":
         init_fn, round_fn, fused = make_dist_round(*engine_args, **engine_kw)
         print(f"runtime: round ({'fused' if fused else 'per-step fallback'})",
@@ -212,6 +239,14 @@ def main():
         # direction per sync round, regardless of leaf count
         reset_launches()
         launch_note = None
+
+        def is_sync_step(t):
+            """Scenario runs sync where any worker's mask row fires; the
+            fixed schedule keeps the historical every-H + final step."""
+            if scenario_mask is not None:
+                return bool(scenario_mask[t].any())
+            return (t + 1) % args.H == 0 or t == args.steps - 1
+
         if args.runtime == "round":
             # round runtime (DESIGN.md §7): accumulate steps until the
             # schedule's next sync, run the block as one program.  The
@@ -224,11 +259,18 @@ def main():
                                    seed=1)):
                 mirror, sub = jax.random.split(mirror)
                 pending.append(make_batch(batch, sub))
-                if not ((t + 1) % args.H == 0 or t == args.steps - 1):
+                # scenario runs close rounds at any-worker-sync steps
+                # (an all-False final flush is legal: the masked tail
+                # sync is exactly a local step on every worker)
+                if not (is_sync_step(t) or t == args.steps - 1):
                     continue
                 block = stack_block(pending)
                 prev_up, prev_down = float(state.bits), float(state.bits_down)
-                state, losses, key = round_fn(state, block, key)
+                if scenario_mask is not None:
+                    state, losses, key = round_fn(
+                        state, block, jnp.asarray(scenario_mask[t]), key)
+                else:
+                    state, losses, key = round_fn(state, block, key)
                 mirror = key
                 if launch_note is None:
                     launch_note = launch_note_once()
@@ -237,7 +279,8 @@ def main():
                     tail = i == len(pending) - 1
                     last_loss = float(losses[i])
                     log_step(
-                        block_start + i, "sync " if tail else "local",
+                        block_start + i,
+                        "sync " if tail and is_sync_step(t) else "local",
                         last_loss,
                         float(state.bits) if tail else prev_up,
                         float(state.bits_down) if tail else prev_down,
@@ -250,8 +293,12 @@ def main():
                                    seed=1)):
                 key, sub = jax.random.split(key)
                 b = make_batch(batch, sub)
-                if (t + 1) % args.H == 0 or t == args.steps - 1:
-                    state, loss = ss(state, b, sub)
+                if is_sync_step(t):
+                    if scenario_mask is not None:
+                        state, loss = ss(state, b, sub,
+                                         jnp.asarray(scenario_mask[t]))
+                    else:
+                        state, loss = ss(state, b, sub)
                     kind = "sync "
                     if launch_note is None:
                         launch_note = launch_note_once()

@@ -39,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine, policy as pol, rounds as rnd, \
-    schedule as sched
+    scenarios as scn, schedule as sched
 from repro.core.operators import CompressionOp
 from repro.kernels.dispatch import DispatchConfig
 from repro.optim.transforms import GradientTransform
@@ -79,6 +79,16 @@ class RunConfig:
     # leaf_bits_down) — compare heterogeneous policies on the paper's
     # x-axis per layer group.  Pure accounting; trajectories unchanged.
     leaf_ledger: bool = False
+    # fleet scenario (core/scenarios.py, DESIGN.md §8): a Scenario, a
+    # "k=v,..." spec string, or "preset:<name>" — compiled into the
+    # engine's [T, R] mask (partial participation, stragglers, dropout,
+    # heterogeneous H).  Mutually exclusive with ``asynchronous``.
+    scenario: Optional[Union[str, scn.Scenario]] = None
+    # the master's division rule over the syncing subset (DESIGN.md §8):
+    # "mean_R" (the paper's Σ/R), "mean_S", or "support_weighted".
+    # With a partial-participation scenario and the default mean_R a
+    # one-time bias warning is emitted (scenarios.warn_if_biased).
+    aggregate: str = "mean_R"
     # DEPRECATED (PR 4): the pre-policy downlink knob.  Use
     # ``policy="<uplink> >> <downlink>"`` (or a ChannelSpec) instead;
     # kept as a shim with a one-time warning.
@@ -171,6 +181,14 @@ class History:
 
 def make_mask(run: RunConfig) -> np.ndarray:
     """The engine's [T, R] sync mask for this run's schedule."""
+    if run.scenario is not None:
+        if run.asynchronous:
+            raise ValueError(
+                "RunConfig.scenario and RunConfig.asynchronous are "
+                "mutually exclusive: a scenario already generates the "
+                "per-worker mask (use hetero_H for staggered workers)")
+        return scn.parse(run.scenario).mask(run.total_steps, run.R,
+                                            H=run.H)
     if run.asynchronous:
         return sched.async_schedule(run.total_steps, run.R, run.H,
                                     seed=run.seed)
@@ -208,6 +226,8 @@ def train(
     state = engine.init(params, inner_opt, run.R, downlink=downlink,
                         leaf_ledger=run.leaf_ledger)
     mask = make_mask(run)
+    if run.scenario is not None:
+        scn.warn_if_biased(mask, run.aggregate)
     ckpt_policy = None if channel_spec is None else channel_spec.to_dict()
     if run.leaf_ledger:
         hist.leaf_groups = list(engine.leaf_group_names(params))
@@ -267,7 +287,8 @@ def train(
         superstep = engine.make_superstep(
             grad_fn, inner_opt, operator, lr_schedule, run.R,
             dispatch=dispatch, global_rounds=not run.asynchronous,
-            downlink=downlink, leaf_ledger=run.leaf_ledger)
+            downlink=downlink, leaf_ledger=run.leaf_ledger,
+            aggregate=run.aggregate)
         state, key = _drive_rounds(
             state, superstep, batches, mask, key, run, hist,
             snapshot_ledger, bookkeep_loss, maybe_eval_ckpt)
@@ -275,7 +296,8 @@ def train(
         step_fn = engine.donated_jit(engine.make_step(
             grad_fn, inner_opt, operator, lr_schedule, run.R,
             dispatch=dispatch, global_rounds=not run.asynchronous,
-            downlink=downlink, leaf_ledger=run.leaf_ledger))
+            downlink=downlink, leaf_ledger=run.leaf_ledger,
+            aggregate=run.aggregate))
         for t, batch in enumerate(batches):
             if t >= run.total_steps:
                 break

@@ -26,7 +26,9 @@ except ImportError:
     HAVE_HYPOTHESIS = False
 
     class _Strategy:
-        """Inert stand-in: absorbs .map/.filter/.flatmap chains."""
+        """Inert stand-in: absorbs .map/.filter/.flatmap chains and —
+        for ``@st.composite``-built strategies, which the stub turns
+        into _Strategy instances — calls."""
 
         def map(self, _fn):
             return self
@@ -35,6 +37,9 @@ except ImportError:
             return self
 
         def flatmap(self, _fn):
+            return self
+
+        def __call__(self, *_a, **_k):
             return self
 
     class _Strategies(types.ModuleType):
@@ -66,8 +71,18 @@ except ImportError:
     _hyp.given = _given
     _hyp.settings = _settings
     _hyp.strategies = _st
+    _hyp.assume = lambda *_a, **_k: True
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st
+
+if HAVE_HYPOTHESIS:
+    # example budgets: "fleet" keeps the R>=256 scenario lane cheap
+    # (pytest -m scenarios in CI); select with HYPOTHESIS_PROFILE=
+    from hypothesis import settings as _hs
+
+    _hs.register_profile("fleet", max_examples=5, deadline=None)
+    _hs.register_profile("ci", max_examples=25, deadline=None)
+    _hs.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "default"))
 
 
 def run_subprocess(code: str, devices: int = 8, timeout: int = 900):

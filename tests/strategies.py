@@ -1,0 +1,149 @@
+"""Reusable hypothesis strategies for the repo's property tests.
+
+One vocabulary for every suite that reasons about schedules, [T, R]
+sync masks, fleet scenarios, or parameter pytrees — adopted by
+test_schedule.py / test_rounds.py / test_scenarios.py instead of each
+file hand-rolling its own integer tuples.
+
+Import-safe without hypothesis: the conftest stub turns every strategy
+into an inert object and every ``@given`` test into a skip, while the
+deterministic grids at the bottom (plain numpy, no hypothesis) keep the
+parametrized twin tests running everywhere.
+"""
+
+import numpy as np
+from hypothesis import strategies as st
+
+from repro.core import scenarios as scn, schedule as sched
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def schedule_cases(max_T=250, max_R=10, max_H=12, max_seed=10_000):
+    """(T, R, H, seed) tuples for schedule/mask generators."""
+    return st.tuples(
+        st.integers(1, max_T), st.integers(1, max_R),
+        st.integers(1, max_H), st.integers(0, max_seed))
+
+
+def fixed_schedule_cases(max_T=250, max_H=16):
+    """(T, H) tuples for the synchronous fixed schedule."""
+    return st.tuples(st.integers(1, max_T), st.integers(1, max_H))
+
+
+# ---------------------------------------------------------------------------
+# [T, R] per-worker sync masks
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def sync_masks(draw, max_T=64, max_R=6, require_sync=False):
+    """Arbitrary bool[T, R] masks — i.i.d. rows at a drawn density, so
+    all-False, partial and dense schedules all appear.  With
+    ``require_sync`` at least one True entry is guaranteed."""
+    T = draw(st.integers(1, max_T))
+    R = draw(st.integers(1, max_R))
+    p = draw(st.floats(0.0, 1.0))
+    seed = draw(st.integers(0, 2**31 - 1))
+    mask = np.random.RandomState(seed).rand(T, R) < p
+    if require_sync and not mask.any():
+        t = draw(st.integers(0, T - 1))
+        r = draw(st.integers(0, R - 1))
+        mask[t, r] = True
+    return mask
+
+
+@st.composite
+def scheduled_masks(draw, max_T=48, max_R=6, max_H=8):
+    """Masks that came from a real schedule family (fixed broadcast,
+    async, or scenario) — the inputs the runtimes actually see."""
+    T = draw(st.integers(1, max_T))
+    R = draw(st.integers(1, max_R))
+    H = draw(st.integers(1, max_H))
+    seed = draw(st.integers(0, 9_999))
+    family = draw(st.integers(0, 2))
+    if family == 0:
+        fixed = sched.fixed_schedule(T, H)
+        return np.broadcast_to(fixed[:, None], (T, R)).copy()
+    if family == 1:
+        return sched.async_schedule(T, R, H, seed=seed)
+    return draw(scenario_specs()).mask(T, R, H=H)
+
+
+# ---------------------------------------------------------------------------
+# fleet scenarios (core/scenarios.py)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def scenario_specs(draw, min_participation=0.0):
+    """Valid Scenario dataclasses across the whole knob space."""
+    hetero = draw(st.booleans())
+    lo = draw(st.integers(1, 6))
+    hi = draw(st.integers(lo, 12))
+    return scn.Scenario(
+        participation=draw(st.floats(min_participation, 1.0)),
+        dropout_mid_round=draw(st.floats(0.0, 0.5)),
+        straggler_frac=draw(st.floats(0.0, 1.0)),
+        straggler_stale_rounds=draw(st.integers(1, 6)),
+        hetero_H=(lo, hi) if hetero else None,
+        seed=draw(st.integers(0, 9_999)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# parameter pytrees
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def param_trees(draw, max_leaves=4, max_dim=32):
+    """Nested dict pytrees of float32 numpy leaves (1-D / 2-D), the
+    shape family the engines train on."""
+    n = draw(st.integers(1, max_leaves))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.RandomState(seed)
+    tree = {}
+    for i in range(n):
+        shape = tuple(rng.randint(1, max_dim + 1, size=rng.randint(1, 3)))
+        leaf = rng.randn(*shape).astype(np.float32)
+        if i % 3 == 2:
+            tree.setdefault("nested", {})[f"l{i}"] = leaf
+        else:
+            tree[f"l{i}"] = leaf
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# deterministic twins (no hypothesis required — run everywhere)
+# ---------------------------------------------------------------------------
+
+#: fixed-seed scenario grid covering each knob alone plus combinations;
+#: the deterministic counterpart of scenario_specs()
+SCENARIO_GRID = [
+    scn.Scenario(),
+    scn.Scenario(participation=0.8, seed=3),
+    scn.Scenario(dropout_mid_round=0.2, seed=4),
+    scn.Scenario(straggler_frac=0.5, straggler_stale_rounds=2, seed=5),
+    scn.Scenario(hetero_H=(1, 6), seed=6),
+    scn.PRESETS["flaky_fleet"],
+]
+
+
+def mask_grid(T=24, R=4, H=3):
+    """Deterministic (name, mask) pairs: the fixed broadcast, an async
+    schedule, each SCENARIO_GRID mask, and a hand-built partial mask."""
+    fixed = sched.fixed_schedule(T, H)
+    out = [
+        ("fixed", np.broadcast_to(fixed[:, None], (T, R)).copy()),
+        ("async", sched.async_schedule(T, R, H, seed=11)),
+    ]
+    for i, sc in enumerate(SCENARIO_GRID):
+        out.append((f"scenario{i}", sc.mask(T, R, H=H)))
+    partial = np.broadcast_to(fixed[:, None], (T, R)).copy()
+    partial[H - 1, 0] = False        # worker 0 misses the first sync
+    partial[:, R - 1] = False        # last worker never syncs
+    out.append(("partial", partial))
+    return out

@@ -7,7 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+import strategies
+from hypothesis import given, settings
 
 from repro.core import (async_qsparse, engine, operators as ops,
                         policy as pol, qsparse, rounds as rnd, schedule)
@@ -46,8 +47,9 @@ def _check_plans(mask):
 
 
 @settings(max_examples=40, deadline=None)
-@given(T=st.integers(1, 120), H=st.integers(1, 13))
-def test_plans_reproduce_fixed_schedule(T, H):
+@given(case=strategies.fixed_schedule_cases(max_T=120, max_H=13))
+def test_plans_reproduce_fixed_schedule(case):
+    T, H = case
     mask = schedule.fixed_schedule(T, H)
     plans = _check_plans(mask)
     # fixed schedules compile to at most two distinct round lengths
@@ -55,17 +57,19 @@ def test_plans_reproduce_fixed_schedule(T, H):
 
 
 @settings(max_examples=40, deadline=None)
-@given(T=st.integers(1, 120), Rr=st.integers(1, 8), H=st.integers(1, 9),
-       seed=st.integers(0, 10_000))
-def test_plans_reproduce_async_schedule(T, Rr, H, seed):
+@given(case=strategies.schedule_cases(max_T=120, max_R=8, max_H=9))
+def test_plans_reproduce_async_schedule(case):
+    T, Rr, H, seed = case
     _check_plans(schedule.async_schedule(T, Rr, H, seed=seed))
 
 
 @settings(max_examples=40, deadline=None)
-@given(T=st.integers(1, 80), Rr=st.integers(1, 6), H=st.integers(2, 8))
-def test_plans_reproduce_staggered_round_robin(T, Rr, H):
+@given(case=strategies.schedule_cases(max_T=80, max_R=6, max_H=8))
+def test_plans_reproduce_staggered_round_robin(case):
     """Worker r syncs at steps t+1 ≡ r (mod H): every step syncs some
     worker once R ≥ H, so rounds collapse to single steps."""
+    T, Rr, H, _ = case
+    H = max(H, 2)
     mask = np.zeros((T, Rr), bool)
     for r in range(Rr):
         for t in range(T):
@@ -77,13 +81,19 @@ def test_plans_reproduce_staggered_round_robin(T, Rr, H):
 
 
 @settings(max_examples=40, deadline=None)
-@given(T=st.integers(1, 64), Rr=st.integers(1, 5),
-       p=st.floats(0.0, 1.0), seed=st.integers(0, 999))
-def test_plans_reproduce_random_mask(T, Rr, p, seed):
+@given(mask=strategies.sync_masks(max_T=64, max_R=5))
+def test_plans_reproduce_random_mask(mask):
     """Arbitrary [T, R] masks — including all-False (one trailing
     partial round) and dense ones — reconstruct exactly."""
-    rng = np.random.RandomState(seed)
-    _check_plans(rng.rand(T, Rr) < p)
+    _check_plans(mask)
+
+
+@settings(max_examples=40, deadline=None)
+@given(mask=strategies.scheduled_masks())
+def test_plans_reproduce_scheduled_masks(mask):
+    """Masks from every real schedule family — fixed broadcast, async,
+    and fleet scenarios — segment and reconstruct exactly."""
+    _check_plans(mask)
 
 
 def test_trailing_partial_round():

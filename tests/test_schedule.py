@@ -2,7 +2,9 @@
 schedules (property-tested) and fixed_schedule edge cases."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings
+
+import strategies
 
 from repro.core import schedule
 
@@ -13,9 +15,9 @@ from repro.core import schedule
 
 
 @settings(max_examples=30, deadline=None)
-@given(T=st.integers(1, 250), Rr=st.integers(1, 10), H=st.integers(1, 12),
-       seed=st.integers(0, 10_000))
-def test_async_schedule_gap_bounded(T, Rr, H, seed):
+@given(case=strategies.schedule_cases(max_T=250, max_R=10, max_H=12))
+def test_async_schedule_gap_bounded(case):
+    T, Rr, H, seed = case
     mask = schedule.async_schedule(T, Rr, H, seed=seed)
     assert mask.shape == (T, Rr)
     for g in schedule.worker_gaps(mask):
@@ -25,8 +27,9 @@ def test_async_schedule_gap_bounded(T, Rr, H, seed):
 
 
 @settings(max_examples=30, deadline=None)
-@given(T=st.integers(1, 250), H=st.integers(1, 16))
-def test_fixed_schedule_gap_and_terminal(T, H):
+@given(case=strategies.fixed_schedule_cases(max_T=250, max_H=16))
+def test_fixed_schedule_gap_and_terminal(case):
+    T, H = case
     mask = schedule.fixed_schedule(T, H)
     idx = [t + 1 for t in range(T) if mask[t]]
     # gap can reach H; the final partial window never exceeds it by
