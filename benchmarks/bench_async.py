@@ -1,9 +1,27 @@
-"""Paper Figure 7 (asynchronous convex): Algorithm 2 with per-worker
-sync times drawn U[1, H], vs the synchronous counterparts — all driven
-through the unified engine (core/engine.py), plus a staggered
-round-robin mask that only the generalized per-worker sync mask can
-express (worker r syncs when (t+1) % H == r % H: the master is touched
-every step, each worker every H steps)."""
+"""Paper Figure 7 (asynchronous convex) under *executed* staleness.
+
+Earlier revisions modelled staleness: ``asynchronous=True`` draws
+per-worker sync times U[1, H], but every payload still landed the step
+it was computed.  This suite now drives the staleness-first fault
+runtime (DESIGN.md §9) — a payload compressed at step t rides the
+in-flight queue and is applied at t+τ, with the uplink error memory
+updated at compute time — so the async rows measure the algorithm the
+convergence theory actually bounds.
+
+Three row families:
+
+* paper rows — Figure 7 operators on the Algorithm-2 schedule, now
+  with executed delays (τ ~ U[0, 2]), plus the synchronous anchors;
+* ``stale_tau*`` — convergence vs max staleness: TopK/H=4 with
+  τ ~ U[0, τmax] for τmax ∈ {0, 2, 4, 8} (τmax = 0 routes through the
+  fault runtime with trivial tables — same queue machinery, zero
+  delay), plus a staleness-damped (1/(1+τ)) variant at the worst τmax;
+* ``qdepth*`` — steps/s vs queue depth: wall-clock cost of carrying a
+  depth-D in-flight buffer per worker (depth = τmax + 1).
+
+Plus the staggered round-robin mask only the generalized per-worker
+sync mask can express (worker r syncs when (t+1) % H == r % H).
+"""
 
 from __future__ import annotations
 
@@ -18,8 +36,25 @@ from repro.data import worker_batches
 from repro.optim import inverse_time, sgd
 
 T = 400
+T_DEPTH = 200          # throughput rows: convergence is not the metric
 K = 40 / 7850.0
 TARGET = 1.0
+STALE_TAUS = (0, 2, 4, 8)
+QUEUE_DEPTHS = (1, 2, 4, 8)
+
+
+def _delays(tau_max: int, seed: int = 1) -> str:
+    """FaultSpec string: pure delay injection, τ ~ U[0, τmax]."""
+    if tau_max == 0:
+        return "preset:none"
+    return f"max_delay={tau_max},seed={seed}"
+
+
+def _derived(r) -> str:
+    btt = r["bits_to_target"]
+    return (f"loss={r['final_loss']:.3f};err={r['eval_error']:.3f};"
+            f"bits={r['bits']:.3g};bits_to_target="
+            f"{btt if btt is not None else 'n/a'}")
 
 
 def _staggered_round_robin(op, H, T, R=15, b=8, seed=0):
@@ -48,21 +83,43 @@ def _staggered_round_robin(op, H, T, R=15, b=8, seed=0):
 
 def run():
     rows = []
-    for name, op, H, asy in [
-        ("sync_vanilla", ops.Identity(), 1, False),
-        ("async_topk_H4", ops.TopK(k=K), 4, True),
-        ("async_signtopk_H4", ops.SignSparsifier(k=K, m=1), 4, True),
-        ("async_qtopk_H4", ops.QuantizedSparsifier(k=K, s=15), 4, True),
-        ("async_qtopk_H8", ops.QuantizedSparsifier(k=K, s=15), 8, True),
-        ("sync_qtopk_H4", ops.QuantizedSparsifier(k=K, s=15), 4, False),
+    # Figure 7 operators: async rows carry executed delays (τ ≤ 2).
+    for name, op, H, asy, faults in [
+        ("sync_vanilla", ops.Identity(), 1, False, None),
+        ("async_topk_H4", ops.TopK(k=K), 4, True, _delays(2)),
+        ("async_signtopk_H4", ops.SignSparsifier(k=K, m=1), 4, True,
+         _delays(2)),
+        ("async_qtopk_H4", ops.QuantizedSparsifier(k=K, s=15), 4, True,
+         _delays(2)),
+        ("async_qtopk_H8", ops.QuantizedSparsifier(k=K, s=15), 8, True,
+         _delays(2)),
+        ("sync_qtopk_H4", ops.QuantizedSparsifier(k=K, s=15), 4, False,
+         None),
     ]:
-        r = run_convex(op, H, T, asynchronous=asy, target_loss=TARGET)
-        btt = r["bits_to_target"]
+        r = run_convex(op, H, T, asynchronous=asy, target_loss=TARGET,
+                       faults=faults)
+        rows.append(BenchRow(f"async/{name}", r["us_per_step"], _derived(r)))
+    # Convergence vs max staleness (executed τ ~ U[0, τmax]).
+    for tau in STALE_TAUS:
+        r = run_convex(ops.TopK(k=K), 4, T, asynchronous=True,
+                       target_loss=TARGET, faults=_delays(tau))
         rows.append(BenchRow(
-            f"async/{name}", r["us_per_step"],
-            f"loss={r['final_loss']:.3f};err={r['eval_error']:.3f};"
-            f"bits={r['bits']:.3g};bits_to_target="
-            f"{btt if btt is not None else 'n/a'}"))
+            f"async/stale_tau{tau}", r["us_per_step"],
+            f"tau_max={tau};" + _derived(r)))
+    r = run_convex(ops.TopK(k=K), 4, T, asynchronous=True,
+                   target_loss=TARGET, faults=_delays(STALE_TAUS[-1]),
+                   staleness_weight="damped")
+    rows.append(BenchRow(
+        f"async/stale_tau{STALE_TAUS[-1]}_damped", r["us_per_step"],
+        f"tau_max={STALE_TAUS[-1]};weight=damped;" + _derived(r)))
+    # Steps/s vs queue depth (depth = τmax + 1; throughput rows).
+    for depth in QUEUE_DEPTHS:
+        r = run_convex(ops.TopK(k=K), 4, T_DEPTH, asynchronous=True,
+                       faults=_delays(depth - 1, seed=2))
+        rows.append(BenchRow(
+            f"async/qdepth{depth}", r["us_per_step"],
+            f"depth={depth};loss={r['final_loss']:.3f};"
+            f"bits={r['bits']:.3g};bits_to_target=n/a"))
     r = _staggered_round_robin(ops.TopK(k=K), 4, T)
     rows.append(BenchRow(
         "async/staggered_rr_topk_H4", r["us_per_step"],

@@ -66,13 +66,20 @@ def convex_problem(n=4000, seed=0):
 
 def run_convex(op, H, T, *, R=15, b=8, asynchronous=False, seed=0,
                target_loss: Optional[float] = None, xi=60.0, a=100.0,
-               inner="sgd"):
+               inner="sgd", faults=None, fault_seed=None,
+               staleness_weight="uniform"):
+    """``faults``: a FaultSpec string ('max_delay=4,seed=1' /
+    'preset:chaos') routes the run through the trainer's executed-
+    staleness fault runtime (DESIGN.md §9) — payloads land at t+τ out
+    of the in-flight queue instead of being modelled."""
     x, y, cfg, params, grad_fn, eval_fn = convex_problem()
     lr = inverse_time(xi=xi, a=a)
     batches = worker_batches(x, y, R, b, T, seed=seed)
     run_cfg = RunConfig(total_steps=T, R=R, H=H, log_every=25,
                         asynchronous=asynchronous, seed=seed,
-                        target_loss=target_loss, eval_every=0)
+                        target_loss=target_loss, eval_every=0,
+                        faults=faults, fault_seed=fault_seed,
+                        staleness_weight=staleness_weight)
     opt = momentum_sgd(0.9) if inner == "momentum" else sgd()
     t0 = time.time()
     state, hist = train(grad_fn, params, opt, op, lr, batches, run_cfg,

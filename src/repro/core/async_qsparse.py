@@ -21,6 +21,13 @@ Per step t (Algorithm 2 lines 4-20), with s_r = [t+1 in I_T^{(r)}]:
                m_{t+1}^{(r)} = m_t^{(r)} + x_t^{(r)} - x̂_{t+1/2}^{(r)} - g
   master:      x̄̄_{t+1} = x̄̄_t - (1/R) sum_{r in S} g_t^{(r)}
   workers in S: x_{t+1}^{(r)} = x̂_{t+1}^{(r)} = x̄̄_{t+1}
+
+The *executed* staleness regime — a payload computed at t applied to
+the master at t+τ, with crash/recover and in-flight loss — is the
+engine's fault runtime (``engine.make_fault_step``, DESIGN.md §9);
+:func:`make_fault_step` / :func:`run_faults` below expose it under the
+historical state shape.  ``scenarios.defer_sync`` (moving the whole
+sync event) is only the modelled approximation of this.
 """
 
 from __future__ import annotations
@@ -51,6 +58,11 @@ class AsyncQsparseState(NamedTuple):
     # optional per-leaf-group ledgers (engine leaf_ledger=True)
     leaf_bits: Any = None
     leaf_bits_down: Any = None
+    # in-flight payload queue of the fault runtime (engine DESIGN.md §9)
+    # — None unless init(..., queue_depth=) allocated it
+    inflight: Any = None
+    arrive_at: Any = None
+    inflight_tau: Any = None
 
 
 def _replicate(tree, R: int):
@@ -58,10 +70,12 @@ def _replicate(tree, R: int):
 
 
 def init(params, inner_opt: GradientTransform, R: int,
-         downlink=None, leaf_ledger: bool = False) -> AsyncQsparseState:
+         downlink=None, leaf_ledger: bool = False,
+         queue_depth: Optional[int] = None) -> AsyncQsparseState:
     return AsyncQsparseState(*engine.init(params, inner_opt, R,
                                           downlink=downlink,
-                                          leaf_ledger=leaf_ledger))
+                                          leaf_ledger=leaf_ledger,
+                                          queue_depth=queue_depth))
 
 
 def make_step(
@@ -136,6 +150,54 @@ def make_superstep(
         return AsyncQsparseState(*new), losses, key
 
     return superstep
+
+
+def make_fault_step(
+    grad_fn: Callable,
+    inner_opt: GradientTransform,
+    operator,
+    lr_schedule: Callable,
+    R: int,
+    *,
+    queue_depth: int,
+    dispatch: Optional[DispatchConfig] = None,
+    downlink=None,
+    leaf_ledger: bool = False,
+    aggregate: str = "mean_R",
+    staleness_weight: str = "uniform",
+):
+    """The *executed* Algorithm-2 staleness regime (engine fault
+    runtime, DESIGN.md §9): a payload computed at t is applied to the
+    master at t+τ out of a per-worker in-flight queue, with worker
+    crash/recover and payload drop injectable via
+    ``scenarios.FaultSpec``.  The built step takes ``(state, batch,
+    fault_row, key)`` with ``fault_row`` an ``engine.FaultRow``;
+    allocate the state with ``init(..., queue_depth=queue_depth)``
+    (= the fault spec's ``depth``).  Drive with :func:`run_faults`."""
+    engine_step = engine.make_fault_step(
+        grad_fn, inner_opt, operator, lr_schedule, R,
+        queue_depth=queue_depth, dispatch=dispatch, global_rounds=False,
+        downlink=downlink, leaf_ledger=leaf_ledger, aggregate=aggregate,
+        staleness_weight=staleness_weight,
+    )
+
+    def step_fn(state: AsyncQsparseState, batch, fault_row, key):
+        new, loss = engine_step(
+            engine.EngineState(*state), batch, fault_row, key)
+        return AsyncQsparseState(*new), loss
+
+    return step_fn
+
+
+def run_faults(state, step_fn, batches, sync_mask, tables, key,
+               jit: bool = True):
+    """Drive the executed-staleness regime: sync_mask bool[T, R] plus
+    the FaultSpec's expanded ``tables(T, R)``.  The step keeps the
+    historical state shape end to end, so the engine driver threads it
+    through unchanged."""
+    new, losses = engine.run_faults(state, step_fn, batches, sync_mask,
+                                    tables, key, jit=jit)
+    return AsyncQsparseState(*new), losses
 
 
 def run(state, step_fn, batches, sync_mask, key, jit: bool = True):

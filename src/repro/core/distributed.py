@@ -77,6 +77,16 @@ class DistQsparseState(NamedTuple):
     view: Any = None          # leading worker axis R
     down_memory: Any = None   # leading worker axis R
     bits_down: Any = None     # downlink wire bits (server → worker)
+    # staleness-first fault runtime (DESIGN.md §9) — populated only by
+    # make_dist_fault_steps: the bounded per-worker in-flight payload
+    # queue.  Dense wire: a master-shaped pytree of [R, depth, ...]
+    # buffers; sparse wire: the compact (idx, val) wire buffers per
+    # leaf, [R, depth, ..., kcap].  arrive_at[r, s] is the global step
+    # at which slot s lands on the master (-1 = empty), inflight_tau
+    # its staleness τ.
+    inflight: Any = None
+    arrive_at: Any = None     # int32 [R, depth]
+    inflight_tau: Any = None  # int32 [R, depth]
 
 
 # ---------------------------------------------------------------------------
@@ -1395,6 +1405,609 @@ def make_dist_round(
             return fallback_core(state, batch_block, key, tail_mask)
     else:
         round_fallback = fallback_core
+
+    return init_fn, round_fallback, False
+
+
+# ---------------------------------------------------------------------------
+# staleness-first fault runtime (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def make_dist_fault_steps(
+    grad_fn: Callable,
+    inner_opt: GradientTransform,
+    compressor: ShardCompressor,
+    lr_schedule: Callable,
+    mesh,
+    data_axes: Sequence[str] = ("data",),
+    param_specs=None,
+    *,
+    queue_depth: int,
+    aggregate: str = "mean_R",
+    wire: str = "dense_psum",
+    staleness_weight: str = "uniform",
+    downlink: Optional[ShardCompressor] = None,
+    zero1: bool = False,
+):
+    """Mesh-engine counterpart of ``engine.make_fault_step``: the
+    *executed* staleness regime on both transports.  A payload computed
+    at step t (uplink error memory updated, wire bits charged *then*)
+    is enqueued into a bounded per-worker in-flight buffer and applied
+    to the master at t+τ; workers crash (state frozen), recover
+    (re-initialized from the current master, error memory lost), and
+    payloads drop in flight per the step's ``engine.FaultRow``.
+
+    Returns ``(init_fn, fault_local_step, fault_sync_step)``; both
+    steps take ``(state, batch, row, key)``.  The host drives the
+    dispatch from the deterministic fault tables
+    (``scenarios.fault_replay``): event steps — any scheduled sync row
+    or any arrival — go through ``fault_sync_step``, the rest through
+    ``fault_local_step`` (recover + alive-masked local phase only).
+
+    Wire semantics:
+
+    * ``dense_psum`` — the queue holds each worker's *decompressed*
+      payload per shard ([R, depth, ...] master-shaped buffers); the
+      arriving slots are summed per worker inside the manual region and
+      the cross-worker reduce is one psum, exactly the non-fault body's
+      pattern.
+    * ``sparse_allgather`` — delayed shards ride the existing compact
+      wire format: the queue holds the (idx, val) survivor buffers
+      themselves ([R, depth, ..., kcap]); at arrival the masked vals of
+      *all* queued buffers decode in the auto region via the same
+      scatter-add combine as the non-fault path (sentinel and zeroed
+      slots contribute nothing).
+
+    Both wires produce the same trajectories (states allclose, both
+    bits ledgers exact — the compact bits counting is the dense
+    channel's).  ``zero1`` and a compressed ``downlink`` are not
+    supported under faults on the mesh engine (the single-host engine
+    carries the compressed-downlink fault path); pass ``downlink`` only
+    as None/identity.
+    """
+    from repro.core.scenarios import (validate_aggregate,
+                                      validate_staleness_weight)
+    validate_aggregate(aggregate)
+    validate_staleness_weight(staleness_weight)
+    if wire not in ("dense_psum", "sparse_allgather"):
+        raise ValueError(f"unknown wire {wire!r}; expected 'dense_psum' "
+                         f"| 'sparse_allgather'")
+    if queue_depth < 1:
+        raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
+    if zero1:
+        raise ValueError(
+            "zero1 master sharding is not supported under faults: the "
+            "recover phase re-initializes workers from the full master "
+            "inside the manual region (gather-free); run faults with "
+            "zero1=False")
+    if downlink is not None and not chn.ShardChannel(
+            downlink, "downlink").is_identity():
+        raise ValueError(
+            "a compressed downlink is not supported under faults on the "
+            "mesh engine; use the single-host engine "
+            "(engine.make_fault_step) for compressed-downlink fault "
+            "studies, or downlink=None here")
+    daxes = tuple(data_axes)
+    R = worker_count(mesh, daxes)
+    manual = set(daxes)
+    compressor = _legacy_tp_kernel_guard(compressor, mesh, daxes, wire)
+    up = chn.ShardChannel(compressor, "uplink")
+    down = chn.ShardChannel(None, "downlink")
+    Dq = int(queue_depth)
+    damped = staleness_weight == "damped"
+    worker_specs = P(daxes)
+    batch_spec = P(daxes)
+
+    def _squeeze(tree):
+        return jax.tree_util.tree_map(lambda x: x[0], tree)
+
+    def _expand(tree):
+        return jax.tree_util.tree_map(lambda x: x[None], tree)
+
+    def _wsel(flag, new, old):
+        """Scalar-flag select over same-structure trees (in-body, one
+        worker): the new value only where ``flag``."""
+        return jax.tree_util.tree_map(
+            lambda n, o: jnp.where(flag, n.astype(o.dtype), o), new, old)
+
+    def _row_arrays(row):
+        """FaultRow → five [R] device arrays (worker-shardable)."""
+        as_r = lambda x, dt: jnp.asarray(x, dt).reshape((R,))  # noqa: E731
+        return (as_r(row.sync, bool), as_r(row.delay, jnp.int32),
+                as_r(row.alive, bool), as_r(row.drop, bool),
+                as_r(row.recover, bool))
+
+    def _check_queue(state):
+        if state.inflight is None or state.arrive_at is None:
+            raise ValueError(
+                "fault steps need the in-flight queue: build the state "
+                "with this factory's init_fn")
+
+    # ---- shared in-body phases ------------------------------------------
+    def _recover_and_local(master, local, memory, inner, view,
+                           alive, recover, step, batch):
+        """Recover phase + alive-masked local phase for one worker
+        (squeezed trees).  Returns (half, memory, inner, view, loss) —
+        the crashed workers' iterate/inner stay frozen, recovered
+        workers restart from the master with fresh memory/inner."""
+        l0, v0 = _squeeze(local), _squeeze(view)
+        m0, i0 = _squeeze(memory), _squeeze(inner)
+        fresh = jax.tree_util.tree_map(
+            lambda x, l: x.astype(l.dtype), master, l0)
+        l0 = _wsel(recover, fresh, l0)
+        v0 = _wsel(recover, jax.tree_util.tree_map(
+            lambda x, v: x.astype(v.dtype), master, v0), v0)
+        m0 = _wsel(recover, jax.tree_util.tree_map(jnp.zeros_like, m0), m0)
+        i0 = _wsel(recover, inner_opt.init(fresh), i0)
+        loss, grads = grad_fn(l0, _squeeze(batch))
+        updates, i1 = inner_opt.update(grads, i0, l0, lr_schedule(step))
+        half = apply_updates(l0, updates)
+        half = _wsel(alive, half, l0)
+        i1 = _wsel(alive, i1, i0)
+        return half, m0, i1, v0, loss
+
+    def _uplink_payload(m0, v0, half, compute, key, compact: bool):
+        """Compute-time error feedback, masked to the computing workers
+        (scheduled sync AND alive): memory and bits advance *now*, the
+        payload is handed to the queue.  Dense form returns the
+        decompressed g tree; compact form the wire arrays."""
+        delta = jax.tree_util.tree_map(
+            lambda m, x, h: m + x.astype(jnp.float32)
+            - h.astype(jnp.float32),
+            m0, v0, half,
+        )
+        sub = jax.random.fold_in(key, 1)
+        if compact:
+            payloads, _td, wire_bits, new_mem = compressor.compact(
+                delta, param_specs, key=sub)
+        else:
+            g, new_mem, wire_bits = up.apply(delta, param_specs, key=sub)
+        new_mem = jax.tree_util.tree_map(
+            lambda old, nm: jnp.where(compute, nm, old), m0, new_mem)
+        wire_bits = jnp.where(compute, wire_bits, 0.0)
+        if compact:
+            arrays = []
+            for pl in payloads:
+                if pl[0] == "dense":
+                    arrays.append(jnp.where(compute, pl[1],
+                                            jnp.zeros_like(pl[1])))
+                else:
+                    _, idx, sel, _ax, _moved = pl
+                    arrays.append(idx)
+                    arrays.append(jnp.where(compute, sel,
+                                            jnp.zeros_like(sel)))
+            return arrays, new_mem, wire_bits
+        g = jax.tree_util.tree_map(
+            lambda gg: jnp.where(compute, gg, jnp.zeros_like(gg)), g)
+        return g, new_mem, wire_bits
+
+    # ---- local fault step (no event this step) --------------------------
+    def local_fault_body(master, local, memory, inner, view,
+                         sync, delay, alive, drop, recover,
+                         step, batch, key):
+        half, m0, i1, v0, loss = _recover_and_local(
+            master, local, memory, inner, view, alive[0], recover[0],
+            step, batch)
+        loss = jax.lax.pmean(loss, daxes)
+        return (_expand(half), _expand(m0), _expand(i1), _expand(v0),
+                loss)
+
+    def fault_local_step(state: DistQsparseState, batch, row, key):
+        _check_queue(state)
+        rows = _row_arrays(row)
+        mapped = shard_map(
+            local_fault_body, mesh=mesh,
+            in_specs=(P(), worker_specs, worker_specs, worker_specs,
+                      worker_specs) + (worker_specs,) * 5
+            + (P(), batch_spec, P()),
+            out_specs=(worker_specs,) * 4 + (P(),),
+            axis_names=manual, check_vma=True,
+        )
+        local, memory, inner, view, loss = mapped(
+            state.master, state.local, state.memory, state.inner,
+            state.view, *rows, state.step, batch, key)
+        return state._replace(local=local, memory=memory, inner=inner,
+                              view=view, step=state.step + 1), loss
+
+    # ---- dense wire: queue + arrivals inside the manual region ----------
+    def dense_fault_body(master, local, memory, inner, view,
+                         q, arrive, tau,
+                         sync, delay, alive, drop, recover,
+                         step, batch, key):
+        alv, rec = alive[0], recover[0]
+        half, m0, i1, v0, loss = _recover_and_local(
+            master, local, memory, inner, view, alv, rec, step, batch)
+        compute = sync[0] & alv
+        g, new_mem, wire_bits = _uplink_payload(
+            m0, v0, half, compute, key, compact=False)
+        # enqueue: slot t % depth, arrival at t + τ (dropped payloads
+        # were charged and compensated but never travel)
+        slot = jnp.mod(step, Dq)
+        keep = compute & ~drop[0]
+        qs = _squeeze(q)                    # [Dq, ...] this worker
+        arr_q, tau_q = arrive[0], tau[0]    # [Dq]
+        qs = jax.tree_util.tree_map(
+            lambda qq, gg: qq.at[slot].set(jnp.where(keep, gg, qq[slot])),
+            qs, g)
+        arr_q = arr_q.at[slot].set(
+            jnp.where(keep, step + delay[0], arr_q[slot]))
+        tau_q = tau_q.at[slot].set(jnp.where(keep, delay[0], tau_q[slot]))
+        # apply: every in-flight payload landing this step
+        landing = arr_q == step             # [Dq]
+
+        def pay_of(qq):
+            shape = (Dq,) + (1,) * (qq.ndim - 1)
+            p = jnp.where(landing.reshape(shape), qq, jnp.zeros_like(qq))
+            if damped:
+                w = 1.0 / (1.0 + tau_q.astype(jnp.float32))
+                p = p * w.reshape(shape)
+            return p
+
+        pays = jax.tree_util.tree_map(pay_of, qs)
+        pay_sum = jax.tree_util.tree_map(
+            lambda p: jnp.sum(p, axis=0), pays)
+        if aggregate == "mean_R":
+            g_agg = jax.tree_util.tree_map(
+                lambda p: jax.lax.psum(p, daxes) / R, pay_sum)
+        elif aggregate == "mean_S":
+            n_arr = jnp.maximum(jax.lax.psum(
+                jnp.sum(landing.astype(jnp.float32)), daxes), 1.0)
+            g_agg = jax.tree_util.tree_map(
+                lambda p: jax.lax.psum(p, daxes) / n_arr, pay_sum)
+        else:  # support_weighted: arriving per-coordinate support
+            g_agg = jax.tree_util.tree_map(
+                lambda p, c: jax.lax.psum(jnp.sum(p, axis=0), daxes)
+                / jnp.maximum(jax.lax.psum(jnp.sum(
+                    (c != 0).astype(jnp.float32), axis=0), daxes), 1.0),
+                pays, pays)
+        new_master = jax.tree_util.tree_map(
+            lambda x, gg: (x.astype(jnp.float32) - gg).astype(x.dtype),
+            master, g_agg)
+        # dequeue applied slots
+        qs = jax.tree_util.tree_map(
+            lambda qq: jnp.where(
+                landing.reshape((Dq,) + (1,) * (qq.ndim - 1)),
+                jnp.zeros_like(qq), qq),
+            qs)
+        arr_q = jnp.where(landing, -1, arr_q)
+        tau_q = jnp.where(landing, 0, tau_q)
+        # broadcast to workers whose payload landed (and are alive)
+        arr_any = jnp.any(landing)
+        b = arr_any & alv
+        new_local = _wsel(b, new_master, half)
+        new_view = _wsel(b, new_master, v0)
+        total_bits = jax.lax.psum(wire_bits, daxes)
+        loss = jax.lax.pmean(loss, daxes)
+        return (new_master, _expand(new_local), _expand(new_mem),
+                _expand(i1), _expand(new_view), _expand(qs),
+                arr_q[None], tau_q[None], arr_any[None], total_bits,
+                loss)
+
+    def fault_sync_step_dense(state: DistQsparseState, batch, row, key):
+        _check_queue(state)
+        rows = _row_arrays(row)
+        mapped = shard_map(
+            dense_fault_body, mesh=mesh,
+            in_specs=(P(), worker_specs, worker_specs, worker_specs,
+                      worker_specs, worker_specs, worker_specs,
+                      worker_specs) + (worker_specs,) * 5
+            + (P(), batch_spec, P()),
+            out_specs=(P(),) + (worker_specs,) * 8 + (P(), P()),
+            axis_names=manual, check_vma=True,
+        )
+        (master, local, memory, inner, view, q, arrive, tau, arr_any,
+         wire_bits, loss) = mapped(
+            state.master, state.local, state.memory, state.inner,
+            state.view, state.inflight, state.arrive_at,
+            state.inflight_tau, *rows, state.step, batch, key)
+        alive_r = rows[2]
+        n_recv = jnp.sum((arr_any & alive_r).astype(jnp.float32))
+        down_cost = n_recv * jnp.float32(down.dense_bits(state.master))
+        return state._replace(
+            master=master, local=local, memory=memory, inner=inner,
+            view=view, step=state.step + 1,
+            bits=state.bits + wire_bits,
+            rounds=state.rounds + jnp.any(arr_any).astype(jnp.int32),
+            bits_down=state.bits_down + down_cost,
+            inflight=q, arrive_at=arrive, inflight_tau=tau,
+        ), loss
+
+    # ---- sparse wire: compact buffers queue in the auto region ----------
+    def sparse_fault_body(master, local, memory, inner, view,
+                          sync, delay, alive, drop, recover,
+                          step, batch, key):
+        alv, rec = alive[0], recover[0]
+        half, m0, i1, v0, loss = _recover_and_local(
+            master, local, memory, inner, view, alv, rec, step, batch)
+        compute = sync[0] & alv
+        arrays, new_mem, wire_bits = _uplink_payload(
+            m0, v0, half, compute, key, compact=True)
+        total_bits = jax.lax.psum(wire_bits, daxes)
+        loss = jax.lax.pmean(loss, daxes)
+        return (_expand(half), _expand(new_mem), _expand(i1),
+                _expand(v0), [a[None] for a in arrays], total_bits, loss)
+
+    def fault_sync_step_sparse(state: DistQsparseState, batch, row, key):
+        _check_queue(state)
+        rows = _row_arrays(row)
+        sync_r, delay_r, alive_r, drop_r, _rec = rows
+        meta = compressor.leaf_meta(state.master, param_specs)
+        n_arrays = sum(1 if mt[0] == "dense" else 2 for mt in meta)
+        mapped = shard_map(
+            sparse_fault_body, mesh=mesh,
+            in_specs=(P(), worker_specs, worker_specs, worker_specs,
+                      worker_specs) + (worker_specs,) * 5
+            + (P(), batch_spec, P()),
+            out_specs=(worker_specs,) * 4
+            + ([P(tuple(daxes))] * n_arrays, P(), P()),
+            axis_names=manual, check_vma=True,
+        )
+        half_all, memory, inner, view, arrays, wire_bits, loss = mapped(
+            state.master, state.local, state.memory, state.inner,
+            state.view, *rows, state.step, batch, key)
+        # ---- enqueue into the compact queue (auto region) --------------
+        compute = sync_r & alive_r
+        keep = compute & ~drop_r
+        slot = jnp.mod(state.step, Dq)
+
+        def put(buf, payload):
+            kmask = keep.reshape((R,) + (1,) * (payload.ndim - 1))
+            return buf.at[:, slot].set(
+                jnp.where(kmask, payload, buf[:, slot]))
+
+        bufs = list(state.inflight)
+        it = iter(arrays)
+        new_bufs = []
+        bi = 0
+        for kind, _ax, _moved in meta:
+            if kind == "dense":
+                new_bufs.append(put(bufs[bi], next(it)))
+                bi += 1
+            else:
+                new_bufs.append(put(bufs[bi], next(it)))      # idx
+                new_bufs.append(put(bufs[bi + 1], next(it)))  # val
+                bi += 2
+        arrive = state.arrive_at.at[:, slot].set(
+            jnp.where(keep, state.step + delay_r,
+                      state.arrive_at[:, slot]))
+        tau = state.inflight_tau.at[:, slot].set(
+            jnp.where(keep, delay_r, state.inflight_tau[:, slot]))
+        # ---- apply: decode every landing buffer, scatter-add combine ---
+        landing = arrive == state.step                      # [R, Dq]
+        w = (1.0 / (1.0 + tau.astype(jnp.float32))) if damped else None
+        n_arr = jnp.maximum(jnp.sum(landing.astype(jnp.float32)), 1.0)
+        from repro.kernels.dispatch import decode_rows
+        master_leaves, mtd = jax.tree_util.tree_flatten(state.master)
+        it = iter(new_bufs)
+        means = []
+        for (kind, ax, moved), mleaf in zip(meta, master_leaves):
+            if kind == "dense":
+                buf = next(it)                              # [R, Dq, ...]
+                lm = landing.reshape((R, Dq) + (1,) * (buf.ndim - 2))
+                p = jnp.where(lm, buf, jnp.zeros_like(buf))
+                if damped:
+                    p = p * w.reshape((R, Dq) + (1,) * (buf.ndim - 2))
+                s = jnp.sum(p, axis=(0, 1))
+                if aggregate == "mean_R":
+                    means.append(s / R)
+                elif aggregate == "mean_S":
+                    means.append(s / n_arr)
+                else:
+                    cnt = jnp.sum((p != 0).astype(jnp.float32),
+                                  axis=(0, 1))
+                    means.append(s / jnp.maximum(cnt, 1.0))
+                continue
+            idx_buf = next(it)                  # [R, Dq, ..., kcap]
+            val_buf = next(it)
+            lm = landing.reshape((R, Dq) + (1,) * (val_buf.ndim - 2))
+            vals = jnp.where(lm, val_buf, jnp.zeros_like(val_buf))
+            if damped:
+                vals = vals * w.reshape((R, Dq) + (1,) * (val_buf.ndim - 2))
+            kcap = idx_buf.shape[-1]
+            ii = idx_buf.reshape(-1, kcap)
+            ss = vals.reshape(-1, kcap)
+            dense = decode_rows(ii, ss, moved[-1])
+            dense = dense.reshape((R, Dq) + tuple(moved))
+            s = jnp.moveaxis(jnp.sum(dense, axis=(0, 1)), -1, ax)
+            if aggregate == "mean_R":
+                means.append(s / R)
+            elif aggregate == "mean_S":
+                means.append(s / n_arr)
+            else:
+                cntd = decode_rows(ii, (ss != 0).astype(jnp.float32),
+                                   moved[-1])
+                cnt = jnp.moveaxis(
+                    jnp.sum(cntd.reshape((R, Dq) + tuple(moved)),
+                            axis=(0, 1)), -1, ax)
+                means.append(s / jnp.maximum(cnt, 1.0))
+        g_agg = jax.tree_util.tree_unflatten(mtd, means)
+        new_master = jax.tree_util.tree_map(
+            lambda x, gg: (x.astype(jnp.float32) - gg).astype(x.dtype),
+            state.master, g_agg)
+        # ---- dequeue: zero applied vals, reset sentinels ---------------
+        it = iter(new_bufs)
+        deq = []
+        for kind, _ax, moved in meta:
+            if kind == "dense":
+                buf = next(it)
+                lm = landing.reshape((R, Dq) + (1,) * (buf.ndim - 2))
+                deq.append(jnp.where(lm, jnp.zeros_like(buf), buf))
+                continue
+            idx_buf = next(it)
+            val_buf = next(it)
+            lm = landing.reshape((R, Dq) + (1,) * (val_buf.ndim - 2))
+            deq.append(jnp.where(lm, jnp.full_like(idx_buf, moved[-1]),
+                                 idx_buf))
+            deq.append(jnp.where(lm, jnp.zeros_like(val_buf), val_buf))
+        arrive = jnp.where(landing, -1, arrive)
+        tau = jnp.where(landing, 0, tau)
+        # ---- broadcast to workers whose payload landed -----------------
+        b = jnp.any(landing, axis=1) & alive_r
+
+        def pick(x, o):
+            bb = jnp.broadcast_to(x[None], o.shape).astype(o.dtype)
+            sel = jnp.where(b.reshape((-1,) + (1,) * (o.ndim - 1)), bb, o)
+            return jax.lax.with_sharding_constraint(
+                sel, NamedSharding(mesh, P(tuple(daxes))))
+
+        new_local = jax.tree_util.tree_map(pick, new_master, half_all)
+        new_view = jax.tree_util.tree_map(pick, new_master, view)
+        n_recv = jnp.sum(b.astype(jnp.float32))
+        down_cost = n_recv * jnp.float32(down.dense_bits(state.master))
+        return state._replace(
+            master=new_master, local=new_local, memory=memory,
+            inner=inner, view=new_view, step=state.step + 1,
+            bits=state.bits + wire_bits,
+            rounds=state.rounds + jnp.any(landing).astype(jnp.int32),
+            bits_down=state.bits_down + down_cost,
+            inflight=tuple(deq), arrive_at=arrive, inflight_tau=tau,
+        ), loss
+
+    fault_sync_step = (fault_sync_step_sparse if wire == "sparse_allgather"
+                       else fault_sync_step_dense)
+
+    # ---- init ------------------------------------------------------------
+    def init_fn(params):
+        def body(p):
+            local = _expand(p)
+            memory = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), local)
+            inner = _expand(inner_opt.init(p))
+            out = [p, local, memory, inner, local]
+            if wire == "dense_psum":
+                out.append(jax.tree_util.tree_map(
+                    lambda x: jnp.zeros((1, Dq) + x.shape, jnp.float32),
+                    p))
+            out.append(jnp.full((1, Dq), -1, jnp.int32))
+            out.append(jnp.zeros((1, Dq), jnp.int32))
+            return tuple(out)
+
+        nq = 1 if wire == "dense_psum" else 0
+        mapped = shard_map(
+            body, mesh=mesh, in_specs=(P(),),
+            out_specs=(P(),) + (worker_specs,) * (4 + nq + 2),
+            axis_names=manual, check_vma=True,
+        )
+        out = jax.jit(mapped)(params)
+        master, local, memory, inner, view = out[:5]
+        if wire == "dense_psum":
+            inflight, arrive, tau = out[5], out[6], out[7]
+        else:
+            arrive, tau = out[5], out[6]
+            # compact wire buffers: [R, depth, ..., kcap] per sparse
+            # leaf (idx at the out-of-row sentinel, vals zero), a dense
+            # [R, depth, leaf] buffer per dense-payload leaf — sized
+            # exactly like axis_topk_compact's emissions
+            from repro.kernels import dispatch as dsp
+            leaves = jax.tree_util.tree_leaves(master)
+            meta = compressor.leaf_meta(master, param_specs)
+            plans = compressor._plans(len(leaves))
+            bufs = []
+            for leaf, (kind, ax, moved), plan in zip(leaves, meta, plans):
+                if kind == "dense":
+                    bufs.append(jnp.zeros((R, Dq) + leaf.shape,
+                                          jnp.float32))
+                    continue
+                n = moved[-1]
+                kcap = dsp.capacity(resolve_k(plan[1], n), n)
+                shape = (R, Dq) + tuple(moved[:-1]) + (kcap,)
+                bufs.append(jnp.full(shape, n, jnp.int32))
+                bufs.append(jnp.zeros(shape, jnp.float32))
+            inflight = tuple(bufs)
+        return DistQsparseState(
+            master=master, local=local, memory=memory, inner=inner,
+            step=jnp.zeros((), jnp.int32),
+            bits=jnp.zeros((), jnp.float32),
+            rounds=jnp.zeros((), jnp.int32),
+            view=view, down_memory=None,
+            bits_down=jnp.zeros((), jnp.float32),
+            inflight=inflight, arrive_at=arrive, inflight_tau=tau,
+        )
+
+    return init_fn, fault_local_step, fault_sync_step
+
+
+def make_dist_fault_round(
+    grad_fn: Callable,
+    inner_opt: GradientTransform,
+    compressor: ShardCompressor,
+    lr_schedule: Callable,
+    mesh,
+    data_axes: Sequence[str] = ("data",),
+    param_specs=None,
+    *,
+    queue_depth: int,
+    aggregate: str = "mean_R",
+    wire: str = "dense_psum",
+    staleness_weight: str = "uniform",
+):
+    """Round program for the mesh fault runtime: rounds close at every
+    *event* step (``rounds.compile_fault_rounds``), so the scanned head
+    is pure fault-local steps and the tail one fault-sync step.
+
+    Returns ``(init_fn, round_fn, fused)`` with ``round_fn(state,
+    batch_block, row_block, key) -> (state, losses[L], key)`` —
+    ``row_block`` an ``engine.FaultRow`` of [L, R] arrays (stacked per
+    step, ``engine.index_rows(rows, slice(start, stop))``).  Bit-for-bit
+    the per-step fault trajectories; on 0.4.x TP>1 meshes degrades to
+    the per-step host composition like ``make_dist_round``.
+    """
+    init_fn, fls, fss = make_dist_fault_steps(
+        grad_fn, inner_opt, compressor, lr_schedule, mesh, data_axes,
+        param_specs, queue_depth=queue_depth, aggregate=aggregate,
+        wire=wire, staleness_weight=staleness_weight)
+    from repro.core.engine import FaultRow, donated_jit
+    fused = round_scan_supported(mesh, data_axes)
+
+    def _tail(rows):
+        return FaultRow(*(jnp.asarray(x)[-1] for x in rows))
+
+    if fused:
+        def round_program(state, batch_block, row_block, key):
+            rows = FaultRow(*(jnp.asarray(x) for x in row_block))
+
+            def body(carry, xs):
+                state, key = carry
+                batch, row = xs
+                key, sub = jax.random.split(key)
+                state, loss = fls(state, batch, row, sub)
+                return (state, key), loss
+
+            head_b = jax.tree_util.tree_map(lambda x: x[:-1], batch_block)
+            head_r = FaultRow(*(x[:-1] for x in rows))
+            tail_b = jax.tree_util.tree_map(lambda x: x[-1], batch_block)
+            (state, key), head_losses = jax.lax.scan(
+                body, (state, key), (head_b, head_r))
+            key, sub = jax.random.split(key)
+            state, tail_loss = fss(state, tail_b, _tail(rows), sub)
+            return (state, jnp.concatenate([head_losses,
+                                            tail_loss[None]]), key)
+
+        return init_fn, donated_jit(round_program), True
+
+    if "fault_round" not in _ROUND_FALLBACK_WARNED:
+        warnings.warn(
+            "the fused fault round program cannot be partitioned on a "
+            "0.4.x jax mesh with a >1 tensor-parallel axis; falling "
+            "back to per-step dispatch — identical trajectories, only "
+            "host overhead differs.", stacklevel=2)
+        _ROUND_FALLBACK_WARNED.add("fault_round")
+    jls = donated_jit(fls)
+    jss = donated_jit(fss)
+
+    def round_fallback(state, batch_block, row_block, key):
+        rows = FaultRow(*(jnp.asarray(x) for x in row_block))
+        L = jax.tree_util.tree_leaves(batch_block)[0].shape[0]
+        losses = []
+        for i in range(L):
+            batch = jax.tree_util.tree_map(lambda x, i=i: x[i], batch_block)
+            row = FaultRow(*(x[i] for x in rows))
+            key, sub = jax.random.split(key)
+            fn = jss if i == L - 1 else jls
+            state, loss = fn(state, batch, row, sub)
+            losses.append(loss)
+        return state, jnp.stack(losses), key
 
     return init_fn, round_fallback, False
 

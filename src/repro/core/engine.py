@@ -88,6 +88,17 @@ class EngineState(NamedTuple):
     # come from ``leaf_group_names(params)``.
     leaf_bits: Any = None
     leaf_bits_down: Any = None
+    # staleness-first fault runtime (DESIGN.md §9): the in-flight
+    # payload queue — a per-worker ring of ``queue_depth`` slots holding
+    # *decompressed* payload values g (f32, zeros in empty slots),
+    # tagged with their global arrival step (-1 = empty) and staleness
+    # τ.  A payload computed at t sits in slot ``t % depth`` until its
+    # arrival step; depth = max_delay + 1 guarantees a slot is free
+    # again before its next producer comes around.  None unless
+    # init(..., queue_depth=) allocated it.
+    inflight: Any = None       # payload values, [R, depth, ...] leaves
+    arrive_at: Any = None      # int32 [R, depth], global step; -1 empty
+    inflight_tau: Any = None   # int32 [R, depth], payload staleness
 
 
 def replicate(tree, R: int):
@@ -105,7 +116,8 @@ def leaf_group_names(params) -> tuple:
 
 
 def init(params, inner_opt: GradientTransform, R: int,
-         downlink=None, leaf_ledger: bool = False) -> EngineState:
+         downlink=None, leaf_ledger: bool = False,
+         queue_depth: Optional[int] = None) -> EngineState:
     """``downlink``: the server→worker compression operator (or
     Channel) this state will be stepped with — needed here only to
     allocate the server-side error memory; None/Identity allocates
@@ -114,10 +126,17 @@ def init(params, inner_opt: GradientTransform, R: int,
     ``leaf_ledger``: allocate the optional per-top-level-leaf-group
     wire-bit ledgers ([G] f32 per direction, G = number of top-level
     parameter groups) — pass the same flag to :func:`make_step`.
+
+    ``queue_depth``: allocate the in-flight payload queue of the fault
+    runtime (``FaultSpec.depth`` slots per worker; pass the same value
+    to :func:`make_fault_step`).  None = fault-free state (the queue
+    fields stay None).
     """
     local = replicate(params, R)
     down = chn.as_channel(downlink, "downlink")
     G = len(leaf_group_names(params)) if leaf_ledger else 0
+    if queue_depth is not None and queue_depth < 1:
+        raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
     return EngineState(
         # own copies: the state is donated by engine.run/run_rounds, so
         # master may not alias the caller's params and master_view may
@@ -136,6 +155,13 @@ def init(params, inner_opt: GradientTransform, R: int,
         leaf_bits=jnp.zeros((G,), jnp.float32) if leaf_ledger else None,
         leaf_bits_down=(jnp.zeros((G,), jnp.float32) if leaf_ledger
                         else None),
+        inflight=(None if queue_depth is None else jax.tree_util.tree_map(
+            lambda x: jnp.zeros((R, queue_depth) + x.shape, jnp.float32),
+            params)),
+        arrive_at=(None if queue_depth is None
+                   else jnp.full((R, queue_depth), -1, jnp.int32)),
+        inflight_tau=(None if queue_depth is None
+                      else jnp.zeros((R, queue_depth), jnp.int32)),
     )
 
 
@@ -637,6 +663,500 @@ def run_rounds(
 
 
 # ---------------------------------------------------------------------------
+# staleness-first fault runtime (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+class FaultRow(NamedTuple):
+    """One step's fault data over the worker axis (all leading-R arrays;
+    the [T, R]-stacked numpy form from :func:`fault_rows` drives the
+    per-step loop and the scanned fault superstep)."""
+
+    sync: Any      # bool[R]  — scheduled sync fires at this step
+    delay: Any     # int32[R] — staleness τ of a payload computed now
+    alive: Any     # bool[R]  — worker is up this step
+    drop: Any      # bool[R]  — a payload computed now is lost in flight
+    recover: Any   # bool[R]  — first alive step after an outage
+
+
+def fault_rows(mask, tables, R: int) -> FaultRow:
+    """Stack a [T]/[T, R] sync mask and expanded
+    :class:`~repro.core.scenarios.FaultTables` into one [T, R] FaultRow
+    (numpy).  Slice step t with :func:`index_rows`."""
+    m = np.asarray(mask, bool)
+    if m.ndim == 1:
+        m = np.broadcast_to(m[:, None], (m.shape[0], R)).copy()
+    T = m.shape[0]
+    if tables.delay.shape[0] < T or tables.delay.shape[1] != R:
+        raise ValueError(
+            f"fault tables of shape {tables.delay.shape} don't cover the "
+            f"[{T}, {R}] mask — expand the spec with tables(T, R)")
+    return FaultRow(sync=m,
+                    delay=np.asarray(tables.delay[:T], np.int32),
+                    alive=np.asarray(tables.alive[:T], bool),
+                    drop=np.asarray(tables.drop[:T], bool),
+                    recover=np.asarray(tables.recover[:T], bool))
+
+
+def index_rows(rows: FaultRow, sl) -> FaultRow:
+    """Slice stacked [T, R] fault rows along the step axis."""
+    return FaultRow(*(np.asarray(x)[sl] for x in rows))
+
+
+def make_fault_step(
+    grad_fn: Callable,               # (params, batch) -> (loss, grads)
+    inner_opt: GradientTransform,
+    operator: CompressionOp | Any,
+    lr_schedule: Callable,
+    R: int,
+    *,
+    queue_depth: int,
+    dispatch: Optional[dsp.DispatchConfig] = None,
+    global_rounds: bool = False,
+    downlink=None,
+    leaf_ledger: bool = False,
+    aggregate: str = "mean_R",
+    staleness_weight: str = "uniform",
+):
+    """Build the jittable fault/staleness step (DESIGN.md §9).
+
+    Same algebra as :func:`make_step` with the sync event split into a
+    *compute* time and an *apply* time.  Per step t, given the step's
+    :class:`FaultRow`:
+
+    1. **recover** — workers on their first alive step after an outage
+       re-initialize from the current master: local/view ← x̄_t, error
+       memory ← 0, inner-opt state ← fresh.  (The crash lost them.)
+    2. **local phase** — alive workers take the usual local step; dead
+       workers' state is frozen.
+    3. **compute** (scheduled sync AND alive): the exact
+       error-compensated payload g of ``make_step`` — uplink error
+       memory updated *now*, wire bits charged *now* — then g is
+       *enqueued* with arrival step t+τ (τ = the row's delay) instead
+       of being applied.  Dropped payloads are charged and compensated
+       but never enqueued: error feedback absorbs the loss.
+    4. **apply** — every in-flight payload whose arrival step is t
+       (from any compute step ≤ t) joins this step's aggregation,
+       weighted per ``staleness_weight``: "uniform" applies payloads
+       exactly as computed (bit-for-bit the fault-free math when τ≡0),
+       "damped" scales each by 1/(1+τ).  The aggregate rule then
+       divides as in ``make_step`` ("mean_S" counts *arriving
+       payloads*; "support_weighted" counts arriving support).
+    5. **broadcast** — workers contributing an arrival this step (and
+       alive) receive the new master (exact or compressed downlink,
+       as in ``make_step``); applied queue slots are zeroed.
+
+    With trivial fault rows (τ≡0, all alive, no drops) every phase
+    reduces bit-for-bit to ``make_step``'s — enqueue and apply collapse
+    into the same step and the queue holds only zeros — which
+    ``tests/test_faults.py`` pins.
+
+    The built step takes ``(state, batch, row, key)`` with ``row`` a
+    :class:`FaultRow`; the state must have been allocated with
+    ``init(..., queue_depth=queue_depth)``.
+    """
+    from repro.core.scenarios import (validate_aggregate,
+                                      validate_staleness_weight)
+    validate_aggregate(aggregate)
+    validate_staleness_weight(staleness_weight)
+    if queue_depth < 1:
+        raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
+    up_ch = (operator if isinstance(operator, chn.Channel)
+             else chn.Channel(operator, "uplink", dispatch))
+    down_ch = chn.as_channel(downlink, "downlink", dispatch)
+    compressed_down = not down_ch.is_identity()
+    local_phase = _make_local_phase(grad_fn, inner_opt, lr_schedule)
+    Dq = int(queue_depth)
+    RD = R * Dq
+
+    def wsel(mask_r, new, old):
+        """Per-worker select over leading-R trees."""
+        def one(n, o):
+            shape = (R,) + (1,) * (n.ndim - 1)
+            return jnp.where(mask_r.reshape(shape), n, o)
+        return jax.tree_util.tree_map(one, new, old)
+
+    def recover_phase(state: EngineState, rec):
+        bcast = replicate(state.master, R)
+        fresh_local = jax.tree_util.tree_map(
+            lambda b, l: b.astype(l.dtype), bcast, state.local)
+        return state._replace(
+            local=wsel(rec, fresh_local, state.local),
+            master_view=wsel(rec, jax.tree_util.tree_map(
+                lambda b, v: b.astype(v.dtype), bcast, state.master_view),
+                state.master_view),
+            memory=wsel(rec, jax.tree_util.tree_map(
+                jnp.zeros_like, state.memory), state.memory),
+            inner=wsel(rec, jax.vmap(inner_opt.init)(fresh_local),
+                       state.inner),
+        )
+
+    def step_fn(state: EngineState, batch, row: FaultRow, key):
+        if state.inflight is None or state.arrive_at is None:
+            raise ValueError(
+                "fault step needs the in-flight queue: initialize with "
+                f"engine.init(..., queue_depth={Dq})")
+        if state.arrive_at.shape != (R, Dq):
+            raise ValueError(
+                f"state queue depth {state.arrive_at.shape} != "
+                f"({R}, {Dq}) this step was built for")
+        if compressed_down and state.down_memory is None:
+            raise ValueError(
+                "compressed downlink needs server-side error memory: "
+                "initialize with engine.init(..., downlink=<op>)")
+        if leaf_ledger and state.leaf_bits is None:
+            raise ValueError(
+                "per-leaf ledger needs state fields: initialize with "
+                "engine.init(..., leaf_ledger=True)")
+        if state.bits_down is None:
+            state = state._replace(bits_down=jnp.zeros((), jnp.float32))
+        as_r = lambda x, dt: jnp.broadcast_to(  # noqa: E731
+            jnp.asarray(x, dt).reshape(-1), (R,))
+        row = FaultRow(sync=as_r(row.sync, bool),
+                       delay=as_r(row.delay, jnp.int32),
+                       alive=as_r(row.alive, bool),
+                       drop=as_r(row.drop, bool),
+                       recover=as_r(row.recover, bool))
+
+        state = jax.lax.cond(jnp.any(row.recover),
+                             lambda s: recover_phase(s, row.recover),
+                             lambda s: s, state)
+
+        half_raw, inner_raw, losses = local_phase(state, batch)
+        # dead workers take no local step: their iterate and inner
+        # state stay frozen (the gradient is computed and discarded —
+        # masking beats ragged shapes under vmap)
+        half = wsel(row.alive, half_raw, state.local)
+        inner = wsel(row.alive, inner_raw, state.inner)
+
+        compute = row.sync & row.alive
+        pending = state.arrive_at == state.step            # [R, Dq]
+        any_event = (jnp.any(compute) | jnp.any(pending))
+
+        if leaf_ledger:
+            from repro.core.policy import leaf_groups
+            _gnames, gidx = leaf_groups(state.master)
+            seg = jnp.asarray(gidx, jnp.int32)
+            G = len(_gnames)
+
+        def group_bits(per_leaf_bits, s_r):
+            vec = jax.ops.segment_sum(
+                jnp.stack([jnp.asarray(b, jnp.float32)
+                           for b in per_leaf_bits]),
+                seg, num_segments=G)
+            return jnp.where(s_r, vec, jnp.zeros_like(vec))
+
+        def worker_update(m_r, view_r, half_r, key_r, s_r):
+            # identical to make_step's: compute-time error feedback
+            acc = jax.tree_util.tree_map(
+                lambda m, x, h: m + x.astype(jnp.float32)
+                - h.astype(jnp.float32),
+                m_r, view_r, half_r,
+            )
+            if leaf_ledger:
+                g, m_out, bits, lb = up_ch.apply(key_r, acc, per_leaf=True)
+                gvec = group_bits(lb, s_r)
+            else:
+                g, m_out, bits = up_ch.apply(key_r, acc)
+                gvec = jnp.zeros((0,), jnp.float32)
+            g = jax.tree_util.tree_map(
+                lambda gg: jnp.where(s_r, gg, jnp.zeros_like(gg)), g
+            )
+            new_m = jax.tree_util.tree_map(
+                lambda m, mm: jnp.where(s_r, mm, m), m_r, m_out
+            )
+            return g, new_m, jnp.where(s_r, bits, 0.0), gvec
+
+        def event_phase(_):
+            keys = jax.random.split(key, R)
+            g_all, new_mem, bits_all, gvec_all = jax.vmap(worker_update)(
+                state.memory, state.master_view, half, keys, compute
+            )
+            new_leaf_bits = (state.leaf_bits + jnp.sum(gvec_all, axis=0)
+                             if leaf_ledger else state.leaf_bits)
+            # ---- enqueue: slot t % depth, arrival at t + τ ----------
+            slot = jnp.mod(state.step, Dq)
+            keep = compute & ~row.drop
+            q = jax.tree_util.tree_map(
+                lambda qq, gg: qq.at[:, slot].set(
+                    jnp.where(keep.reshape((R,) + (1,) * (gg.ndim - 1)),
+                              gg, qq[:, slot])),
+                state.inflight, g_all)
+            arrive = state.arrive_at.at[:, slot].set(
+                jnp.where(keep, state.step + row.delay,
+                          state.arrive_at[:, slot]))
+            tau = state.inflight_tau.at[:, slot].set(
+                jnp.where(keep, row.delay, state.inflight_tau[:, slot]))
+            # ---- apply: every payload whose arrival step is t -------
+            arr = arrive == state.step                     # [R, Dq]
+            arr_flat = arr.reshape(RD)
+
+            def arriving(qq):
+                flat = qq.reshape((RD,) + qq.shape[2:])
+                shape = (RD,) + (1,) * (flat.ndim - 1)
+                pay = jnp.where(arr_flat.reshape(shape), flat,
+                                jnp.zeros_like(flat))
+                if staleness_weight == "damped":
+                    w = 1.0 / (1.0 + tau.reshape(RD).astype(jnp.float32))
+                    pay = pay * w.reshape(shape)
+                return pay
+
+            pay_all = jax.tree_util.tree_map(arriving, q)
+            if aggregate == "mean_R":
+                g_sum = jax.tree_util.tree_map(
+                    lambda p: jnp.sum(p, axis=0) / R, pay_all)
+            elif aggregate == "mean_S":
+                n_arr = jnp.maximum(
+                    jnp.sum(arr_flat.astype(jnp.float32)), 1.0)
+                g_sum = jax.tree_util.tree_map(
+                    lambda p: jnp.sum(p, axis=0) / n_arr, pay_all)
+            else:  # support_weighted: per-coordinate arriving support
+                g_sum = jax.tree_util.tree_map(
+                    lambda p: jnp.sum(p, axis=0) / jnp.maximum(
+                        jnp.sum((p != 0).astype(jnp.float32), axis=0),
+                        1.0),
+                    pay_all)
+            new_master = jax.tree_util.tree_map(
+                lambda x, g: (x.astype(jnp.float32) - g).astype(x.dtype),
+                state.master, g_sum,
+            )
+            # ---- dequeue applied slots (empty slots stay zero) ------
+            new_q = jax.tree_util.tree_map(
+                lambda qq: jnp.where(
+                    arr.reshape((R, Dq) + (1,) * (qq.ndim - 2)),
+                    jnp.zeros_like(qq), qq),
+                q)
+            new_arrive = jnp.where(arr, -1, arrive)
+            new_tau = jnp.where(arr, 0, tau)
+            # ---- broadcast to workers whose payload landed ----------
+            b = jnp.any(arr, axis=1) & row.alive
+
+            if compressed_down:
+                def down_update(dm_r, view_r, half_r, key_r, s_r):
+                    acc = jax.tree_util.tree_map(
+                        lambda dm, v, nm: dm + nm.astype(jnp.float32)
+                        - v.astype(jnp.float32),
+                        dm_r, view_r, new_master,
+                    )
+                    if leaf_ledger:
+                        qd, dm_out, dbits, dlb = down_ch.apply(
+                            key_r, acc, per_leaf=True)
+                        dgvec = group_bits(dlb, s_r)
+                    else:
+                        qd, dm_out, dbits = down_ch.apply(key_r, acc)
+                        dgvec = jnp.zeros((0,), jnp.float32)
+                    new_v = jax.tree_util.tree_map(
+                        lambda v, qq: jnp.where(
+                            s_r,
+                            (v.astype(jnp.float32) + qq).astype(v.dtype),
+                            v),
+                        view_r, qd,
+                    )
+                    new_dm = jax.tree_util.tree_map(
+                        lambda dm, mm: jnp.where(s_r, mm, dm), dm_r,
+                        dm_out)
+                    new_l = jax.tree_util.tree_map(
+                        lambda nv, h: jnp.where(s_r, nv.astype(h.dtype),
+                                                h),
+                        new_v, half_r,
+                    )
+                    return (new_v, new_dm, new_l,
+                            jnp.where(s_r, dbits, 0.0), dgvec)
+
+                down_keys = jax.vmap(
+                    lambda kk: jax.random.fold_in(kk, 0x0d0b))(keys)
+                (new_view, new_down_mem, new_local, dbits_all,
+                 dgvec_all) = jax.vmap(down_update)(
+                    state.down_memory, state.master_view, half, down_keys,
+                    b)
+                down_bits = state.bits_down + jnp.sum(dbits_all)
+                new_leaf_down = (
+                    state.leaf_bits_down + jnp.sum(dgvec_all, axis=0)
+                    if leaf_ledger else state.leaf_bits_down)
+            else:
+                bcast = replicate(new_master, R)
+                new_view = wsel(b, bcast, state.master_view)
+                new_local = wsel(b, bcast, half)
+                new_down_mem = state.down_memory
+                n_recv = jnp.sum(b.astype(jnp.float32))
+                down_bits = state.bits_down + (
+                    n_recv * down_ch.dense_bits(state.master))
+                if leaf_ledger:
+                    dense_vec = jnp.zeros((G,), jnp.float32).at[seg].add(
+                        jnp.asarray(
+                            [32.0 * l.size for l in
+                             jax.tree_util.tree_leaves(state.master)],
+                            jnp.float32))
+                    new_leaf_down = (state.leaf_bits_down
+                                     + n_recv * dense_vec)
+                else:
+                    new_leaf_down = state.leaf_bits_down
+
+            inc = (jnp.any(arr).astype(jnp.int32) if global_rounds
+                   else jnp.sum(compute.astype(jnp.int32)))
+            return state._replace(
+                master=new_master,
+                master_view=new_view,
+                local=new_local,
+                memory=new_mem,
+                inner=inner,
+                step=state.step + 1,
+                bits=state.bits + jnp.sum(bits_all),
+                rounds=state.rounds + inc,
+                down_memory=new_down_mem,
+                bits_down=down_bits,
+                leaf_bits=new_leaf_bits,
+                leaf_bits_down=new_leaf_down,
+                inflight=new_q,
+                arrive_at=new_arrive,
+                inflight_tau=new_tau,
+            )
+
+        def no_event(_):
+            return state._replace(local=half, inner=inner,
+                                  step=state.step + 1)
+
+        new_state = jax.lax.cond(any_event, event_phase, no_event,
+                                 operand=None)
+        return new_state, jnp.mean(losses)
+
+    return step_fn
+
+
+def make_fault_superstep(
+    grad_fn: Callable,
+    inner_opt: GradientTransform,
+    operator: CompressionOp | Any,
+    lr_schedule: Callable,
+    R: int,
+    *,
+    queue_depth: int,
+    dispatch: Optional[dsp.DispatchConfig] = None,
+    global_rounds: bool = False,
+    downlink=None,
+    leaf_ledger: bool = False,
+    aggregate: str = "mean_R",
+    staleness_weight: str = "uniform",
+):
+    """Round program for the fault runtime: one ``lax.scan`` of the full
+    fault step over the round's steps, with the [L, R]-stacked fault
+    rows as xs beside the batch block.
+
+    Unlike :func:`make_superstep` (pure-local body + sync tail), every
+    scanned step here is the *complete* fault step — payload arrivals
+    can only land at round tails (``rounds.compile_fault_rounds`` closes
+    rounds at every event step), but crash/recover transitions happen
+    anywhere, and the per-step ``lax.cond`` skips the event phase on
+    event-free steps.  Parity with the per-step loop is therefore by
+    construction: both execute the same step function with the same
+    per-step key-split sequence, which the differential tests pin
+    bit-for-bit.  Signature ``(state, batch_block, rows, key) ->
+    (state, losses[L], key)``.
+    """
+    step_fn = make_fault_step(
+        grad_fn, inner_opt, operator, lr_schedule, R,
+        queue_depth=queue_depth, dispatch=dispatch,
+        global_rounds=global_rounds, downlink=downlink,
+        leaf_ledger=leaf_ledger, aggregate=aggregate,
+        staleness_weight=staleness_weight)
+
+    def superstep(state: EngineState, batch_block, rows: FaultRow, key):
+        if state.bits_down is None:
+            state = state._replace(bits_down=jnp.zeros((), jnp.float32))
+
+        def body(carry, xs):
+            state, key = carry
+            batch, row = xs
+            # same stream as the host loop: one split per step, the
+            # subkey consumed only by the event phase
+            key, sub = jax.random.split(key)
+            state, loss = step_fn(state, batch, row, sub)
+            return (state, key), loss
+
+        rows = FaultRow(*(jnp.asarray(x) for x in rows))
+        (state, key), losses = jax.lax.scan(
+            body, (state, key), (batch_block, rows))
+        return state, losses, key
+
+    return superstep
+
+
+def run_faults(
+    state: EngineState,
+    step_fn,                      # from make_fault_step
+    batches,                      # iterable of [R, ...] batches
+    mask,                         # bool[T] or bool[T, R] sync schedule
+    tables,                       # scenarios.FaultTables
+    key,
+    jit: bool = True,
+) -> tuple[EngineState, list[float]]:
+    """Drive T fault steps (per-step host loop; the oracle path the
+    round driver is differentially tested against)."""
+    if state.arrive_at is None:
+        raise ValueError("fault drivers need a queue-bearing state: "
+                         "initialize with engine.init(..., queue_depth=)")
+    R = state.arrive_at.shape[0]
+    rows = fault_rows(mask, tables, R)
+    fn = _donated(step_fn) if jit else step_fn
+    losses = []
+    for t, batch in enumerate(batches):
+        key, sub = jax.random.split(key)
+        state, loss = fn(state, batch, index_rows(rows, t), sub)
+        losses.append(loss)
+    return state, [float(l) for l in losses]
+
+
+def run_fault_rounds(
+    state: EngineState,
+    superstep,                    # from make_fault_superstep
+    batches,
+    mask,                         # bool[T] or bool[T, R] sync schedule
+    tables,                       # scenarios.FaultTables
+    key,
+    jit: bool = True,
+) -> tuple[EngineState, list[float]]:
+    """Drive the schedule as compiled fault-round programs.
+
+    Rounds close at *event* steps (scheduled syncs and payload
+    arrivals, ``rounds.compile_fault_rounds``), so master and ledger
+    state only change at round tails — the trainer's per-round ledger
+    snapshots stay exact.  Rounds of equal length share one executable
+    (fault rows are data).  The state argument is consumed.
+    """
+    from repro.core import rounds as rnd
+    if state.arrive_at is None:
+        raise ValueError("fault drivers need a queue-bearing state: "
+                         "initialize with engine.init(..., queue_depth=)")
+    R = state.arrive_at.shape[0]
+    rows = fault_rows(mask, tables, R)
+    plans = rnd.compile_fault_rounds(rows.sync, tables)
+    fn = _donated(superstep) if jit else superstep
+    losses = []
+    it = iter(batches)
+    for plan in plans:
+        steps = []
+        for _ in range(plan.length):
+            try:
+                steps.append(next(it))
+            except StopIteration:
+                break
+        if not steps:
+            break
+        block_rows = index_rows(rows, slice(plan.start,
+                                            plan.start + len(steps)))
+        if len(steps) < plan.length:
+            # truncated block (batch stream ended mid-round): the steps
+            # actually reached are all event-free by construction
+            block_rows = block_rows._replace(
+                sync=np.zeros_like(block_rows.sync))
+        state, ls, key = fn(state, stack_block(steps), block_rows, key)
+        losses.append(ls)
+        if len(steps) < plan.length:
+            break
+    return state, [float(x) for ls in losses for x in np.asarray(ls)]
+
+
+# ---------------------------------------------------------------------------
 # fleet-scale worker axis (DESIGN.md §8)
 # ---------------------------------------------------------------------------
 
@@ -672,6 +1192,9 @@ def shard_worker_axis(state: EngineState, mesh, axis: str = "data"
         memory=put(state.memory, wrk),
         inner=put(state.inner, wrk),
         down_memory=put(state.down_memory, wrk),
+        inflight=put(state.inflight, wrk),
+        arrive_at=put(state.arrive_at, wrk),
+        inflight_tau=put(state.inflight_tau, wrk),
     )
 
 

@@ -132,6 +132,54 @@ def expand_rounds(plans: Sequence[RoundPlan], R: int | None = None
     return out
 
 
+def compile_fault_rounds(mask, tables, extra_events=None) -> list[RoundPlan]:
+    """Segment a sync schedule *under faults* into round plans.
+
+    With a :class:`~repro.core.scenarios.FaultSpec` active, master and
+    ledger state can change at steps beyond the scheduled syncs: a
+    payload computed at t lands at t+τ, so its *arrival* step is an
+    event even when no worker syncs there.  Rounds must close at every
+    event step — any scheduled sync row (even one where every worker is
+    crashed: the empty round still gets its History entry) or any
+    payload arrival — so the round program's heads stay pure-local and
+    the trainer's per-round ledger snapshots stay exact.
+
+    ``mask`` is the bool ``[T]``/``[T, R]`` sync schedule and ``tables``
+    the expanded :class:`~repro.core.scenarios.FaultTables`.  The
+    returned plans carry the *original* tail sync rows (the engine's
+    fault superstep takes the full per-step fault rows separately);
+    trailing no-event steps form the usual partial round.  With trivial
+    tables the segmentation is exactly :func:`compile_rounds`.
+
+    ``extra_events``: additional step indices to close rounds at —
+    arrival steps of payloads already in flight when this schedule
+    window starts (a crash-consistent resume mid-trajectory restores a
+    non-empty queue whose arrivals the window's own replay can't see).
+    """
+    from repro.core import scenarios as scn  # local: avoid import cycle
+
+    rows, scalar = _as_rows(mask)
+    _, _, events = scn.fault_replay(rows, tables)
+    if extra_events is not None:
+        events = events.copy()
+        for e in extra_events:
+            if 0 <= int(e) < events.shape[0]:
+                events[int(e)] = True
+    T = rows.shape[0]
+    plans: list[RoundPlan] = []
+    start = 0
+    for t in range(T):
+        if events[t]:
+            tail = rows[t, 0] if scalar else rows[t].copy()
+            plans.append(RoundPlan(start, t - start + 1, np.asarray(tail)))
+            start = t + 1
+    if start < T:
+        tail = (np.zeros((), bool) if scalar
+                else np.zeros(rows.shape[1], bool))
+        plans.append(RoundPlan(start, T - start, tail))
+    return plans
+
+
 def round_lengths(plans: Sequence[RoundPlan]) -> list[int]:
     """Distinct round lengths, in first-appearance order — one XLA
     compilation of the superstep per entry."""

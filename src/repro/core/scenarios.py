@@ -50,7 +50,7 @@ The matching aggregation rules (``aggregate=`` in ``core/engine.py`` /
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import numpy as np
 
@@ -282,10 +282,286 @@ def inject_dropout(mask, worker: int, step: int) -> np.ndarray:
 
 def defer_sync(mask, worker: int, step: int, later: int) -> np.ndarray:
     """Stale-arrival failure: worker's sync at ``step`` lands at
-    ``later`` instead (the payload survived but arrived rounds late —
-    the async regime of ``core/async_qsparse.py``)."""
+    ``later`` instead — the *modelled* form of staleness (the whole
+    sync event moves, so the payload is computed late too).  For the
+    paper-faithful *executed* form — payload computed at ``step``,
+    applied at ``step + τ`` — use :class:`FaultSpec` delays, which keep
+    the compute time (and hence the error-feedback algebra) intact."""
     if later <= step:
         raise ValueError(f"deferred step {later} must follow {step}")
     m = inject_dropout(mask, worker, step)
     m[later, worker] = True
     return m
+
+
+# ---------------------------------------------------------------------------
+# fault specs (DESIGN.md §9): executed staleness, crash/recover, drops
+# ---------------------------------------------------------------------------
+
+
+class FaultTables(NamedTuple):
+    """Per-step ``[T, R]`` expansion of a :class:`FaultSpec`.
+
+    * ``delay``   — int32, payload computed at t arrives at t+delay[t,r];
+    * ``alive``   — bool, worker r is up at step t (a dead worker takes
+      no local step, computes no payload, and receives no broadcast);
+    * ``recover`` — bool, step t is worker r's first alive step after an
+      outage (error memory is lost; local/view re-init from the master);
+    * ``drop``    — bool, the payload computed at (t, r) is lost in
+      flight (memory was already updated at compute time — the
+      error-feedback algebra absorbs the loss over later rounds).
+
+    All tables are deterministic in the spec's ``seed`` (a dedicated
+    ``np.random.RandomState`` — a PRNG stream fully separate from the
+    jax data/model key stream, so enabling faults never perturbs batch
+    construction or compression randomness).
+    """
+
+    delay: np.ndarray     # int32 [T, R]
+    alive: np.ndarray     # bool  [T, R]
+    recover: np.ndarray   # bool  [T, R]
+    drop: np.ndarray      # bool  [T, R]
+
+    @property
+    def depth(self) -> int:
+        """In-flight queue depth the engine must allocate: one slot per
+        possible outstanding delay (``max observed delay + 1``)."""
+        return int(self.delay.max()) + 1 if self.delay.size else 1
+
+    @property
+    def trivial(self) -> bool:
+        """No faults at all — the tables of ``FaultSpec()``."""
+        return (not self.delay.any() and bool(self.alive.all())
+                and not self.drop.any())
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Declarative fault-injection spec; ``tables(T, R)`` expands it.
+
+    All knobs default to the fault-free fleet: ``FaultSpec().tables(T,
+    R)`` yields trivial tables (zero delay, everyone alive, no drops),
+    under which the fault runtime is bit-for-bit the fault-free one.
+
+    * ``min_delay``/``max_delay`` — payload staleness τ drawn uniformly
+      from ``{min_delay..max_delay}`` per computed payload: computed at
+      t, applied to the master at t+τ.
+    * ``drop`` — probability a computed payload is lost in flight
+      (never applied; the uplink error memory was already updated at
+      compute time, so the loss is absorbed by error feedback).
+    * ``crash`` — deterministic outage windows
+      ``((worker, crash_step, recover_step), ...)``: worker is dead for
+      steps ``crash_step <= t < recover_step``.  On recovery the worker
+      re-initializes from the current master and its error memory is
+      lost (zeroed).
+    * ``crash_rate``/``mean_outage`` — additionally, each alive worker
+      crashes i.i.d. per step with probability ``crash_rate`` for a
+      geometric outage of mean ``mean_outage`` steps.
+    * ``seed`` — the dedicated fault PRNG seed (``--fault-seed``).
+    """
+
+    max_delay: int = 0
+    min_delay: int = 0
+    drop: float = 0.0
+    crash: tuple = ()           # ((worker, crash_step, recover_step), ...)
+    crash_rate: float = 0.0
+    mean_outage: float = 8.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if not (0 <= self.min_delay <= self.max_delay):
+            raise ValueError(
+                f"need 0 <= min_delay <= max_delay, got "
+                f"[{self.min_delay}, {self.max_delay}]")
+        if not (0.0 <= self.drop <= 1.0):
+            raise ValueError(f"drop must be in [0, 1], got {self.drop}")
+        if not (0.0 <= self.crash_rate <= 1.0):
+            raise ValueError(
+                f"crash_rate must be in [0, 1], got {self.crash_rate}")
+        if self.mean_outage < 1.0:
+            raise ValueError(
+                f"mean_outage must be >= 1, got {self.mean_outage}")
+        for w in self.crash:
+            if len(w) != 3:
+                raise ValueError(
+                    f"crash window must be (worker, crash, recover), "
+                    f"got {w!r}")
+            r, c, rec = (int(x) for x in w)
+            if r < 0 or c < 0 or rec <= c:
+                raise ValueError(
+                    f"bad crash window {w!r}: need worker >= 0 and "
+                    f"0 <= crash_step < recover_step")
+
+    @property
+    def depth(self) -> int:
+        """Static queue depth (independent of T/R, so jitted programs
+        are reusable across runs of the same spec)."""
+        return int(self.max_delay) + 1
+
+    # ---- table expansion -------------------------------------------------
+
+    def tables(self, T: int, R: int) -> FaultTables:
+        """Expand into per-step ``[T, R]`` tables (see FaultTables)."""
+        if T < 1 or R < 1:
+            raise ValueError(f"need T >= 1 and R >= 1, got T={T}, R={R}")
+        rng = np.random.RandomState(self.seed)
+        if self.max_delay > self.min_delay:
+            delay = rng.randint(self.min_delay, self.max_delay + 1,
+                                size=(T, R)).astype(np.int32)
+        else:
+            delay = np.full((T, R), self.min_delay, np.int32)
+        drop = (rng.rand(T, R) < self.drop if self.drop > 0.0
+                else np.zeros((T, R), bool))
+        alive = np.ones((T, R), bool)
+        if self.crash_rate > 0.0:
+            # per-worker markov outages: crash i.i.d. per alive step,
+            # outage length 1 + geometric(1/mean_outage)
+            p_crash = rng.rand(T, R)
+            p_len = rng.rand(T, R)
+            for r in range(R):
+                t = 0
+                while t < T:
+                    if p_crash[t, r] < self.crash_rate:
+                        u = max(p_len[t, r], 1e-12)
+                        length = 1 + int(np.floor(
+                            np.log(u) / np.log(1.0 - 1.0 /
+                                               max(self.mean_outage, 1.0))
+                        )) if self.mean_outage > 1.0 else 1
+                        alive[t:t + length, r] = False
+                        t += length
+                    else:
+                        t += 1
+        for w, c, rec in ((int(a), int(b), int(d)) for a, b, d in self.crash):
+            if w < R:
+                alive[min(c, T):min(rec, T), w] = False
+        recover = np.zeros((T, R), bool)
+        recover[1:] = alive[1:] & ~alive[:-1]
+        return FaultTables(delay=delay, alive=alive, recover=recover,
+                           drop=drop)
+
+    # ---- spec string surface --------------------------------------------
+
+    def to_string(self) -> str:
+        """Canonical ``k=v,...`` spec string (round-trips via
+        :func:`parse_faults`)."""
+        parts = []
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if v == f.default:
+                continue
+            if f.name == "crash":
+                parts.append("crash=" + "+".join(
+                    f"{int(r)}@{int(c)}-{int(rec)}" for r, c, rec in v))
+            else:
+                parts.append(f"{f.name}={v}")
+        return ",".join(parts)
+
+
+#: named fault presets (``--faults preset:<name>``)
+FAULT_PRESETS = {
+    # the fault-free harness: trivial tables, pins the bit-exactness of
+    # the fault runtime against the fault-free one (satellite S1)
+    "none": FaultSpec(),
+    # staleness only: every payload 0-3 steps late
+    "delayed": FaultSpec(max_delay=3, seed=1),
+    # staleness + in-flight loss
+    "lossy": FaultSpec(max_delay=2, drop=0.1, seed=2),
+    # random crash/recover churn on top of delays
+    "crashy": FaultSpec(max_delay=2, crash_rate=0.02, mean_outage=6.0,
+                        seed=3),
+    # the CI fault-smoke profile: one deterministic crash/recover window
+    # plus random delays and drops — every fault class exercised
+    "chaos": FaultSpec(max_delay=3, drop=0.05,
+                       crash=((1, 2, 5),), crash_rate=0.01,
+                       mean_outage=4.0, seed=5),
+}
+
+
+def parse_faults(spec) -> FaultSpec:
+    """A FaultSpec from a spec string, preset name, or FaultSpec.
+
+    Accepts ``"preset:<name>"`` (see :data:`FAULT_PRESETS`), a
+    ``k=v,...`` string (``"max_delay=3,drop=0.1,seed=2"``, with crash
+    windows as ``crash=r@c-rec+r2@c2-rec2``), or an existing
+    :class:`FaultSpec` (returned as-is).
+    """
+    if isinstance(spec, FaultSpec):
+        return spec
+    if not isinstance(spec, str):
+        raise TypeError(f"fault spec must be a FaultSpec or str, "
+                        f"got {type(spec).__name__}")
+    s = spec.strip()
+    if s.startswith("preset:"):
+        name = s[len("preset:"):]
+        try:
+            return FAULT_PRESETS[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown fault preset {name!r}; available: "
+                f"{sorted(FAULT_PRESETS)}") from None
+    kwargs = {}
+    fields = {f.name: f for f in dataclasses.fields(FaultSpec)}
+    for item in filter(None, (p.strip() for p in s.split(","))):
+        if "=" not in item:
+            raise ValueError(f"bad fault item {item!r}: expected k=v")
+        k, v = (x.strip() for x in item.split("=", 1))
+        if k not in fields:
+            raise KeyError(f"unknown fault field {k!r}; available: "
+                           f"{sorted(fields)}")
+        if k == "crash":
+            windows = []
+            for win in filter(None, v.split("+")):
+                r, _, span = win.partition("@")
+                c, _, rec = span.partition("-")
+                windows.append((int(r), int(c), int(rec)))
+            kwargs[k] = tuple(windows)
+        elif k in ("max_delay", "min_delay", "seed"):
+            kwargs[k] = int(v)
+        else:
+            kwargs[k] = float(v)
+    return FaultSpec(**kwargs)
+
+
+#: staleness weighting modes for arriving payloads (``--staleness-weight``)
+STALENESS_WEIGHTS = ("uniform", "damped")
+
+
+def validate_staleness_weight(mode: str) -> str:
+    if mode not in STALENESS_WEIGHTS:
+        raise ValueError(
+            f"unknown staleness weight {mode!r}; expected one of "
+            f"{STALENESS_WEIGHTS}")
+    return mode
+
+
+def fault_replay(mask, tables: FaultTables):
+    """Host-side replay of the fault schedule's *event structure*.
+
+    Returns ``(computed, arrivals, events)``:
+
+    * ``computed [T, R]`` — worker r computes a payload at t
+      (scheduled sync AND alive);
+    * ``arrivals [T, R]`` — int32 count of payloads *from* worker r
+      applied to the master at t (computed at some t' <= t with
+      t' + delay == t, not dropped; two payloads from one worker can
+      land on the same step; payloads whose arrival lands past T-1
+      stay in flight);
+    * ``events [T]`` — steps where master/ledger state can change or a
+      scheduled sync fires: any scheduled sync row (even with every
+      worker crashed — the empty round stays a History round) or any
+      arrival.  The round program must close rounds exactly at these
+      steps (``rounds.compile_fault_rounds``).
+    """
+    m = np.asarray(mask, bool)
+    if m.ndim == 1:
+        m = np.broadcast_to(m[:, None], (m.shape[0], tables.alive.shape[1]))
+    T, R = m.shape
+    computed = m & tables.alive[:T]
+    arrivals = np.zeros((T, R), np.int32)
+    src = computed & ~tables.drop[:T]
+    for t, r in zip(*np.nonzero(src)):
+        a = t + int(tables.delay[t, r])
+        if a < T:
+            arrivals[a, r] += 1
+    events = m.any(axis=1) | (arrivals > 0).any(axis=1)
+    return computed, arrivals, events

@@ -139,6 +139,22 @@ def main():
                          "'step' keeps per-step dispatch.  Identical "
                          "trajectories; 0.4.x TP>1 meshes auto-fall "
                          "back to per-step with a warning")
+    ap.add_argument("--faults", default=None,
+                    help="fault-injection spec (core/scenarios.py "
+                         "FaultSpec, DESIGN.md §9): 'preset:<name>' "
+                         "(e.g. preset:chaos) or 'k=v,...' "
+                         "(max_delay=3,drop=0.1,crash_rate=0.02,seed=5) "
+                         "— executed staleness: payloads computed at t "
+                         "land on the master at t+τ out of per-worker "
+                         "in-flight queues, with crash/recover and "
+                         "payload drop")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="override the fault spec's PRNG seed (its own "
+                         "stream — never perturbs batch construction)")
+    ap.add_argument("--staleness-weight", default="uniform",
+                    choices=["uniform", "damped"],
+                    help="weighting of delayed payloads at apply time: "
+                         "uniform (as computed) or damped (1/(1+τ))")
     ap.add_argument("--downlink", default=None,
                     help="DEPRECATED: use --policy 'up >> down'.  "
                          "Registry operator name for the server→worker "
@@ -194,10 +210,54 @@ def main():
               f"(participation {scn.participation_of(scenario_mask):.2f}, "
               f"{int(scenario_mask.any(axis=1).sum())} sync steps)",
               flush=True)
+    fault_spec = fault_rows = fault_events = None
+    if args.faults is not None:
+        import dataclasses as _dc
+
+        from repro.core import engine as engine_mod
+        from repro.core import scenarios as scn
+        if args.zero1:
+            raise SystemExit("--faults does not support --zero1 (the "
+                             "recover phase needs the full master)")
+        if downlink is not None:
+            raise SystemExit("--faults does not support a compressed "
+                             "downlink on the mesh engine; drop the "
+                             "'>> down' half of the policy")
+        fault_spec = scn.parse_faults(args.faults)
+        if args.fault_seed is not None:
+            fault_spec = _dc.replace(fault_spec, seed=int(args.fault_seed))
+        base_mask = (scenario_mask if scenario_mask is not None
+                     else np.array([(t + 1) % args.H == 0
+                                    or t == args.steps - 1
+                                    for t in range(args.steps)]))
+        fault_tables = fault_spec.tables(args.steps, R)
+        fault_rows = engine_mod.fault_rows(base_mask, fault_tables, R)
+        _, fault_arrivals, fault_events = scn.fault_replay(
+            fault_rows.sync, fault_tables)
+        print(f"faults: {fault_spec.to_string() or 'none'} "
+              f"(queue depth {fault_spec.depth}, "
+              f"{int(fault_arrivals.sum())} arrivals, "
+              f"{int((~fault_tables.alive).sum())} crashed worker-steps, "
+              f"weighting {args.staleness_weight})", flush=True)
     engine_kw = dict(zero1=args.zero1, aggregate=args.aggregate,
                      downlink=downlink, wire=args.wire,
                      partial=scenario_mask is not None)
-    if args.runtime == "round":
+    if fault_spec is not None:
+        from repro.core.distributed import (make_dist_fault_round,
+                                            make_dist_fault_steps)
+        fault_kw = dict(queue_depth=fault_spec.depth,
+                        aggregate=args.aggregate, wire=args.wire,
+                        staleness_weight=args.staleness_weight)
+        if args.runtime == "round":
+            init_fn, round_fn, fused = make_dist_fault_round(
+                *engine_args, **fault_kw)
+            print(f"runtime: fault round "
+                  f"({'fused' if fused else 'per-step fallback'})",
+                  flush=True)
+        else:
+            init_fn, local_step, sync_step = make_dist_fault_steps(
+                *engine_args, **fault_kw)
+    elif args.runtime == "round":
         init_fn, round_fn, fused = make_dist_round(*engine_args, **engine_kw)
         print(f"runtime: round ({'fused' if fused else 'per-step fallback'})",
               flush=True)
@@ -242,7 +302,11 @@ def main():
 
         def is_sync_step(t):
             """Scenario runs sync where any worker's mask row fires; the
-            fixed schedule keeps the historical every-H + final step."""
+            fixed schedule keeps the historical every-H + final step.
+            Fault runs close at *event* steps — any scheduled sync row
+            or any queued-payload arrival (scenarios.fault_replay)."""
+            if fault_events is not None:
+                return bool(fault_events[t])
             if scenario_mask is not None:
                 return bool(scenario_mask[t].any())
             return (t + 1) % args.H == 0 or t == args.steps - 1
@@ -266,7 +330,12 @@ def main():
                     continue
                 block = stack_block(pending)
                 prev_up, prev_down = float(state.bits), float(state.bits_down)
-                if scenario_mask is not None:
+                if fault_rows is not None:
+                    from repro.core.engine import index_rows
+                    rblock = index_rows(fault_rows,
+                                        slice(block_start, t + 1))
+                    state, losses, key = round_fn(state, block, rblock, key)
+                elif scenario_mask is not None:
                     state, losses, key = round_fn(
                         state, block, jnp.asarray(scenario_mask[t]), key)
                 else:
@@ -294,7 +363,11 @@ def main():
                 key, sub = jax.random.split(key)
                 b = make_batch(batch, sub)
                 if is_sync_step(t):
-                    if scenario_mask is not None:
+                    if fault_rows is not None:
+                        from repro.core.engine import index_rows
+                        state, loss = ss(state, b, index_rows(fault_rows, t),
+                                         sub)
+                    elif scenario_mask is not None:
                         state, loss = ss(state, b, sub,
                                          jnp.asarray(scenario_mask[t]))
                     else:
@@ -304,7 +377,12 @@ def main():
                         launch_note = launch_note_once()
                     note = f" launches/round [{launch_note}]"
                 else:
-                    state, loss = ls(state, b, sub)
+                    if fault_rows is not None:
+                        from repro.core.engine import index_rows
+                        state, loss = ls(state, b, index_rows(fault_rows, t),
+                                         sub)
+                    else:
+                        state, loss = ls(state, b, sub)
                     kind = "local"
                     note = ""
                 last_loss = float(loss)

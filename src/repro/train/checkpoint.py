@@ -99,6 +99,71 @@ def load_policy(path: str):
     return pol.from_dict(d)
 
 
+# ---------------------------------------------------------------------------
+# crash-consistent full train-state checkpoints (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def save_train_state(path: str, state: Any, *, key: Any, cursor: int,
+                     policy: Optional[dict] = None,
+                     faults: Optional[str] = None,
+                     staleness_weight: Optional[str] = None) -> None:
+    """Persist the FULL training state — master, per-worker locals,
+    uplink/downlink error memories, the in-flight payload queue
+    (values, arrival steps, staleness tags), every ledger, and the PRNG
+    key — plus the fault cursor (the next global step to execute), so a
+    mid-round restart reproduces the exact trajectory.
+
+    ``faults``/``staleness_weight`` record the run's fault spec string
+    (``FaultSpec.to_string()``) and weighting mode; :func:`restore_train_state`
+    hands them back so a resume can assert it re-derived the same
+    deterministic fault tables.
+    """
+    save(path, {"state": state, "key": key}, step=cursor, policy=policy)
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["train_state"] = {
+        "cursor": int(cursor),
+        "faults": faults,
+        "staleness_weight": staleness_weight,
+    }
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def restore_train_state(path: str, like_state: Any, like_key: Any
+                        ) -> tuple[Any, Any, dict]:
+    """Inverse of :func:`save_train_state`: ``(state, key, info)`` with
+    ``info`` the ``{"cursor", "faults", "staleness_weight"}`` record.
+    ``like_state``/``like_key`` give the target structure (a freshly
+    initialized state of the same RunConfig)."""
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    info = manifest.get("train_state")
+    if info is None:
+        raise ValueError(
+            f"{path} is a master-only checkpoint, not a full train-state "
+            f"snapshot (no train_state record in the manifest)")
+    tree = restore(path, {"state": like_state, "key": like_key})
+    return tree["state"], tree["key"], dict(info)
+
+
+def latest_full(root: str) -> Optional[int]:
+    """Latest ``full_step_<N>`` train-state snapshot under ``root``."""
+    if not os.path.isdir(root):
+        return None
+    steps = []
+    for d in os.listdir(root):
+        if d.startswith("full_step_"):
+            try:
+                steps.append(int(d.rsplit("_", 1)[1]))
+            except ValueError:
+                pass
+    return max(steps) if steps else None
+
+
 def latest_step(root: str) -> Optional[int]:
     if not os.path.isdir(root):
         return None

@@ -93,6 +93,29 @@ class RunConfig:
     # ``policy="<uplink> >> <downlink>"`` (or a ChannelSpec) instead;
     # kept as a shim with a one-time warning.
     downlink_op: Optional[Union[CompressionOp, str]] = None
+    # fault injection (core/scenarios.py FaultSpec, DESIGN.md §9): a
+    # FaultSpec, "k=v,..." string, or "preset:<name>".  When set the
+    # run executes through the engine's staleness-first fault runtime —
+    # payloads computed at t applied at t+τ out of the in-flight queue,
+    # worker crash/recover, payload drops — deterministically expanded
+    # from the *fault* PRNG seed (never the data/model key stream).
+    # ``--faults preset:none`` runs the fault runtime with trivial
+    # tables: bit-for-bit the fault-free trajectories.
+    faults: Optional[Union[str, scn.FaultSpec]] = None
+    # overrides the fault spec's own seed when set (``--fault-seed``)
+    fault_seed: Optional[int] = None
+    # how arriving stale payloads are weighted (DESIGN.md §9):
+    # "uniform" applies them exactly as computed, "damped" scales each
+    # by 1/(1+τ)
+    staleness_weight: str = "uniform"
+    # crash-consistent resume: restore the latest full train-state
+    # snapshot under ckpt_dir (queues, error memories, fault cursor,
+    # PRNG key) and continue the exact trajectory.  Full snapshots are
+    # written at ckpt_every points (round runtime: at the round
+    # boundaries containing them).  The batch iterable must be
+    # deterministic from the start — the resumed run skips the first
+    # ``cursor`` batches.
+    resume: bool = False
 
 
 def _deprecated(name: str, instead: str):
@@ -223,14 +246,56 @@ def train(
     dispatch = DispatchConfig(mode=run.dispatch, pack=run.pack)
     operator, downlink, channel_spec = resolve_run_channels(
         operator, run, params)
+    scn.validate_staleness_weight(run.staleness_weight)
+    fault_spec = None
+    tables = None
+    if run.faults is not None:
+        fault_spec = scn.parse_faults(run.faults)
+        if run.fault_seed is not None:
+            fault_spec = dataclasses.replace(fault_spec,
+                                             seed=int(run.fault_seed))
     state = engine.init(params, inner_opt, run.R, downlink=downlink,
-                        leaf_ledger=run.leaf_ledger)
+                        leaf_ledger=run.leaf_ledger,
+                        queue_depth=(fault_spec.depth if fault_spec
+                                     else None))
     mask = make_mask(run)
+    if fault_spec is not None:
+        # the fault tables expand from the dedicated fault seed — a
+        # PRNG stream fully separate from the jax key stream above, so
+        # enabling faults never perturbs batches or compression draws
+        tables = fault_spec.tables(run.total_steps, run.R)
     if run.scenario is not None:
         scn.warn_if_biased(mask, run.aggregate)
     ckpt_policy = None if channel_spec is None else channel_spec.to_dict()
     if run.leaf_ledger:
         hist.leaf_groups = list(engine.leaf_group_names(params))
+
+    # ---- crash-consistent resume (DESIGN.md §9) ---------------------
+    start = 0
+    if run.resume:
+        if not run.ckpt_dir:
+            raise ValueError("RunConfig.resume needs ckpt_dir")
+        full = ckpt.latest_full(run.ckpt_dir)
+        if full is not None:
+            state, key, info = ckpt.restore_train_state(
+                f"{run.ckpt_dir}/full_step_{full}", state, key)
+            start = int(info["cursor"])
+            want = fault_spec.to_string() if fault_spec else None
+            if info.get("faults") != want:
+                raise ValueError(
+                    f"resume fault spec mismatch: checkpoint recorded "
+                    f"{info.get('faults')!r}, this run derives {want!r}")
+            it0 = iter(batches)
+            for _ in range(start):   # the batch stream replays from 0
+                next(it0, None)
+            batches = it0
+
+    def save_full(t_next: int, st, kk):
+        ckpt.save_train_state(
+            f"{run.ckpt_dir}/full_step_{t_next}", st, key=kk,
+            cursor=t_next, policy=ckpt_policy,
+            faults=fault_spec.to_string() if fault_spec else None,
+            staleness_weight=run.staleness_weight)
 
     # ---- per-step bookkeeping, shared by both runtimes --------------
     # ``led`` carries the ledger scalars the step's state would hold;
@@ -283,7 +348,39 @@ def train(
             ckpt.save(f"{run.ckpt_dir}/step_{t + 1}", master,
                       step=t + 1, policy=ckpt_policy)
 
-    if run.runtime == "round":
+    if fault_spec is not None:
+        rows = engine.fault_rows(mask[:run.total_steps], tables, run.R)
+        if run.runtime == "round":
+            superstep = engine.make_fault_superstep(
+                grad_fn, inner_opt, operator, lr_schedule, run.R,
+                queue_depth=fault_spec.depth, dispatch=dispatch,
+                global_rounds=not run.asynchronous, downlink=downlink,
+                leaf_ledger=run.leaf_ledger, aggregate=run.aggregate,
+                staleness_weight=run.staleness_weight)
+            state, key = _drive_fault_rounds(
+                state, superstep, batches, rows, tables, key, run, hist,
+                snapshot_ledger, bookkeep_loss, maybe_eval_ckpt,
+                save_full, start=start)
+        else:
+            step_fn = engine.donated_jit(engine.make_fault_step(
+                grad_fn, inner_opt, operator, lr_schedule, run.R,
+                queue_depth=fault_spec.depth, dispatch=dispatch,
+                global_rounds=not run.asynchronous, downlink=downlink,
+                leaf_ledger=run.leaf_ledger, aggregate=run.aggregate,
+                staleness_weight=run.staleness_weight))
+            for t, batch in enumerate(batches, start=start):
+                if t >= run.total_steps:
+                    break
+                key, sub = jax.random.split(key)
+                batch = jax.tree_util.tree_map(jnp.asarray, batch)
+                state, loss = step_fn(state, batch,
+                                      engine.index_rows(rows, t), sub)
+                bookkeep_loss(t, float(loss), snapshot_ledger(state))
+                maybe_eval_ckpt(t, state.master)
+                if (run.ckpt_dir and run.ckpt_every
+                        and (t + 1) % run.ckpt_every == 0):
+                    save_full(t + 1, state, key)
+    elif run.runtime == "round":
         superstep = engine.make_superstep(
             grad_fn, inner_opt, operator, lr_schedule, run.R,
             dispatch=dispatch, global_rounds=not run.asynchronous,
@@ -291,14 +388,15 @@ def train(
             aggregate=run.aggregate)
         state, key = _drive_rounds(
             state, superstep, batches, mask, key, run, hist,
-            snapshot_ledger, bookkeep_loss, maybe_eval_ckpt)
+            snapshot_ledger, bookkeep_loss, maybe_eval_ckpt,
+            save_full, start=start)
     else:
         step_fn = engine.donated_jit(engine.make_step(
             grad_fn, inner_opt, operator, lr_schedule, run.R,
             dispatch=dispatch, global_rounds=not run.asynchronous,
             downlink=downlink, leaf_ledger=run.leaf_ledger,
             aggregate=run.aggregate))
-        for t, batch in enumerate(batches):
+        for t, batch in enumerate(batches, start=start):
             if t >= run.total_steps:
                 break
             key, sub = jax.random.split(key)
@@ -306,6 +404,9 @@ def train(
             state, loss = step_fn(state, batch, jnp.asarray(mask[t]), sub)
             bookkeep_loss(t, float(loss), snapshot_ledger(state))
             maybe_eval_ckpt(t, state.master)
+            if (run.ckpt_dir and run.ckpt_every
+                    and (t + 1) % run.ckpt_every == 0):
+                save_full(t + 1, state, key)
     hist.wall_time = time.time() - t0
     if run.ckpt_dir:
         ckpt.save(f"{run.ckpt_dir}/final", state.master,
@@ -315,7 +416,7 @@ def train(
 
 def _drive_rounds(state, superstep, batches, mask, key, run: RunConfig,
                   hist: History, snapshot_ledger, bookkeep_loss,
-                  maybe_eval_ckpt):
+                  maybe_eval_ckpt, save_full=None, start: int = 0):
     """The round-runtime drive loop (DESIGN.md §7): one donated program
     per round, next block assembled while the device runs the current
     round, ledger scalars + the [L] loss array fetched once per round.
@@ -325,8 +426,12 @@ def _drive_rounds(state, superstep, batches, mask, key, run: RunConfig,
     buffers — mid-round eval/ckpt points (whose per-step semantics
     freeze the previous sync's master) run before the round is
     dispatched, tail points after.
+
+    ``start``: global step of the window's first step (a resumed run
+    re-segments the remaining schedule; ``mask`` must already be the
+    ``[start:total]`` suffix is NOT assumed — it is sliced here).
     """
-    plans = rnd.compile_rounds(mask[:run.total_steps])
+    plans = rnd.compile_rounds(mask[start:run.total_steps])
     fn = engine.donated_jit(superstep)
     it = iter(batches)
 
@@ -345,6 +450,7 @@ def _drive_rounds(state, superstep, batches, mask, key, run: RunConfig,
         if not block_steps:
             break  # batch stream exhausted mid-schedule
         L = len(block_steps)
+        g0 = start + plan.start   # global step of the round's first step
         # a truncated block never reaches the plan's tail step, whose
         # mask row is the only one that can sync — so its tail is the
         # (all-False) mask row of the last step it does reach
@@ -353,7 +459,7 @@ def _drive_rounds(state, superstep, batches, mask, key, run: RunConfig,
         # mid-round eval/ckpt points read the pre-round master (it only
         # changes at sync): run them before the program donates it
         for i in range(L - 1):
-            maybe_eval_ckpt(plan.start + i, state.master)
+            maybe_eval_ckpt(g0 + i, state.master)
         block = engine.stack_block(block_steps)
         state, losses_dev, key = fn(state, block,
                                     jnp.asarray(tail_mask), key)
@@ -364,9 +470,88 @@ def _drive_rounds(state, superstep, batches, mask, key, run: RunConfig,
         losses = np.asarray(losses_dev)   # one fetch per round
         new_led = snapshot_ledger(state)
         for i in range(L):
-            bookkeep_loss(plan.start + i, float(losses[i]),
+            bookkeep_loss(g0 + i, float(losses[i]),
                           new_led if i == L - 1 else led)
-        maybe_eval_ckpt(plan.start + L - 1, state.master)
-        hist.round_blocks.append((plan.start, L, int(np.sum(tail_mask))))
+        maybe_eval_ckpt(g0 + L - 1, state.master)
+        hist.round_blocks.append((g0, L, int(np.sum(tail_mask))))
         led = new_led
+        if (save_full is not None and run.ckpt_dir and run.ckpt_every
+                and (g0 + L) // run.ckpt_every > g0 // run.ckpt_every):
+            # the first state boundary at/after each ckpt point: full
+            # snapshots land on round boundaries in the round runtime
+            save_full(g0 + L, state, key)
+    return state, key
+
+
+def _drive_fault_rounds(state, superstep, batches, rows, tables, key,
+                        run: RunConfig, hist: History, snapshot_ledger,
+                        bookkeep_loss, maybe_eval_ckpt, save_full=None,
+                        start: int = 0):
+    """Round-runtime drive loop for the fault runtime (DESIGN.md §9).
+
+    Rounds close at *event* steps — scheduled syncs (even all-crashed
+    ones: the empty round still gets its History entry with zero
+    arrivals and zero bits) and payload arrivals — so mid-round ledger
+    snapshots stay exactly the per-step path's.  On resume
+    (``start > 0``) the restored in-flight queue's pending arrival
+    steps are added as extra round boundaries.
+    """
+    T = run.total_steps
+    win = engine.index_rows(rows, slice(start, T))
+    win_tables = scn.FaultTables(*(np.asarray(x)[start:T]
+                                   for x in tables))
+    extra = None
+    if start > 0:
+        pending = np.asarray(state.arrive_at)
+        extra = [int(a) - start for a in np.unique(pending)
+                 if a >= start]
+    plans = rnd.compile_fault_rounds(win.sync, win_tables,
+                                     extra_events=extra)
+    _, arrivals, _ = scn.fault_replay(win.sync, win_tables)
+    fn = engine.donated_jit(superstep)
+    it = iter(batches)
+
+    def take(n: int) -> list:
+        out = []
+        for _ in range(n):
+            try:
+                out.append(next(it))
+            except StopIteration:
+                break
+        return out
+
+    led = snapshot_ledger(state)
+    block_steps = take(plans[0].length) if plans else []
+    for pi, plan in enumerate(plans):
+        if not block_steps:
+            break
+        L = len(block_steps)
+        g0 = start + plan.start
+        block_rows = engine.index_rows(win, slice(plan.start,
+                                                  plan.start + L))
+        if L < plan.length:
+            # truncated block: the steps reached are event-free heads
+            block_rows = block_rows._replace(
+                sync=np.zeros_like(block_rows.sync))
+        for i in range(L - 1):
+            maybe_eval_ckpt(g0 + i, state.master)
+        block = engine.stack_block(block_steps)
+        state, losses_dev, key = fn(state, block, block_rows, key)
+        block_steps = (take(plans[pi + 1].length)
+                       if pi + 1 < len(plans) else [])
+        losses = np.asarray(losses_dev)
+        new_led = snapshot_ledger(state)
+        for i in range(L):
+            bookkeep_loss(g0 + i, float(losses[i]),
+                          new_led if i == L - 1 else led)
+        maybe_eval_ckpt(g0 + L - 1, state.master)
+        # n_synced for a fault round = payloads APPLIED at the tail
+        # (the new semantics; an all-crashed scheduled sync records 0)
+        n_applied = (int(arrivals[plan.start + L - 1].sum())
+                     if L == plan.length else 0)
+        hist.round_blocks.append((g0, L, n_applied))
+        led = new_led
+        if (save_full is not None and run.ckpt_dir and run.ckpt_every
+                and (g0 + L) // run.ckpt_every > g0 // run.ckpt_every):
+            save_full(g0 + L, state, key)
     return state, key

@@ -94,6 +94,47 @@ def scenario_specs(draw, min_participation=0.0):
 
 
 # ---------------------------------------------------------------------------
+# fault-injection specs (core/scenarios.py, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def fault_specs(draw, max_delay=6, allow_crash=True, max_seed=9_999):
+    """Valid FaultSpec dataclasses across the knob space: delay windows,
+    in-flight drops, deterministic crash windows, and random
+    crash/recover churn — singly and combined."""
+    md = draw(st.integers(0, max_delay))
+    crash = ()
+    if allow_crash and draw(st.booleans()):
+        w = draw(st.integers(0, 5))
+        c = draw(st.integers(0, 16))
+        crash = ((w, c, c + 1 + draw(st.integers(0, 8))),)
+    return scn.FaultSpec(
+        max_delay=md,
+        min_delay=draw(st.integers(0, md)),
+        drop=draw(st.floats(0.0, 0.3)),
+        crash=crash,
+        crash_rate=draw(st.floats(0.0, 0.08)),
+        mean_outage=draw(st.floats(1.0, 8.0)),
+        seed=draw(st.integers(0, max_seed)),
+    )
+
+
+@st.composite
+def fault_schedules(draw, max_T=32, max_R=5, max_H=6):
+    """(mask, tables) pairs: a scheduled [T, R] sync mask plus the
+    expanded fault tables that ride it — the exact inputs of
+    ``engine.fault_rows`` / ``scenarios.fault_replay``."""
+    T = draw(st.integers(2, max_T))
+    R = draw(st.integers(1, max_R))
+    H = draw(st.integers(1, max_H))
+    seed = draw(st.integers(0, 9_999))
+    mask = sched.async_schedule(T, R, H, seed=seed)
+    spec = draw(fault_specs())
+    return mask, spec.tables(T, R)
+
+
+# ---------------------------------------------------------------------------
 # parameter pytrees
 # ---------------------------------------------------------------------------
 
@@ -119,6 +160,20 @@ def param_trees(draw, max_leaves=4, max_dim=32):
 # ---------------------------------------------------------------------------
 # deterministic twins (no hypothesis required — run everywhere)
 # ---------------------------------------------------------------------------
+
+#: fixed-seed fault grid covering each fault class alone (delays,
+#: delay floors, drops, deterministic crash windows, random churn) plus
+#: the kitchen-sink preset; the deterministic counterpart of
+#: fault_specs()
+FAULT_GRID = [
+    scn.FaultSpec(),
+    scn.FaultSpec(max_delay=2, seed=1),
+    scn.FaultSpec(max_delay=3, min_delay=1, seed=2),
+    scn.FaultSpec(max_delay=2, drop=0.25, seed=3),
+    scn.FaultSpec(crash=((0, 2, 6), (2, 5, 9))),
+    scn.FaultSpec(max_delay=2, crash_rate=0.08, mean_outage=3.0, seed=4),
+    scn.FAULT_PRESETS["chaos"],
+]
 
 #: fixed-seed scenario grid covering each knob alone plus combinations;
 #: the deterministic counterpart of scenario_specs()
