@@ -84,18 +84,30 @@ def main() -> int:
     print(f"machine-speed factor (median us ratio over {len(ratios)} "
           f"rows): {speed:.3f}")
 
+    # per-row delta summary table, worst calibrated ratio first, so a
+    # regression (or a claimed speedup) is one glance away in CI logs
     failed = []
-    for name, r in sorted(ratios.items()):
+    entries = []
+    for name, r in ratios.items():
         rel = r / speed
         gated = base[name]["us_per_call"] >= args.min_us
         slow = rel > args.tolerance
         mark = ("REGRESSION" if slow and gated
-                else "slow (ungated: below --min-us)" if slow else "ok")
-        print(f"  {name}: {base[name]['us_per_call']:.1f}us -> "
-              f"{cur[name]['us_per_call']:.1f}us  "
-              f"(x{r:.2f} raw, x{rel:.2f} calibrated)  {mark}")
+                else "slow(ungated)" if slow
+                else "faster" if rel < 1 / args.tolerance and gated
+                else "ok")
+        entries.append((rel, name, r, gated, mark))
         if slow and gated:
             failed.append(name)
+    width = max(len(n) for _, n, _, _, _ in entries)
+    hdr = (f"  {'row'.ljust(width)}  {'base us':>10}  {'cur us':>10}  "
+           f"{'delta':>8}  {'raw':>6}  {'calib':>6}  verdict")
+    print(hdr)
+    print("  " + "-" * (len(hdr) - 2))
+    for rel, name, r, gated, mark in sorted(entries, reverse=True):
+        b, c = base[name]["us_per_call"], cur[name]["us_per_call"]
+        print(f"  {name.ljust(width)}  {b:>10.1f}  {c:>10.1f}  "
+              f"{100 * (rel - 1):>+7.1f}%  {r:>6.2f}  {rel:>6.2f}  {mark}")
 
     bit_fails = []
     for name in shared:

@@ -31,6 +31,53 @@ ICI_BW = 50e9
 ART_DIR = "artifacts/dryrun"
 
 
+def kernel_bytes_moved(kernel: str, rows: int, row_len: int, k: int,
+                       kcap: int | None = None,
+                       dtype_bytes: int = 4) -> float:
+    """Minimum HBM traffic (bytes) of one fused compression-kernel
+    launch — the bytes-moved model behind the %-of-HBM-bound column on
+    the ``dispatch/*`` benchmark rows.
+
+    All three kernels stream the [rows, row_len] accumulator once and
+    write their outputs once; none re-reads its inputs (the per-row
+    bisection runs on VMEM-resident blocks):
+
+    * ``topk_compress``: read acc, write (selected, new_memory) dense
+      planes + a per-row count → 3 planes + 4·rows;
+    * ``topk_compact``: read acc, write new_memory dense + the compact
+      (idx, val) survivor buffers (kcap slots/row, idx int32 + val f32)
+      + a per-row count → 2 planes + 2·kcap·rows·4 + 4·rows;
+    * ``qsgd``: read (x, u), write quantized → 3 planes.
+
+    The HBM-bound floor of a launch is then bytes / HBM_BW; the
+    benchmark reports floor/measured as ``pct_hbm`` — near 100% means
+    the kernel is memory-bound at the roofline, small values mean
+    compute (or, in interpret mode, the emulator) dominates.
+    """
+    plane = float(rows) * row_len * dtype_bytes
+    if kernel == "topk_compress":
+        return 3 * plane + 4 * rows
+    if kernel == "topk_compact":
+        if kcap is None:
+            raise ValueError("topk_compact bytes model needs kcap")
+        return 2 * plane + rows * kcap * (4 + dtype_bytes) + 4 * rows
+    if kernel == "qsgd":
+        return 3 * plane
+    raise ValueError(f"unknown kernel {kernel!r}")
+
+
+def hbm_bound_us(bytes_moved: float) -> float:
+    """The roofline floor: time (µs) to move ``bytes_moved`` at HBM_BW."""
+    return bytes_moved / HBM_BW * 1e6
+
+
+def pct_hbm_bound(measured_us: float, bytes_moved: float) -> float:
+    """measured time as a fraction of the HBM-bound floor, in percent
+    (capped nowhere: >100 would mean faster than the model, i.e. the
+    model under-counts)."""
+    return 100.0 * hbm_bound_us(bytes_moved) / max(measured_us, 1e-9)
+
+
 def model_flops(rec: dict) -> float:
     n = rec.get("active_params", rec.get("params", 0))
     if rec["kind"] == "train":

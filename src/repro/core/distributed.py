@@ -1299,6 +1299,30 @@ def make_dist_steps(
 _ROUND_FALLBACK_WARNED = set()
 
 
+def _make_round_core(local_step, sync_step):
+    """One sync round as a traced program: lax.scan of the shard_mapped
+    local step over the head, the sync step once at the tail, key split
+    in-program with the host loop's sequence.  Shared by the fused
+    round program and the windowed multi-round program."""
+    def round_core(state, batch_block, key, *tail_mask):
+        def body(carry, batch):
+            state, key = carry
+            key, sub = jax.random.split(key)
+            state, loss = local_step(state, batch, sub)
+            return (state, key), loss
+
+        head = jax.tree_util.tree_map(lambda x: x[:-1], batch_block)
+        tail = jax.tree_util.tree_map(lambda x: x[-1], batch_block)
+        (state, key), head_losses = jax.lax.scan(
+            body, (state, key), head)
+        key, sub = jax.random.split(key)
+        state, tail_loss = sync_step(state, tail, sub, *tail_mask)
+        return (state, jnp.concatenate([head_losses, tail_loss[None]]),
+                key)
+
+    return round_core
+
+
 def make_dist_round(
     grad_fn: Callable,
     inner_opt: GradientTransform,
@@ -1349,21 +1373,7 @@ def make_dist_round(
     fused = round_scan_supported(mesh, data_axes)
 
     if fused:
-        def round_core(state, batch_block, key, *tail_mask):
-            def body(carry, batch):
-                state, key = carry
-                key, sub = jax.random.split(key)
-                state, loss = local_step(state, batch, sub)
-                return (state, key), loss
-
-            head = jax.tree_util.tree_map(lambda x: x[:-1], batch_block)
-            tail = jax.tree_util.tree_map(lambda x: x[-1], batch_block)
-            (state, key), head_losses = jax.lax.scan(
-                body, (state, key), head)
-            key, sub = jax.random.split(key)
-            state, tail_loss = sync_step(state, tail, sub, *tail_mask)
-            return (state, jnp.concatenate([head_losses, tail_loss[None]]),
-                    key)
+        round_core = _make_round_core(local_step, sync_step)
 
         if partial:
             def round_program(state, batch_block, tail_mask, key):
@@ -1407,6 +1417,116 @@ def make_dist_round(
         round_fallback = fallback_core
 
     return init_fn, round_fallback, False
+
+
+def make_dist_multiround(
+    grad_fn: Callable,
+    inner_opt: GradientTransform,
+    compressor: ShardCompressor,
+    lr_schedule: Callable,
+    mesh,
+    data_axes: Sequence[str] = ("data",),
+    param_specs=None,
+    zero1: bool = False,
+    aggregate: str = "mean_R",
+    downlink: Optional[ShardCompressor] = None,
+    wire: str = "dense_psum",
+    partial: bool = False,
+):
+    """Windowed round program for the mesh engine — the overlapped
+    driver's compiled unit (DESIGN.md §10, the mesh twin of
+    ``engine.make_multiround``).
+
+    Returns ``(init_fn, multiround_fn, fused)``.  ``multiround_fn``
+    takes ``(state, blocks, key)`` — or ``(state, blocks, tail_masks,
+    key)`` with ``partial=True`` — where ``blocks`` stacks W
+    equal-length round blocks ([W, L, ...] leaves) and ``tail_masks``
+    is bool[W, R]; it returns ``(state, losses [W, L], key)``.  The W
+    rounds execute as ONE donated program: an outer ``lax.scan`` whose
+    body is exactly the fused round core, so round w+1's scanned local
+    phase sits in the device queue while round w's sync collective
+    (psum / allgather) completes — the collective pipelines against the
+    next round's compute instead of serializing the dispatch chain.
+
+    Bit-for-bit contract: the scan body is the same round core the
+    serialized ``make_dist_round`` program jits, threading the same key
+    stream, so states, losses and both wire ledgers match the per-round
+    driver exactly.
+
+    On a 0.4.x mesh with a >1 tensor-parallel axis the round core
+    itself cannot be partitioned (``compat.round_scan_supported``;
+    ROADMAP known issue), so windows degrade to a host loop over the
+    per-round fallback — identical trajectories, no overlap — with a
+    one-time warning, and ``fused`` is False.
+    """
+    init_fn, local_step, sync_step = make_dist_steps(
+        grad_fn, inner_opt, compressor, lr_schedule, mesh, data_axes,
+        param_specs, zero1=zero1, aggregate=aggregate, downlink=downlink,
+        wire=wire, partial=partial)
+    fused = round_scan_supported(mesh, data_axes)
+    from repro.core.engine import donated_jit
+
+    if fused:
+        round_core = _make_round_core(local_step, sync_step)
+
+        def multi_core(state, blocks, key, *tail_masks):
+            def body(carry, xs):
+                st, kk = carry
+                if tail_masks:
+                    block, mask = xs
+                    st, ls, kk = round_core(st, block, kk, mask)
+                else:
+                    st, ls, kk = round_core(st, xs, kk)
+                return (st, kk), ls
+
+            xs = (blocks, tail_masks[0]) if tail_masks else blocks
+            (state, key), losses = jax.lax.scan(body, (state, key), xs)
+            return state, losses, key
+
+        if partial:
+            def multiround(state, blocks, tail_masks, key):
+                return multi_core(state, blocks, key, tail_masks)
+        else:
+            multiround = multi_core
+        return init_fn, donated_jit(multiround), True
+
+    if "multiround" not in _ROUND_FALLBACK_WARNED:
+        warnings.warn(
+            "the windowed multi-round program cannot be partitioned on "
+            "a 0.4.x jax mesh with a >1 tensor-parallel axis; windows "
+            "fall back to per-round dispatch — identical trajectories, "
+            "no compute/comm overlap. Use a TP=1 mesh or a modern jax.",
+            stacklevel=2)
+        _ROUND_FALLBACK_WARNED.add("multiround")
+    ls_fb = donated_jit(local_step)
+    ss_fb = donated_jit(sync_step)
+
+    def window_fallback(state, blocks, key, *tail_masks):
+        W = jax.tree_util.tree_leaves(blocks)[0].shape[0]
+        all_losses = []
+        for w in range(W):
+            block = jax.tree_util.tree_map(lambda x, w=w: x[w], blocks)
+            L = jax.tree_util.tree_leaves(block)[0].shape[0]
+            losses = []
+            for i in range(L):
+                batch = jax.tree_util.tree_map(
+                    lambda x, i=i: x[i], block)
+                key, sub = jax.random.split(key)
+                if i == L - 1:
+                    tm = ((tail_masks[0][w],) if tail_masks else ())
+                    state, loss = ss_fb(state, batch, sub, *tm)
+                else:
+                    state, loss = ls_fb(state, batch, sub)
+                losses.append(loss)
+            all_losses.append(jnp.stack(losses))
+        return state, jnp.stack(all_losses), key
+
+    if partial:
+        def multiround_fb(state, blocks, tail_masks, key):
+            return window_fallback(state, blocks, key, tail_masks)
+    else:
+        multiround_fb = window_fallback
+    return init_fn, multiround_fb, False
 
 
 # ---------------------------------------------------------------------------

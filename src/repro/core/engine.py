@@ -662,6 +662,133 @@ def run_rounds(
     return state, [float(x) for ls in losses for x in np.asarray(ls)]
 
 
+def make_multiround(superstep):
+    """Scan a round program over a *window* of equal-length rounds — the
+    overlapped round driver's compiled unit (DESIGN.md §10).
+
+    The returned function takes ``(state, blocks, tail_masks, key)``
+    with ``blocks`` stacking W round blocks ([W, L, R, ...] leaves) and
+    ``tail_masks`` the W tail sync rows ([W] scalars or [W, R]), and
+    returns ``(state, losses [W, L], leds, key)``.
+
+    Bit-for-bit contract: the scan body IS the superstep, so the key
+    stream, every state leaf and both bits ledgers evolve exactly as W
+    back-to-back superstep calls — the only change is scheduling: the
+    device queue holds round w+1's scanned local phase before round w's
+    sync collective is consumed, and the host pays one dispatch per
+    window.  ``leds`` carries the per-round ledger scalars (bits,
+    bits_down, rounds, and the per-leaf vectors when the ledger is on)
+    stacked [W, ...], so a driver can reconstruct every mid-window
+    round boundary's ledger without materializing mid-window states —
+    that is what keeps the trainer's per-step History identical.
+    """
+    def multiround(state: EngineState, blocks, tail_masks, key):
+        if state.bits_down is None:  # states minted before the ledger split
+            state = state._replace(bits_down=jnp.zeros((), jnp.float32))
+
+        def body(carry, xs):
+            st, kk = carry
+            block, mask = xs
+            st, ls, kk = superstep(st, block, mask, kk)
+            led = {"bits": st.bits, "bits_down": st.bits_down,
+                   "rounds": st.rounds}
+            if st.leaf_bits is not None:
+                led["leaf_bits"] = st.leaf_bits
+            if st.leaf_bits_down is not None:
+                led["leaf_bits_down"] = st.leaf_bits_down
+            return (st, kk), (ls, led)
+
+        (state, key), (losses, leds) = jax.lax.scan(
+            body, (state, key), (blocks, tail_masks))
+        return state, losses, leds, key
+
+    return multiround
+
+
+def _multiround_for(superstep):
+    """One :func:`make_multiround` per superstep, cached on the
+    superstep itself (same idiom as :func:`_donated`)."""
+    cached = getattr(superstep, "_multiround", None)
+    if cached is None:
+        cached = make_multiround(superstep)
+        try:
+            superstep._multiround = cached
+        except AttributeError:
+            pass
+    return cached
+
+
+def stack_window(steps, W: int, L: int):
+    """Stack W·L per-step batches into one [W, L, ...] window block."""
+    flat = stack_block(steps)
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((W, L) + x.shape[1:]), flat)
+
+
+def run_rounds_overlap(
+    state: EngineState,
+    superstep,                    # from make_superstep
+    batches,                      # iterable of [R, ...] batches
+    sync_mask,                    # bool[T] (all-agree) or bool[T, R]
+    key,
+    jit: bool = True,
+    window: int = 8,
+) -> tuple[EngineState, list[float]]:
+    """Overlapped counterpart of :func:`run_rounds`: consecutive
+    equal-length rounds dispatch as scanned multi-round windows
+    (``rounds.window_rounds`` → :func:`make_multiround`), so round r+1's
+    local phase is already in the device queue while round r's sync
+    collective completes and the host's per-round dispatch cost is paid
+    once per window.  Trajectories — states, both bits ledgers, losses,
+    the key stream — are bit-for-bit :func:`run_rounds`'s (the scan
+    body is the same superstep; see make_multiround).  The state
+    argument is consumed.
+    """
+    from repro.core import rounds as rnd
+    plans = rnd.compile_rounds(sync_mask)
+    windows = rnd.window_rounds(plans, max_window=window)
+    serial = _donated(superstep) if jit else superstep
+    multi = _multiround_for(superstep)
+    mfn = _donated(multi, attr="_multiround_jit") if jit else multi
+    losses = []
+    it = iter(batches)
+    stop = False
+    for win in windows:
+        W, L = len(win), win[0].length
+        steps = []
+        for _ in range(W * L):
+            try:
+                steps.append(next(it))
+            except StopIteration:
+                break
+        if W == 1 or len(steps) < W * L:
+            # singleton window, or the batch stream ran dry mid-window:
+            # fall back to the serialized per-round path (identical
+            # trajectories; handles the truncated tail like run_rounds)
+            for wi, plan in enumerate(win):
+                seg = steps[wi * L:(wi + 1) * L]
+                if not seg:
+                    stop = True
+                    break
+                tail = (plan.mask if len(seg) == plan.length
+                        else np.zeros_like(plan.mask))
+                state, ls, key = serial(state, stack_block(seg),
+                                        jnp.asarray(tail), key)
+                losses.append(ls)
+                if len(seg) < plan.length:
+                    stop = True
+                    break
+            if stop:
+                break
+            continue
+        blocks = stack_window(steps, W, L)
+        masks = jnp.asarray(np.stack([np.asarray(p.mask) for p in win]))
+        state, ls, _leds, key = mfn(state, blocks, masks, key)
+        losses.append(ls)
+    return state, [float(x) for ls in losses
+                   for x in np.asarray(ls).reshape(-1)]
+
+
 # ---------------------------------------------------------------------------
 # staleness-first fault runtime (DESIGN.md §9)
 # ---------------------------------------------------------------------------

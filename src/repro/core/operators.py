@@ -62,6 +62,22 @@ def resolve_k(k: int | float, d: int) -> int:
     return max(1, min(kk, d))
 
 
+def _rand_subset(key, d: int, k: int) -> Array:
+    """Uniform k-subset of [0, d) without replacement: the indices of
+    the k smallest keyed uniforms (a threshold selection / Gumbel-top-k
+    with the identity weight).  Replaces
+    ``jax.random.choice(replace=False)``, whose full permutation is an
+    O(d log d) argsort per call — the op/randk_1pct pathology — with
+    one ``lax.top_k`` partial selection; the draw is exactly as uniform
+    and the wire-bit accounting (``bits_randk``: d, k and the seed
+    cross the wire, never the indices) is unchanged."""
+    if k >= d:
+        return jnp.arange(d)
+    u = jax.random.uniform(key, (d,))
+    _, idx = jax.lax.top_k(-u, k)
+    return idx
+
+
 # ---------------------------------------------------------------------------
 # base
 # ---------------------------------------------------------------------------
@@ -149,7 +165,7 @@ class RandK(CompressionOp):
         d = _static_size(x)
         k = resolve_k(self.k, d)
         xf = x.astype(jnp.float32)
-        idx = jax.random.choice(key, d, shape=(k,), replace=False)
+        idx = _rand_subset(key, d, k)
         out = jnp.zeros_like(xf).at[idx].set(xf[idx])
         # Rand_k indices can be seeded: only the seed + values cross the wire.
         bits = bitlib.bits_randk(d, k, self.value_bits)
@@ -323,7 +339,7 @@ class QuantizedSparsifier(CompressionOp):
         if self.sparsifier == "top":
             _, idx = jax.lax.top_k(jnp.abs(xf), k)
         else:
-            idx = jax.random.choice(k_key, d, shape=(k,), replace=False)
+            idx = _rand_subset(k_key, d, k)
         sel = xf[idx]  # compact k-vector: quantize it as a k-dim vector
         if self.quantizer == "qsgd":
             qsel = qsgd_quantize(q_key, sel, self.s)
@@ -378,7 +394,7 @@ class SignSparsifier(CompressionOp):
         if self.sparsifier == "top":
             _, idx = jax.lax.top_k(jnp.abs(xf), k)
         else:
-            idx = jax.random.choice(key, d, shape=(k,), replace=False)
+            idx = _rand_subset(key, d, k)
         sel = xf[idx]
         if self.m == 1:
             norm = jnp.sum(jnp.abs(sel))

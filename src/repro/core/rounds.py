@@ -188,3 +188,65 @@ def round_lengths(plans: Sequence[RoundPlan]) -> list[int]:
         if p.length not in seen:
             seen.append(p.length)
     return seen
+
+
+def window_rounds(plans: Sequence[RoundPlan], max_window: int = 8,
+                  boundary_steps: Sequence[int] = ()
+                  ) -> list[list[RoundPlan]]:
+    """Group consecutive round plans into dispatch windows for the
+    overlapped round driver (``engine.run_rounds_overlap``, DESIGN.md
+    §10): each window executes as ONE scanned multi-round program, so
+    the device queue always holds the next round's local phase while
+    the current round's sync collective completes, and the host pays
+    one dispatch per window instead of one per round.
+
+    Window rules — these are what keep the overlapped trajectories
+    bit-for-bit the serialized driver's:
+
+    * only consecutive plans of equal ``length`` share a window (the
+      stacked batch blocks and tail masks must be rectangular; the key
+      stream threads through the scan exactly as through back-to-back
+      superstep calls either way);
+    * a plan containing any step in ``boundary_steps`` (0-based, in the
+      plans' own index space) is a singleton window — the caller needs
+      the materialized state at that point (eval / checkpoint / full
+      snapshot reads), so the window must not scan past it;
+    * runs chunk greedily into power-of-two sizes ≤ ``max_window``, so
+      each distinct (window, length) pair costs at most one XLA
+      compilation and a run of W equal rounds compiles O(log W)
+      executables, not O(W).
+
+    Returns a list of windows (each a non-empty list of contiguous
+    plans); concatenating them reproduces ``plans`` exactly.
+    """
+    if max_window < 1:
+        raise ValueError(f"max_window must be >= 1, got {max_window}")
+    bounds = sorted(set(int(b) for b in boundary_steps))
+
+    def has_boundary(p: RoundPlan) -> bool:
+        return any(p.start <= b < p.stop for b in bounds)
+
+    windows: list[list[RoundPlan]] = []
+    run: list[RoundPlan] = []
+
+    def flush():
+        nonlocal run
+        i = 0
+        while i < len(run):
+            w = 1
+            while w * 2 <= min(max_window, len(run) - i):
+                w *= 2
+            windows.append(run[i:i + w])
+            i += w
+        run = []
+
+    for p in plans:
+        if has_boundary(p):
+            flush()
+            windows.append([p])
+            continue
+        if run and run[-1].length != p.length:
+            flush()
+        run.append(p)
+    flush()
+    return windows

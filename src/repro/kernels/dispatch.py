@@ -83,6 +83,11 @@ from repro.kernels.launch_stats import (  # noqa: F401 — re-exported
 
 LANES = 128  # TPU vector lane width: kernel rows are padded to this
 
+#: the historical fixed grid geometry — the fallback when a shape has
+#: no tuning-table entry and ``block_rows`` is on auto (None)
+DEFAULT_BLOCK_ROWS = 8
+DEFAULT_CHUNK = 128
+
 
 @dataclasses.dataclass(frozen=True)
 class DispatchConfig:
@@ -98,7 +103,13 @@ class DispatchConfig:
     max_cap:  largest compact survivor capacity (elements per row) the
               compact kernel accepts; bounds the (block_rows, chunk,
               kcap) one-hot intermediate of the slot scatter
-    block_rows: grid block height handed to the kernels
+    block_rows: grid block height handed to the kernels.  ``None``
+          (default) resolves per launch signature through the autotune
+          table (kernels/autotune.py; LRU → persisted per-device table
+          → ``DEFAULT_BLOCK_ROWS``), so untuned shapes behave exactly
+          like the historical fixed geometry; an explicit int always
+          wins over the table.  The kernels are row-independent, so the
+          choice changes timing only — outputs are bit-identical.
     pack: megabuffer-pack same-bucket leaves in compress_tree (one
           kernel launch per operator family per sync round)
     interpret: None — auto (interpret off-TPU); bool to force
@@ -108,7 +119,7 @@ class DispatchConfig:
     min_size: int = 1 << 16
     max_row: int = 1 << 19
     max_cap: int = 1 << 11
-    block_rows: int = 8
+    block_rows: Optional[int] = None
     pack: bool = True
     interpret: Optional[bool] = None
 
@@ -134,6 +145,32 @@ DEFAULT = DispatchConfig()
 
 def _resolve(cfg: Optional[DispatchConfig]) -> DispatchConfig:
     return cfg if cfg is not None else DEFAULT
+
+
+def _block_rows(cfg: DispatchConfig, kernel: str, rows: int, row_len: int,
+                k: int, sign: bool) -> int:
+    """Resolve one launch's grid height: an explicit
+    ``cfg.block_rows`` wins, then the autotune table (hit/miss counters
+    in ``launch_stats.TUNE_CACHE``), then the historical heuristic."""
+    if cfg.block_rows is not None:
+        return cfg.block_rows
+    from repro.kernels import autotune
+    ent = autotune.lookup(kernel, rows, row_len, k, sign)
+    return ent.block_rows if ent is not None else DEFAULT_BLOCK_ROWS
+
+
+def _compact_geometry(cfg: DispatchConfig, rows: int, row_len: int,
+                      k: int, sign: bool) -> tuple[int, int]:
+    """(block_rows, chunk) for a ``topk_compact`` launch — same
+    resolution order; an explicit ``block_rows=`` pins the chunk to the
+    default too (geometry is tuned as a pair)."""
+    if cfg.block_rows is not None:
+        return cfg.block_rows, DEFAULT_CHUNK
+    from repro.kernels import autotune
+    ent = autotune.lookup("topk_compact", rows, row_len, k, sign)
+    if ent is not None:
+        return ent.block_rows, ent.chunk or DEFAULT_CHUNK
+    return DEFAULT_BLOCK_ROWS, DEFAULT_CHUNK
 
 
 # ---------------------------------------------------------------------------
@@ -246,9 +283,10 @@ def _plan_topk(rule_name: str, op, x):
 
 def _run_topk_family(rule_name: str, op, key, x, cfg):
     rows, k, sign, bits_of = _plan_topk(rule_name, op, x)
+    br = _block_rows(cfg, "topk_compress", rows.shape[0], rows.shape[1],
+                     k, sign)
     sel, _mem, cnt = _topk.topk_compress(
-        rows, k, sign=sign, block_rows=cfg.block_rows,
-        interpret=cfg._interpret())
+        rows, k, sign=sign, block_rows=br, interpret=cfg._interpret())
     return _restore(sel, x), bits_of(jnp.sum(cnt))
 
 
@@ -258,9 +296,11 @@ def _run_qsgd(op: QSGDQuantizer, key, x, cfg):
     # uniforms drawn exactly like the reference operator (same key, same
     # flat shape) keep the stochastic rounding bit-identical
     u = jax.random.uniform(key, flat.shape)
+    row = _pad_to(flat, LANES)[None, :]
+    br = _block_rows(cfg, "qsgd", 1, row.shape[1], op.s, False)
     out = _qsgd.qsgd_quantize(
-        _pad_to(flat, LANES)[None, :], _pad_to(u, LANES)[None, :], op.s,
-        block_rows=cfg.block_rows, interpret=cfg._interpret())
+        row, _pad_to(u, LANES)[None, :], op.s,
+        block_rows=br, interpret=cfg._interpret())
     out = _restore(out, x)
     nz = jnp.sum(out != 0.0)
     return out, bitlib.bits_qsgd(d, op.s, nz)
@@ -364,9 +404,10 @@ def topk_rows(rows: jnp.ndarray, k: int, *, sign: bool = False,
     outputs.  Callers are responsible for :func:`rows_eligible`.
     """
     cfg = _resolve(cfg)
+    br = _block_rows(cfg, "topk_compress", rows.shape[0], rows.shape[1],
+                     k, sign)
     return _topk.topk_compress(
-        rows, k, sign=sign, block_rows=cfg.block_rows,
-        interpret=cfg._interpret())
+        rows, k, sign=sign, block_rows=br, interpret=cfg._interpret())
 
 
 def compact_rows(rows: jnp.ndarray, k: int, kcap: int, *,
@@ -388,8 +429,9 @@ def compact_rows(rows: jnp.ndarray, k: int, kcap: int, *,
     cfg = _resolve(cfg)
     n = rows.shape[1]
     if compact_rows_eligible(n, kcap, cfg, leaf_size=leaf_size):
+        br, chunk = _compact_geometry(cfg, rows.shape[0], n, k, sign)
         return _topk.topk_compact(
-            rows, k, kcap, sign=sign, block_rows=cfg.block_rows,
+            rows, k, kcap, sign=sign, block_rows=br, chunk=chunk,
             interpret=cfg._interpret())
     from repro.kernels.ref import topk_compact_ref
     return topk_compact_ref(rows.astype(jnp.float32), k, kcap, sign=sign)
@@ -482,8 +524,9 @@ def compact_compress(op: CompressionOp, key, x: jnp.ndarray,
     # (its dtype guard included — compact_rows alone never sees x.dtype)
     used = would_compact(op, x.shape, x.dtype, cfg)
     if used:
+        br, chunk = _compact_geometry(cfg, rows.shape[0], n, k, sign)
         idx, val, mem, cnt = _topk.topk_compact(
-            rows, k, kcap, sign=sign, block_rows=cfg.block_rows,
+            rows, k, kcap, sign=sign, block_rows=br, chunk=chunk,
             interpret=cfg._interpret())
     else:
         from repro.kernels.ref import topk_compact_ref
@@ -557,8 +600,10 @@ def _compress_leaves_packed(ops, keys, leaves, cfg, want_mem: bool = False):
     for (_, k, sign), entries in topk_buckets.items():
         mega = (entries[0][1] if len(entries) == 1
                 else jnp.concatenate([e[1] for e in entries], axis=0))
+        br = _block_rows(cfg, "topk_compress", mega.shape[0], mega.shape[1],
+                         k, sign)
         sel, mem, cnt = _topk.topk_compress(
-            mega, k, sign=sign, block_rows=cfg.block_rows,
+            mega, k, sign=sign, block_rows=br,
             interpret=cfg._interpret())
         off = 0
         for i, rows, bits_of, x in entries:
@@ -574,7 +619,8 @@ def _compress_leaves_packed(ops, keys, leaves, cfg, want_mem: bool = False):
                 else jnp.concatenate([e[1] for e in entries], axis=0))
         megau = (entries[0][2] if len(entries) == 1
                  else jnp.concatenate([e[2] for e in entries], axis=0))
-        out = _qsgd.qsgd_quantize(mega, megau, s, block_rows=cfg.block_rows,
+        br = _block_rows(cfg, "qsgd", mega.shape[0], mega.shape[1], s, False)
+        out = _qsgd.qsgd_quantize(mega, megau, s, block_rows=br,
                                   interpret=cfg._interpret())
         for off, (i, _row, _urow, op, x) in enumerate(entries):
             o = _restore(out[off:off + 1], x)
@@ -658,3 +704,70 @@ def channel_compress_tree(op_tree, key, acc,
     if want_leaf_bits:
         return out + (list(bit_terms),)
     return out
+
+
+# ---------------------------------------------------------------------------
+# launch-plan introspection (the autotuner's work list)
+# ---------------------------------------------------------------------------
+
+
+def _plan_topk_shape(rule_name: str, op, shape) -> tuple[int, int, int, bool]:
+    """Shape-only twin of :func:`_plan_topk`: (rows, row_len, k, sign)
+    of the pre-shaped kernel buffer, without building arrays."""
+    d = _size(shape)
+    if rule_name in ("topk_global", "signtopk_global"):
+        return (1, _padded_len(d, LANES), resolve_k(op.k, d),
+                rule_name == "signtopk_global")
+    row = _row_len_of(op, shape)
+    return (_padded_len(d, row) // row, row, resolve_k(op.k, row),
+            rule_name == "row_signtopk")
+
+
+def launch_plans(op_tree, tree, cfg: Optional[DispatchConfig] = None,
+                 *, compact: bool = False) -> list:
+    """The static kernel-launch signatures :func:`compress_tree` /
+    :func:`channel_compress_tree` would dispatch for this (op_tree,
+    params-like tree) — mirroring the megabuffer bucketing under
+    ``cfg.pack`` — as ``autotune.ShapeKey`` rows.  This is exactly the
+    autotuner's work list (``autotune.tune_for_run``): tune these keys
+    and every launch of the run resolves through the table.
+
+    ``compact=True`` maps Top_k-family plans onto the compact-emission
+    kernel (``topk_compact``) instead — the sparse-allgather wire of
+    the distributed engine."""
+    from repro.kernels.autotune import ShapeKey
+    cfg = _resolve(cfg)
+    plans: list = []
+    if not cfg.kernels_enabled():
+        return plans
+    leaves = jax.tree_util.tree_leaves(tree)
+    ops = ops_for_leaves(op_tree, len(leaves))
+    topk_name = "topk_compact" if compact else "topk_compress"
+    topk_buckets: dict = {}
+    qsgd_buckets: dict = {}
+    for op, x in zip(ops, leaves):
+        rule = select_rule(op, x.shape, x.dtype, cfg)
+        if rule is None:
+            continue
+        if rule.name == "qsgd_global":
+            n = _padded_len(_size(x.shape), LANES)
+            qsgd_buckets[(n, op.s)] = qsgd_buckets.get((n, op.s), 0) + 1
+        else:
+            rows, n, k, sign = _plan_topk_shape(rule.name, op, x.shape)
+            topk_buckets[(n, k, sign)] = (
+                topk_buckets.get((n, k, sign), 0) + rows)
+            if not cfg.pack:
+                key = ShapeKey(topk_name, rows, n, k, sign)
+                if key not in plans:
+                    plans.append(key)
+    if cfg.pack:
+        for (n, k, sign), rows in topk_buckets.items():
+            plans.append(ShapeKey(topk_name, rows, n, k, sign))
+        for (n, s), rows in qsgd_buckets.items():
+            plans.append(ShapeKey("qsgd", rows, n, s, False))
+    else:
+        for (n, s), count in qsgd_buckets.items():
+            key = ShapeKey("qsgd", 1, n, s, False)
+            if key not in plans:
+                plans.append(key)
+    return plans

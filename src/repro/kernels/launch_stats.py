@@ -11,10 +11,21 @@ from __future__ import annotations
 
 LAUNCHES = {"topk_compress": 0, "topk_compact": 0, "qsgd": 0}
 
+#: trace-time tuning-table resolution counters (kernels/autotune.py):
+#: ``hit`` — the LRU already held the shape's resolution, ``miss`` — the
+#: persisted table (or the heuristic fallback) had to be consulted.
+#: Incremented only when a DispatchConfig leaves ``block_rows`` on auto.
+TUNE_CACHE = {"hit": 0, "miss": 0}
+
 
 def reset_launches() -> None:
     for k in LAUNCHES:
         LAUNCHES[k] = 0
+
+
+def reset_tune_cache() -> None:
+    for k in TUNE_CACHE:
+        TUNE_CACHE[k] = 0
 
 
 def total_launches() -> int:

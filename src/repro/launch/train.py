@@ -139,6 +139,28 @@ def main():
                          "'step' keeps per-step dispatch.  Identical "
                          "trajectories; 0.4.x TP>1 meshes auto-fall "
                          "back to per-step with a warning")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlapped round driver (DESIGN.md §10): "
+                         "dispatch windows of consecutive equal-length "
+                         "rounds as one scanned multi-round program, "
+                         "pipelining each round's sync collective "
+                         "against the next round's local compute.  "
+                         "Bit-for-bit trajectories; the wire-bits log "
+                         "coarsens to window granularity.  Requires "
+                         "--runtime round; unsupported with --faults")
+    ap.add_argument("--overlap-window", type=int, default=8,
+                    help="max rounds per overlapped window "
+                         "(power-of-2 chunks)")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune the run's compression-kernel launch "
+                         "signatures (kernels/autotune.py) before "
+                         "training and persist the winning block "
+                         "geometry to the per-device tuning table "
+                         "(artifacts/tuning/<device>.json); already-"
+                         "tuned signatures are reused")
+    ap.add_argument("--retune", action="store_true",
+                    help="with --tune: re-measure signatures already "
+                         "in the tuning table")
     ap.add_argument("--faults", default=None,
                     help="fault-injection spec (core/scenarios.py "
                          "FaultSpec, DESIGN.md §9): 'preset:<name>' "
@@ -187,6 +209,16 @@ def main():
     params = model.init_params(jax.random.PRNGKey(0), cfg)
     channel_spec = resolve_policy_arg(args)
     print("policy:", channel_spec.to_string(), flush=True)
+    if args.tune:
+        from repro.kernels import autotune
+        from repro.kernels.dispatch import DispatchConfig
+        up_tree, down_tree = channel_spec.resolve(params)
+        fresh = autotune.tune_for_run(
+            up_tree, params, DispatchConfig(mode=args.dispatch),
+            downlink=down_tree, retune=args.retune)
+        print(f"tune: {len(fresh)} measured, "
+              f"{autotune.tune.last_cached} cached -> "
+              f"{autotune.table_path()}", flush=True)
     uplink = ShardCompressor.from_spec(
         channel_spec.uplink, params, dispatch=args.dispatch)
     downlink = None
@@ -242,6 +274,13 @@ def main():
     engine_kw = dict(zero1=args.zero1, aggregate=args.aggregate,
                      downlink=downlink, wire=args.wire,
                      partial=scenario_mask is not None)
+    if args.overlap:
+        if args.runtime != "round":
+            raise SystemExit("--overlap requires --runtime round")
+        if args.faults is not None:
+            raise SystemExit(
+                "--overlap is unsupported with --faults: arrival "
+                "events segment rounds dynamically")
     if fault_spec is not None:
         from repro.core.distributed import (make_dist_fault_round,
                                             make_dist_fault_steps)
@@ -257,6 +296,13 @@ def main():
         else:
             init_fn, local_step, sync_step = make_dist_fault_steps(
                 *engine_args, **fault_kw)
+    elif args.runtime == "round" and args.overlap:
+        from repro.core.distributed import make_dist_multiround
+        init_fn, multi_fn, fused = make_dist_multiround(
+            *engine_args, **engine_kw)
+        print(f"runtime: round overlap "
+              f"({'fused' if fused else 'per-round fallback'}), "
+              f"window {args.overlap_window}", flush=True)
     elif args.runtime == "round":
         init_fn, round_fn, fused = make_dist_round(*engine_args, **engine_kw)
         print(f"runtime: round ({'fused' if fused else 'per-step fallback'})",
@@ -311,7 +357,65 @@ def main():
                 return bool(scenario_mask[t].any())
             return (t + 1) % args.H == 0 or t == args.steps - 1
 
-        if args.runtime == "round":
+        if args.runtime == "round" and args.overlap:
+            # overlapped round runtime (DESIGN.md §10): windows of
+            # consecutive equal-length rounds run as ONE scanned
+            # multi-round program — the sync collective of round w
+            # pipelines against round w+1's local compute.  Same key
+            # threading as the per-round loop below, so trajectories
+            # match; wire-bit logging coarsens to window granularity
+            # (interior tail steps show the pre-window totals).
+            from repro.core import rounds as rnd_mod
+            plans, s0 = [], 0
+            for t in range(args.steps):
+                if is_sync_step(t) or t == args.steps - 1:
+                    tail = (scenario_mask[t] if scenario_mask is not None
+                            else np.asarray(is_sync_step(t)))
+                    plans.append(rnd_mod.RoundPlan(
+                        s0, t - s0 + 1, np.asarray(tail)))
+                    s0 = t + 1
+            windows = rnd_mod.window_rounds(
+                plans, max_window=args.overlap_window)
+            batch_iter = stream.batches(args.batch, args.seq, args.steps,
+                                        seed=1)
+            mirror = key
+            for win in windows:
+                W, L = len(win), win[0].length
+                pending = []
+                for _ in range(W * L):
+                    mirror, sub = jax.random.split(mirror)
+                    pending.append(make_batch(next(batch_iter), sub))
+                blocks = jax.tree_util.tree_map(
+                    lambda x: x.reshape((W, L) + x.shape[1:]),
+                    stack_block(pending))
+                prev_up = float(state.bits)
+                prev_down = float(state.bits_down)
+                if scenario_mask is not None:
+                    masks_arr = jnp.asarray(
+                        np.stack([np.asarray(p.mask) for p in win]))
+                    state, losses, key = multi_fn(state, blocks,
+                                                  masks_arr, key)
+                else:
+                    state, losses, key = multi_fn(state, blocks, key)
+                mirror = key
+                if launch_note is None:
+                    launch_note = launch_note_once()
+                losses = np.asarray(losses)
+                for wi, plan in enumerate(win):
+                    for i in range(L):
+                        tail = i == L - 1
+                        final = tail and wi == W - 1
+                        last_loss = float(losses[wi, i])
+                        log_step(
+                            plan.start + i,
+                            "sync " if tail and is_sync_step(plan.stop - 1)
+                            else "local",
+                            last_loss,
+                            float(state.bits) if final else prev_up,
+                            float(state.bits_down) if final else prev_down,
+                            f" launches/round [{launch_note}]"
+                            if final else "")
+        elif args.runtime == "round":
             # round runtime (DESIGN.md §7): accumulate steps until the
             # schedule's next sync, run the block as one program.  The
             # round program splits the PRNG key in-program with the

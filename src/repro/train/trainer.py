@@ -65,6 +65,23 @@ class RunConfig:
     # "step" keeps the per-step host loop.  Bit-for-bit identical
     # trajectories and History either way.
     runtime: str = "round"  # "round" | "step"
+    # overlapped round driver (DESIGN.md §10): dispatch consecutive
+    # equal-length rounds as ONE scanned multi-round window, so round
+    # r+1's local phase is in the device queue before round r's sync
+    # collective is consumed.  Bit-for-bit the serialized driver on
+    # states, both bits ledgers, losses and History (rounds containing
+    # eval/ckpt points run as singleton windows).  Requires the round
+    # runtime; unsupported with fault injection.
+    overlap: bool = False
+    overlap_window: int = 8   # max rounds per window (power-of-2 chunks)
+    # kernel autotuning (kernels/autotune.py, DESIGN.md §10): before
+    # training, time the run's exact compression launch signatures over
+    # the block-geometry candidates and persist the winners to the
+    # per-device tuning table — DispatchConfig then resolves block_rows
+    # through the table transparently.  Tuning changes timing only,
+    # never outputs (block geometry is scheduling, not math).
+    tune: bool = False
+    retune: bool = False      # re-measure signatures already tabled
     # THE compression-configuration surface (DESIGN.md §6): a
     # ``core.policy`` spec — PolicySpec / ChannelSpec / OpSpec, the DSL
     # string form ("topk:k=0.01", "norm->identity;.*->topk:k=0.01",
@@ -240,12 +257,27 @@ def train(
         raise ValueError(
             f"RunConfig.runtime must be 'round' or 'step', "
             f"got {run.runtime!r}")
+    if run.overlap:
+        if run.runtime != "round":
+            raise ValueError(
+                "RunConfig.overlap requires the round runtime "
+                "(runtime='round'); the per-step loop has no rounds "
+                "to window")
+        if run.faults is not None:
+            raise ValueError(
+                "RunConfig.overlap is unsupported with fault injection: "
+                "the fault runtime's arrival events segment rounds "
+                "dynamically (run with overlap=False)")
     key = jax.random.PRNGKey(run.seed)
     hist = History()
     t0 = time.time()
     dispatch = DispatchConfig(mode=run.dispatch, pack=run.pack)
     operator, downlink, channel_spec = resolve_run_channels(
         operator, run, params)
+    if run.tune:
+        from repro.kernels import autotune
+        autotune.tune_for_run(operator, params, dispatch,
+                              downlink=downlink, retune=run.retune)
     scn.validate_staleness_weight(run.staleness_weight)
     fault_spec = None
     tables = None
@@ -386,7 +418,8 @@ def train(
             dispatch=dispatch, global_rounds=not run.asynchronous,
             downlink=downlink, leaf_ledger=run.leaf_ledger,
             aggregate=run.aggregate)
-        state, key = _drive_rounds(
+        drive = _drive_rounds_overlap if run.overlap else _drive_rounds
+        state, key = drive(
             state, superstep, batches, mask, key, run, hist,
             snapshot_ledger, bookkeep_loss, maybe_eval_ckpt,
             save_full, start=start)
@@ -480,6 +513,119 @@ def _drive_rounds(state, superstep, batches, mask, key, run: RunConfig,
             # the first state boundary at/after each ckpt point: full
             # snapshots land on round boundaries in the round runtime
             save_full(g0 + L, state, key)
+    return state, key
+
+
+def _drive_rounds_overlap(state, superstep, batches, mask, key,
+                          run: RunConfig, hist: History, snapshot_ledger,
+                          bookkeep_loss, maybe_eval_ckpt, save_full=None,
+                          start: int = 0):
+    """The overlapped round-runtime drive loop (DESIGN.md §10):
+    consecutive equal-length rounds execute as ONE scanned multi-round
+    window (``rounds.window_rounds`` → ``engine.make_multiround``), so
+    the device queue holds round r+1's local phase while round r's sync
+    collective completes and the host pays one dispatch per window.
+
+    History contract: identical to :func:`_drive_rounds` — the
+    multi-round program emits per-round ledger stacks, so every round
+    boundary's bits/rounds snapshot (and the per-step loss view built
+    from them) is exactly the serialized driver's without materializing
+    mid-window states.  Rounds containing eval/ckpt trigger steps are
+    forced into singleton windows (``boundary_steps``), where the
+    serialized body below preserves the donation discipline: mid-round
+    reads happen before the round program consumes the state.
+    """
+    T = run.total_steps
+    plans = rnd.compile_rounds(mask[start:T])
+    bounds = set()
+    if run.eval_every:
+        bounds.update(t - start for t in range(start, T)
+                      if (t + 1) % run.eval_every == 0)
+    if run.ckpt_dir and run.ckpt_every:
+        bounds.update(t - start for t in range(start, T)
+                      if (t + 1) % run.ckpt_every == 0)
+    windows = rnd.window_rounds(plans, max_window=run.overlap_window,
+                                boundary_steps=sorted(bounds))
+    serial_fn = engine.donated_jit(superstep)
+    multi_fn = engine.donated_jit(engine._multiround_for(superstep))
+    it = iter(batches)
+
+    def take(n: int) -> list:
+        out = []
+        for _ in range(n):
+            try:
+                out.append(next(it))
+            except StopIteration:
+                break
+        return out
+
+    led = snapshot_ledger(state)
+    for win in windows:
+        W, L = len(win), win[0].length
+        steps = take(W * L)
+        if W > 1 and len(steps) == W * L:
+            # ---- overlapped window: one dispatch, W scanned rounds --
+            g0 = start + win[0].start
+            blocks = engine.stack_window(steps, W, L)
+            masks_arr = jnp.asarray(
+                np.stack([np.asarray(p.mask) for p in win]))
+            state, losses_dev, leds_dev, key = multi_fn(
+                state, blocks, masks_arr, key)
+            losses = np.asarray(losses_dev)              # [W, L]
+            leds = {k: np.asarray(v) for k, v in leds_dev.items()}
+            for wi, plan in enumerate(win):
+                r0 = g0 + wi * L
+                round_led = {
+                    "bits": float(leds["bits"][wi]),
+                    "bits_down": float(leds["bits_down"][wi]),
+                    "rounds": int(leds["rounds"][wi]),
+                }
+                if run.leaf_ledger:
+                    round_led["leaf_bits"] = [
+                        float(b) for b in leds["leaf_bits"][wi]]
+                    round_led["leaf_bits_down"] = [
+                        float(b) for b in leds["leaf_bits_down"][wi]]
+                for i in range(L):
+                    bookkeep_loss(r0 + i, float(losses[wi, i]),
+                                  round_led if i == L - 1 else led)
+                hist.round_blocks.append(
+                    (r0, L, int(np.sum(np.asarray(plan.mask)))))
+                led = round_led
+            # no eval/ckpt/full-snapshot points can fall inside a
+            # multi-round window: those rounds are singletons above
+            continue
+        # ---- singleton window / truncated stream: serialized body ---
+        exhausted = False
+        for wi, plan in enumerate(win):
+            seg = steps[wi * L:(wi + 1) * L]
+            if not seg:
+                exhausted = True
+                break
+            Ls = len(seg)
+            g0 = start + plan.start
+            tail_mask = (plan.mask if Ls == plan.length
+                         else np.zeros_like(plan.mask))
+            for i in range(Ls - 1):
+                maybe_eval_ckpt(g0 + i, state.master)
+            state, losses_dev, key = serial_fn(
+                state, engine.stack_block(seg), jnp.asarray(tail_mask),
+                key)
+            losses = np.asarray(losses_dev)
+            new_led = snapshot_ledger(state)
+            for i in range(Ls):
+                bookkeep_loss(g0 + i, float(losses[i]),
+                              new_led if i == Ls - 1 else led)
+            maybe_eval_ckpt(g0 + Ls - 1, state.master)
+            hist.round_blocks.append((g0, Ls, int(np.sum(tail_mask))))
+            led = new_led
+            if (save_full is not None and run.ckpt_dir and run.ckpt_every
+                    and (g0 + Ls) // run.ckpt_every > g0 // run.ckpt_every):
+                save_full(g0 + Ls, state, key)
+            if Ls < plan.length:
+                exhausted = True
+                break
+        if exhausted:
+            break
     return state, key
 
 

@@ -187,6 +187,23 @@ SCENARIO_GRID = [
 ]
 
 
+#: fixed launch-signature grid for the kernel autotuner
+#: (kernels/autotune.py) — small, interpret-friendly shapes spanning
+#: each kernel family, both sign modes, single-row and row-blocked
+#: geometry; the deterministic counterpart of a tuning sweep.  Tuples
+#: are (kernel, rows, row_len, k, sign); qsgd's k field carries s.
+TUNE_GRID = [
+    ("topk_compress", 1, 512, 16, False),
+    ("topk_compress", 1, 2048, 64, True),
+    ("topk_compress", 6, 256, 8, False),
+    ("topk_compress", 12, 384, 24, True),
+    ("topk_compact", 4, 512, 16, False),
+    ("topk_compact", 1, 1024, 32, False),
+    ("qsgd", 1, 768, 15, False),
+    ("qsgd", 5, 256, 7, False),
+]
+
+
 def mask_grid(T=24, R=4, H=3):
     """Deterministic (name, mask) pairs: the fixed broadcast, an async
     schedule, each SCENARIO_GRID mask, and a hand-built partial mask."""

@@ -138,6 +138,40 @@ def test_row_ops_match_gamma():
         check_def3(op, x, trials=1)
 
 
+def test_randk_threshold_selection_parity():
+    """The keyed threshold Rand_k (PR 8 — replaces the O(d log d)
+    per-call permutation): exact-k support, values pass through
+    untouched, and the wire-bit accounting is unchanged (seeded
+    indices: 64 + 32k bits)."""
+    for d, kfrac in ((64, 0.25), (331, 0.1), (1024, 0.03)):
+        op = ops.RandK(k=kfrac)
+        k = ops.resolve_k(kfrac, d)
+        x = jax.random.normal(jax.random.PRNGKey(0), (d,))
+        out, bits = op(jax.random.PRNGKey(1), x)
+        assert int(jnp.sum(out != 0)) == k, (d, kfrac)
+        assert float(bits) == bitlib.bits_randk(d, k)
+        sel = np.nonzero(np.asarray(out))[0]
+        np.testing.assert_array_equal(np.asarray(out)[sel],
+                                      np.asarray(x)[sel])
+    # the subset is keyed: deterministic per key, distinct across keys,
+    # always exactly k distinct coordinates
+    a = ops._rand_subset(jax.random.PRNGKey(0), 100, 10)
+    b = ops._rand_subset(jax.random.PRNGKey(0), 100, 10)
+    c = ops._rand_subset(jax.random.PRNGKey(1), 100, 10)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert len(set(np.asarray(a).tolist())) == 10
+    assert not np.array_equal(np.sort(np.asarray(a)), np.sort(np.asarray(c)))
+    # k >= d keeps every coordinate
+    np.testing.assert_array_equal(
+        np.asarray(ops._rand_subset(jax.random.PRNGKey(0), 5, 7)),
+        np.arange(5))
+    # coverage: over many keys every coordinate gets selected
+    hits = np.zeros(40)
+    for i in range(60):
+        hits[np.asarray(ops._rand_subset(jax.random.PRNGKey(i), 40, 8))] += 1
+    assert (hits > 0).all()
+
+
 def test_bits_accounting_exact():
     d, k = 1024, 32
     assert bitlib.bits_dense(d) == d * 32
