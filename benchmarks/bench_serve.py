@@ -1,0 +1,122 @@
+"""Serving-path benchmarks (DESIGN.md §11): compressed-weight GEMM
+micro-rows and end-to-end engine throughput.
+
+Two row families:
+
+* ``serve/gemm/<kind>/b<B>`` — one compressed matmul (sparse (idx,val)
+  or QSGD dequant-fused) on a d_model-sized layer at activation batch
+  B in {1, 8, 32}, against the same shape through the dense ``x @ W``
+  path.  derived carries the dense-path time so the compression
+  overhead is visible in one row.
+* ``serve/engine/<mode>/b<B>`` — the ServeEngine driving a burst of
+  requests through the smoke transformer at max_batch B, compressed vs
+  dense weights.  us_per_call is one engine step; derived carries the
+  aggregate tokens/s, requests/s and mean TTFT — the serving numbers
+  the paper-scale deployment cares about.
+
+Every row lands in ``BENCH_serve.json`` and is gated by
+``check_regression.py`` like the other suites.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchRow
+from repro.configs import get_config
+from repro.configs.policies import get_policy_preset
+from repro.kernels import dispatch as dsp
+from repro.models import get_model
+from repro.serve import ServeEngine, compressed as sc
+
+ARCH = "yi-6b"           # dense-family smoke config (d=256, L=2)
+GEMM_BATCHES = (1, 8, 32)
+ENGINE_BATCHES = (1, 8, 32)
+NEW_TOKENS = 8
+PROMPT_PAD = 8
+
+
+def _time(fn, *args, n=5):
+    """Best-of-N wall time after one warmup (compile) call."""
+    fn(*args)
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _gemm_rows():
+    """Compressed matmul vs dense matmul on one transformer layer."""
+    rng = np.random.RandomState(0)
+    d_in, d_out = 256, 688        # the smoke swiglu up-projection shape
+    w = jnp.asarray(rng.randn(d_in, d_out), jnp.float32)
+    cfgd = dsp.DispatchConfig(mode="auto")
+    path = "kernel" if cfgd.kernels_enabled() else "reference"
+
+    sp = sc.compress_tree({"w": w}, ".*->topk:k=0.05")["w"]
+    qd = sc.compress_tree({"w": w}, ".*->qsgd:s=15")["w"]
+    assert isinstance(sp, sc.CompressedTensor) and sp.kind == "sparse"
+    assert isinstance(qd, sc.CompressedTensor) and qd.kind == "quant"
+
+    rows = []
+    for b in GEMM_BATCHES:
+        x = jnp.asarray(rng.randn(b, d_in), jnp.float32)
+        dense_us = _time(jax.jit(lambda x: x @ w), x)
+        for kind, ct in (("sparse", sp), ("qdq", qd)):
+            us = _time(jax.jit(ct.matmul), x)
+            rows.append(BenchRow(
+                name=f"serve/gemm/{kind}/b{b}",
+                us_per_call=us,
+                derived=(f"dense_us={dense_us:.1f};"
+                         f"ratio={us / max(dense_us, 1e-9):.2f};"
+                         f"bytes={ct.compressed_bytes}"),
+                path=path,
+            ))
+    return rows
+
+
+def _engine_row(params, cfg, mode, b):
+    eng = ServeEngine(params, cfg, max_batch=b,
+                      max_len=PROMPT_PAD + NEW_TOKENS + 4,
+                      prompt_pad=PROMPT_PAD)
+    rng = np.random.RandomState(0)
+    for _ in range(b):
+        plen = int(rng.randint(max(2, PROMPT_PAD // 2), PROMPT_PAD + 1))
+        eng.submit(rng.randint(0, cfg.vocab, plen).tolist(),
+                   max_new_tokens=NEW_TOKENS)
+    res = eng.run()
+    mets = list(res["metrics"].values())
+    ttft_ms = 1e3 * float(np.mean([m.ttft_s for m in mets]))
+    return BenchRow(
+        name=f"serve/engine/{mode}/b{b}",
+        us_per_call=res["wall_s"] / max(res["steps"], 1) * 1e6,
+        derived=(f"tok_s={res['tokens_per_s']:.1f};"
+                 f"req_s={res['requests_per_s']:.2f};"
+                 f"ttft_ms={ttft_ms:.1f};steps={res['steps']}"),
+        path=mode,
+    )
+
+
+def _engine_rows():
+    cfg = get_config(ARCH, smoke=True)
+    model = get_model(cfg)
+    dense = model.init_params(jax.random.PRNGKey(0), cfg)
+    comp = sc.compress_tree(dense, get_policy_preset("arch", ARCH))
+    sc.reset_stats()
+    rows = []
+    for b in ENGINE_BATCHES:
+        rows.append(_engine_row(comp, cfg, "compressed", b))
+        rows.append(_engine_row(dense, cfg, "dense", b))
+    assert sc.STATS["densify"] == 0, (
+        f"serving bench densified {sc.STATS['densify']} leaves")
+    return rows
+
+
+def run() -> list:
+    return _gemm_rows() + _engine_rows()

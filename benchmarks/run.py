@@ -27,6 +27,7 @@ SUITES = [
     ("nonconvex", "benchmarks.bench_nonconvex"),     # Fig 1-3
     ("scaled", "benchmarks.bench_scaled"),           # Fig 8 / App D
     ("scenarios", "benchmarks.bench_scenarios"),     # fleet scenario lab (§8)
+    ("serve", "benchmarks.bench_serve"),             # serving engine (§11)
     ("roofline", "benchmarks.roofline"),             # deliverable (g)
 ]
 

@@ -1,68 +1,86 @@
-"""Batched serving example: prefill a batch of prompts through any
-assigned architecture's smoke config, then greedy-decode continuation
-tokens with the family's KV cache / recurrent-state decode step.
+"""Continuous-batching serving example (DESIGN.md §11).
 
-Run:  PYTHONPATH=src python examples/serve_batched.py --arch gemma3-1b
+Initializes the dense smoke transformer, compresses it with its arch
+policy preset, round-trips the compressed tree through a compact
+checkpoint, and drives the ServeEngine on a burst of mixed-length
+requests — printing the per-request metrics table (queue wait, TTFT,
+tokens/s) and the zero-densify counter.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py --arch yi-6b
 """
 
 import argparse
-import time
+import tempfile
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCHS, get_config
+from repro.configs.policies import get_policy_preset
 from repro.models import get_model
+from repro.serve import ServeEngine, compressed as sc
+from repro.train import checkpoint as ckpt
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(ARCHS), default="gemma3-1b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="yi-6b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--scheduler", choices=("continuous", "static"),
+                    default="continuous")
+    ap.add_argument("--dense", action="store_true",
+                    help="skip compression (dense baseline)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
+    if cfg.family != "dense":
+        raise SystemExit(f"{args.arch} is family={cfg.family!r}; the "
+                         f"serving engine drives the dense family")
     model = get_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0), cfg)
-    B, S = args.batch, args.prompt_len
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
-    batch = {"tokens": prompts}
-    if cfg.modality:
-        batch["prefix_embeds"] = 0.02 * jax.random.normal(
-            jax.random.PRNGKey(2), (B, cfg.n_frontend_tokens, cfg.d_model))
 
-    max_len = S + args.new_tokens + (cfg.n_frontend_tokens if cfg.modality else 0)
-    t0 = time.time()
-    logits, cache, n = model.prefill(params, batch, cfg, max_len=max_len)
-    logits = logits.reshape(B, -1)[:, :cfg.vocab]
-    t_prefill = time.time() - t0
+    if not args.dense:
+        policy = get_policy_preset("arch", args.arch)
+        comp = sc.compress_tree(params, policy)
+        # compact checkpoint round-trip: what lands on disk is the
+        # compressed buffers; loading never builds the dense weights
+        with tempfile.TemporaryDirectory() as d:
+            ckpt.save_compact(d, comp, step=0)
+            assert ckpt.is_compact(d)
+            params = ckpt.load_compact(d)
+        sizes = sc.tree_bytes(params)
+        print(f"compressed: {sizes['compressed'] / 1e6:.2f} MB resident "
+              f"(dense {sizes['dense'] / 1e6:.2f} MB)")
+    sc.reset_stats()
 
-    decode = jax.jit(
-        lambda p, c, tok, pos: model.decode_step(p, c, tok, pos, cfg),
-        static_argnames=(),
-    ) if False else (lambda p, c, tok, pos: model.decode_step(p, c, tok, pos, cfg))
+    eng = ServeEngine(params, cfg, max_batch=args.max_batch,
+                      max_len=args.prompt_len + args.new_tokens + 4,
+                      prompt_pad=args.prompt_len,
+                      scheduler=args.scheduler)
+    rng = np.random.RandomState(0)
+    for _ in range(args.requests):
+        plen = int(rng.randint(max(2, args.prompt_len // 2),
+                               args.prompt_len + 1))
+        eng.submit(rng.randint(0, cfg.vocab, plen).tolist(),
+                   max_new_tokens=args.new_tokens)
+    res = eng.run()
 
-    out_tokens = []
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    pos0 = S + (cfg.n_frontend_tokens if cfg.modality else 0)
-    t0 = time.time()
-    for i in range(args.new_tokens):
-        out_tokens.append(tok)
-        lg, cache = decode(params, cache, tok, pos0 + i)
-        tok = jnp.argmax(lg, -1).astype(jnp.int32)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-
-    gen = jnp.stack(out_tokens, axis=1)
-    print(f"arch={args.arch} ({cfg.family})  batch={B}")
-    print(f"prefill {S} tokens: {t_prefill * 1e3:.1f} ms   "
-          f"decode {args.new_tokens} tokens: "
-          f"{t_decode / args.new_tokens * 1e3:.1f} ms/token")
-    for b in range(min(B, 2)):
-        print(f"  seq {b}: prompt tail {list(map(int, prompts[b, -6:]))} -> "
-              f"generated {list(map(int, gen[b, :10]))}...")
+    print(f"arch={args.arch} scheduler={args.scheduler} "
+          f"slots={args.max_batch} requests={len(res['metrics'])}")
+    print(" rid  plen  new   wait_ms   ttft_ms    tok/s")
+    for m in sorted(res["metrics"].values(), key=lambda m: m.rid):
+        print(f"{m.rid:4d} {m.prompt_len:5d} {m.new_tokens:4d} "
+              f"{m.queue_wait_s * 1e3:9.1f} {m.ttft_s * 1e3:9.1f} "
+              f"{m.tokens_per_s:8.1f}")
+    print(f"aggregate: {res['requests_per_s']:.2f} req/s, "
+          f"{res['tokens_per_s']:.1f} tok/s over {res['steps']} engine "
+          f"steps; peak occupancy {max(eng.occupancy)}/{args.max_batch}")
+    print(f"serve stats: {sc.STATS} (densify must stay 0)")
+    rid0 = min(res["outputs"])
+    print(f"sample (rid {rid0}):", res["outputs"][rid0][:10])
 
 
 if __name__ == "__main__":

@@ -55,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import qsgd as _qsgd
+from repro.kernels import sparse_gemm as _sgemm
 from repro.kernels import topk_compress as _topk
 from repro.kernels.launch_stats import TUNE_CACHE
 
@@ -69,7 +70,13 @@ VMEM_DENSE_BYTES = 3 * 8 * (1 << 19) * 4
 #: intermediate, at the historical default geometry (8, 128, max_cap)
 VMEM_COMPACT_BYTES = 8 * 128 * (1 << 11) * 4
 
-KERNELS = ("topk_compress", "topk_compact", "qsgd")
+KERNELS = ("topk_compress", "topk_compact", "qsgd",
+           "sparse_gemm", "qdq_gemm")
+
+#: fixed activation-row count for serving-GEMM measurement — the tuned
+#: geometry tiles the *weight* rows; activation batch only scales every
+#: candidate uniformly, so one representative M suffices
+GEMM_MEASURE_M = 8
 
 _LRU_MAX = 512
 _lru: OrderedDict = OrderedDict()
@@ -331,6 +338,39 @@ def measure_entry(key: ShapeKey, *, iters: int = 3,
                     best = TunedEntry(br, chunk, us)
         if best is None:   # every pair over budget: keep the default
             best = TunedEntry(min(key.rows, 8), 128, float("nan"))
+    elif key.kernel == "sparse_gemm":
+        # key.k is the compact capacity kcap; rows/row_len describe the
+        # weight in its serving orientation (rows = output features)
+        xact = jnp.asarray(
+            rng.randn(GEMM_MEASURE_M, key.row_len).astype(np.float32))
+        idx = jnp.asarray(rng.randint(
+            0, key.row_len, (key.rows, key.k)).astype(np.int32))
+        val = jnp.asarray(rng.randn(key.rows, key.k).astype(np.float32))
+        for br in block_row_candidates(key.rows, key.row_len):
+            for chunk in chunk_candidates(key.row_len):
+                if br * chunk * key.k * 4 > VMEM_COMPACT_BYTES:
+                    continue
+                fn = jax.jit(functools.partial(
+                    _sgemm.sparse_gemm, row_len=key.row_len,
+                    block_rows=br, chunk=chunk, interpret=interp))
+                us = _time_us(fn, xact, idx, val, iters=iters)
+                if best is None or us < best.us:
+                    best = TunedEntry(br, chunk, us)
+        if best is None:
+            best = TunedEntry(min(key.rows, 8), 128, float("nan"))
+    elif key.kernel == "qdq_gemm":
+        xact = jnp.asarray(
+            rng.randn(GEMM_MEASURE_M, key.row_len).astype(np.float32))
+        levels = jnp.asarray(rng.randint(
+            -key.k, key.k + 1, (key.rows, key.row_len)).astype(np.int8))
+        scale = jnp.asarray(
+            rng.rand(key.rows, 1).astype(np.float32))
+        for br in block_row_candidates(key.rows, key.row_len):
+            fn = jax.jit(functools.partial(
+                _sgemm.qdq_gemm, block_rows=br, interpret=interp))
+            us = _time_us(fn, xact, levels, scale, iters=iters)
+            if best is None or us < best.us:
+                best = TunedEntry(br, None, us)
     else:
         raise ValueError(f"unknown kernel {key.kernel!r}; "
                          f"expected one of {KERNELS}")
@@ -394,6 +434,8 @@ SMOKE_KEYS = (
     ShapeKey("topk_compress", 1, 1024, 16, True),
     ShapeKey("topk_compact", 4, 256, 8, False),
     ShapeKey("qsgd", 1, 1024, 15, False),
+    ShapeKey("sparse_gemm", 8, 256, 16, False),
+    ShapeKey("qdq_gemm", 8, 256, 15, False),
 )
 
 

@@ -76,6 +76,7 @@ from repro.core.operators import (
     resolve_k,
 )
 from repro.kernels import qsgd as _qsgd
+from repro.kernels import sparse_gemm as _sgemm
 from repro.kernels import topk_compress as _topk
 from repro.kernels.launch_stats import (  # noqa: F401 — re-exported
     LAUNCHES, reset_launches, total_launches,
@@ -534,6 +535,64 @@ def compact_compress(op: CompressionOp, key, x: jnp.ndarray,
     mem_leaf = mem.reshape(-1)[: x.size].reshape(x.shape)
     bits = jnp.asarray(bits_of(jnp.sum(cnt)), jnp.float32)
     return CompactLeaf(idx, val, mem_leaf, bits, n, kcap), used
+
+
+# ---------------------------------------------------------------------------
+# compressed-weight serving GEMMs (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def _gemm_geometry(cfg: DispatchConfig, kernel: str, rows: int,
+                   row_len: int, k: int) -> tuple[int, int]:
+    """(block_rows, chunk) for a serving-GEMM launch — the same
+    resolution order as the compression kernels: explicit
+    ``cfg.block_rows``, then the autotune table, then the defaults."""
+    if cfg.block_rows is not None:
+        return cfg.block_rows, DEFAULT_CHUNK
+    from repro.kernels import autotune
+    ent = autotune.lookup(kernel, rows, row_len, k, False)
+    if ent is not None:
+        return ent.block_rows, ent.chunk or DEFAULT_CHUNK
+    return DEFAULT_BLOCK_ROWS, DEFAULT_CHUNK
+
+
+def sparse_gemm(x: jnp.ndarray, idx: jnp.ndarray, val: jnp.ndarray,
+                row_len: int, cfg: Optional[DispatchConfig] = None
+                ) -> jnp.ndarray:
+    """Serving entry for the sparse-weight × dense-activation GEMM.
+
+    x: [M, row_len] activations; idx/val: [R, kcap] compact survivor
+    buffers (rows enumerate output features).  Kernel when
+    ``cfg.kernels_enabled()`` (the weight tile is decoded block-by-block
+    in VMEM — the dense weight never exists in HBM), the
+    densify-then-matmul oracle otherwise; [M, R] f32 either way.
+    """
+    cfg = _resolve(cfg)
+    if cfg.kernels_enabled():
+        br, chunk = _gemm_geometry(cfg, "sparse_gemm", idx.shape[0],
+                                   row_len, idx.shape[1])
+        return _sgemm.sparse_gemm(x, idx, val, row_len, block_rows=br,
+                                  chunk=chunk, interpret=cfg._interpret())
+    from repro.kernels.ref import sparse_gemm_ref
+    return sparse_gemm_ref(x, idx, val, row_len)
+
+
+def qdq_gemm(x: jnp.ndarray, levels: jnp.ndarray, scale: jnp.ndarray,
+             cfg: Optional[DispatchConfig] = None) -> jnp.ndarray:
+    """Serving entry for the QSGD-dequantize-fused GEMM.
+
+    x: [M, n]; levels: [R, n] integer levels; scale: [R, 1] f32 per-row
+    scales.  Kernel (dequantize fused into the matmul's VMEM residency)
+    or the dequantize-then-matmul oracle; [M, R] f32 either way.
+    """
+    cfg = _resolve(cfg)
+    if cfg.kernels_enabled():
+        br, _ = _gemm_geometry(cfg, "qdq_gemm", levels.shape[0],
+                               levels.shape[1], 0)
+        return _sgemm.qdq_gemm(x, levels, scale, block_rows=br,
+                               interpret=cfg._interpret())
+    from repro.kernels.ref import qdq_gemm_ref
+    return qdq_gemm_ref(x, levels, scale)
 
 
 # ---------------------------------------------------------------------------

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.launch_stats import LAUNCHES
+
 NEG_INF = -1e30
 
 
@@ -114,3 +116,60 @@ def flash_attention_fwd(q, k, v, *, window: int = -1, q_block: int = 128,
     )(qt, kt, vt)
     out = out[:, :, :S]
     return jnp.moveaxis(out, 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# single-token decode attention against a ring KV cache
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, scale: float):
+    """One (batch, kv_head) program: the [G, C] score tile fits VMEM
+    whole (C is the ring-cache length, bounded by max_len), so a plain
+    masked softmax suffices — no online accumulation."""
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # [G, hd]
+    k = k_ref[0, 0].astype(jnp.float32)              # [C, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [G, C]
+    s = jnp.where(m_ref[...] > 0, s, NEG_INF)
+    m = jnp.max(s, axis=1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32)              # [C, hd]
+    o = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o_ref[0, 0] = (o / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode_fwd(q, k, v, valid, *, interpret: bool = False):
+    """Single-token decode attention, GQA-aware.
+
+    q: [B, 1, H, hd] (rope'd at the current position); k, v:
+    [B, C, KV, hd] ring-cache contents; valid: [C] slot-validity mask
+    (position occupied, causal, inside the window — computed by the
+    caller with jnp, so traced windows/positions are fine).  Returns
+    [B, 1, H, hd].  Masking by a precomputed slot mask keeps the kernel
+    free of position arithmetic: ring order never matters to softmax.
+    """
+    B, _, H, hd = q.shape
+    C, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    LAUNCHES["flash_decode"] += 1
+    q4 = q.reshape(B, 1, KV, G, hd)[:, 0]            # [B, KV, G, hd]
+    kt = jnp.moveaxis(k, 2, 1)                       # [B, KV, C, hd]
+    vt = jnp.moveaxis(v, 2, 1)
+    mask = valid.astype(jnp.float32).reshape(1, C)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=hd ** -0.5),
+        grid=(B, KV),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, C, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, C, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, C), lambda b, h: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(q4, kt, vt, mask)
+    return out.reshape(B, 1, H, hd)

@@ -9,7 +9,8 @@ other just to count.
 
 from __future__ import annotations
 
-LAUNCHES = {"topk_compress": 0, "topk_compact": 0, "qsgd": 0}
+LAUNCHES = {"topk_compress": 0, "topk_compact": 0, "qsgd": 0,
+            "sparse_gemm": 0, "qdq_gemm": 0, "flash_decode": 0}
 
 #: trace-time tuning-table resolution counters (kernels/autotune.py):
 #: ``hit`` — the LRU already held the shape's resolution, ``miss`` — the

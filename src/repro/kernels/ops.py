@@ -13,6 +13,7 @@ import jax
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import qsgd as _qsgd
+from repro.kernels import sparse_gemm as _sg
 from repro.kernels import topk_compress as _topk
 
 
@@ -50,3 +51,27 @@ def flash_attention(q, k, v, *, window: int = -1, q_block: int = 128,
 @partial(jax.jit, static_argnames=("s", "interpret"))
 def qsgd_quantize(x, u, s: int, *, interpret: bool | None = None):
     return _qsgd.qsgd_quantize(x, u, s, interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def flash_decode(q, k, v, valid, *, interpret: bool | None = None):
+    return _fa.flash_decode_fwd(q, k, v, valid,
+                                interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("row_len", "block_m", "block_rows",
+                                   "chunk", "interpret"))
+def sparse_gemm(x, idx, val, row_len: int, *, block_m: int = 128,
+                block_rows: int = 8, chunk: int = 128,
+                interpret: bool | None = None):
+    return _sg.sparse_gemm(x, idx, val, row_len, block_m=block_m,
+                           block_rows=block_rows, chunk=chunk,
+                           interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_rows", "interpret"))
+def qdq_gemm(x, levels, scale, *, block_m: int = 128, block_rows: int = 8,
+             interpret: bool | None = None):
+    return _sg.qdq_gemm(x, levels, scale, block_m=block_m,
+                        block_rows=block_rows,
+                        interpret=_auto_interpret(interpret))

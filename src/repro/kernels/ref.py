@@ -143,6 +143,34 @@ def topk_compact_ref(acc: jnp.ndarray, k: int, kcap: int, *,
 
 
 # ---------------------------------------------------------------------------
+# compressed-weight serving GEMMs (kernels/sparse_gemm.py)
+# ---------------------------------------------------------------------------
+
+
+def sparse_gemm_ref(x: jnp.ndarray, idx: jnp.ndarray, val: jnp.ndarray,
+                    row_len: int) -> jnp.ndarray:
+    """Densify-then-matmul oracle for ``sparse_gemm``.
+
+    x: [M, row_len]; idx/val: [R, kcap] compact survivor buffers
+    (row-local indices, out-of-row sentinel idx = row_len, val = 0).
+    Decodes the [R, row_len] weight through the canonical scatter-add
+    decoder semantics and contracts: ``y = x @ W.T`` in f32.
+    """
+    w = jnp.zeros((idx.shape[0], row_len), jnp.float32)
+    w = jax.vmap(lambda o, i, v: o.at[i].add(v, mode="drop"))(
+        w, idx, val.astype(jnp.float32))
+    return x.astype(jnp.float32) @ w.T
+
+
+def qdq_gemm_ref(x: jnp.ndarray, levels: jnp.ndarray,
+                 scale: jnp.ndarray) -> jnp.ndarray:
+    """Dequantize-then-matmul oracle for ``qdq_gemm``: per-row integer
+    levels times the [R, 1] f32 scale, contracted in f32."""
+    w = levels.astype(jnp.float32) * scale.astype(jnp.float32).reshape(-1, 1)
+    return x.astype(jnp.float32) @ w.T
+
+
+# ---------------------------------------------------------------------------
 # flash attention (causal, optional sliding window), GQA
 # ---------------------------------------------------------------------------
 
@@ -163,6 +191,22 @@ def flash_attention_ref(q, k, v, *, window: int = -1):
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
     return o.reshape(B, S, H, D).astype(q.dtype)
+
+
+def flash_decode_ref(q, k, v, valid):
+    """Oracle for ``flash_decode_fwd``: single-token GQA attention over
+    ring-cache contents under a precomputed slot-validity mask.
+
+    q: [B, 1, H, D]; k, v: [B, C, KV, D]; valid: [C] bool."""
+    B, _, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, 1, KV, G, D) * (D ** -0.5)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32))
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -1,87 +1,174 @@
-"""Production serving launcher: batched prefill + decode on a mesh.
+"""Serving launcher: compressed checkpoints through the
+continuous-batching engine (DESIGN.md §11).
 
-  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-30b-a3b \
-      --smoke --mesh 4x2 --batch 8 --prompt-len 32 --new-tokens 16
+Loads real trained checkpoints — a compact serving checkpoint
+(``checkpoint.save_compact``) is consumed directly in compressed form;
+a dense training checkpoint is restored and, under ``--compressed``,
+compressed once at load time with the policy spec persisted in its own
+manifest (``--policy`` overrides).  The request runtime is
+``serve.engine.ServeEngine``: admission queue, prefill/decode
+interleave, slot reuse, per-request metrics.
+
+  # train then serve the smoke model compressed:
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+      --steps 4 --ckpt /tmp/ck
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
+      --checkpoint /tmp/ck --compressed --scheduler continuous
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.compat import set_mesh
 from repro.configs import ARCHS, get_config
-from repro.launch.mesh import data_axes
+from repro.configs.policies import get_policy_preset
 from repro.models import get_model
-from repro.sharding.specs import activation_policy, param_specs, sanitize_spec
+from repro.serve import compressed as sc
+from repro.serve.engine import ServeEngine
+from repro.train import checkpoint as ckpt
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def resolve_policy(arg: str | None, checkpoint_path: str | None,
+                   arch: str | None):
+    """Policy used for --compressed: explicit --policy (DSL string,
+    @file.json, or preset:<name>|preset:arch) wins; otherwise the spec
+    persisted in the checkpoint manifest; otherwise the arch preset."""
+    from repro.core import policy as pol
+    if arg:
+        if arg.startswith("preset:"):
+            return get_policy_preset(arg[len("preset:"):], arch)
+        return pol.load(arg)
+    if checkpoint_path:
+        spec = ckpt.load_policy(checkpoint_path)
+        if spec is not None:
+            return spec
+    return get_policy_preset("arch", arch)
+
+
+def load_params(args, cfg, model):
+    """(params, source) — compact checkpoints stay compressed; dense
+    checkpoints restore into the model structure and optionally
+    compress once at load."""
+    if args.checkpoint and ckpt.is_compact(args.checkpoint):
+        return ckpt.load_compact(args.checkpoint), "compact checkpoint"
+    if args.checkpoint:
+        like = model.init_params(jax.random.PRNGKey(0), cfg)
+        params = ckpt.restore(args.checkpoint, like)
+        src = "dense checkpoint"
+    else:
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        src = "random init (no --checkpoint)"
+    if args.compressed:
+        if cfg.family != "dense":
+            raise SystemExit(
+                f"--compressed serves the dense transformer family only "
+                f"(arch {args.arch} is family={cfg.family!r})")
+        policy = resolve_policy(args.policy, args.checkpoint, args.arch)
+        params = sc.compress_tree(params, policy)
+        src += " -> compressed at load"
+    return params, src
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="serve a (compressed) checkpoint with continuous "
+                    "batching")
     ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--mesh", default="4x2")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    args = ap.parse_args()
+    ap.add_argument("--checkpoint", default=None,
+                    help="dense (train --ckpt) or compact "
+                         "(save_compact) checkpoint directory")
+    ap.add_argument("--compressed", action="store_true",
+                    help="serve from compressed weights (policy-guided "
+                         "one-shot compression for dense checkpoints)")
+    ap.add_argument("--policy", default=None,
+                    help="compression policy override: DSL string, "
+                         "@file.json, preset:<name> or preset:arch "
+                         "(default: the checkpoint's persisted spec)")
+    ap.add_argument("--scheduler", choices=("continuous", "static"),
+                    default="continuous")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="decode slots (continuous-batching width)")
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="synthetic prompt length cap (also the static "
+                         "prefill pad)")
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="synthetic request count")
+    ap.add_argument("--flash", action="store_true",
+                    help="route decode attention through the Pallas "
+                         "flash-decode kernel")
+    ap.add_argument("--dispatch", choices=("auto", "kernel", "reference"),
+                    default="auto",
+                    help="compressed-GEMM dispatch mode (kernel uses "
+                         "interpret off-TPU)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None,
+                    help="write the metrics summary to this file")
+    args = ap.parse_args(argv)
 
-    dims = [int(x) for x in args.mesh.split("x")]
-    names = ("pod", "data", "model")[-len(dims):]
-    mesh = jax.make_mesh(tuple(dims), names)
-    daxes = data_axes(mesh)
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.flash:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, use_pallas=True)
+    if cfg.family != "dense":
+        raise SystemExit(
+            f"the serving engine drives the dense transformer family "
+            f"(arch {args.arch} is family={cfg.family!r})")
     model = get_model(cfg)
-    policy = activation_policy(cfg, for_serving=True, data_axes=daxes)
+    from repro.kernels.dispatch import DispatchConfig
+    sc.set_dispatch(DispatchConfig(mode=args.dispatch))
 
-    from jax.sharding import NamedSharding
-    params = model.init_params(jax.random.PRNGKey(0), cfg)
-    specs = param_specs(cfg)
-    put = jax.tree_util.tree_map(
-        lambda leaf, sp: NamedSharding(mesh,
-                                       sanitize_spec(sp, leaf.shape, mesh)),
-        params, specs,
-        is_leaf=lambda z: hasattr(z, "shape") and not isinstance(z, dict),
-    )
-    B, S = args.batch, args.prompt_len
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
-    batch = {"tokens": prompts}
-    if cfg.modality:
-        batch["prefix_embeds"] = 0.02 * jax.random.normal(
-            jax.random.PRNGKey(2), (B, cfg.n_frontend_tokens, cfg.d_model))
-    max_len = S + args.new_tokens + (cfg.n_frontend_tokens if cfg.modality else 0)
+    params, source = load_params(args, cfg, model)
+    sc.reset_stats()
+    sizes = sc.tree_bytes(params)
+    print(f"arch={args.arch} source: {source}")
+    print(f"resident params: {sizes['compressed'] / 1e6:.2f} MB "
+          f"(dense equivalent {sizes['dense'] / 1e6:.2f} MB, "
+          f"{sizes['leaves']} leaves)")
 
-    with set_mesh(mesh):
-        params = jax.device_put(params, put)
-        t0 = time.time()
-        logits, cache, n = jax.jit(
-            lambda p, b: model.prefill(p, b, cfg, policy, max_len=max_len)
-        )(params, batch)
-        jax.block_until_ready(logits)
-        t_prefill = time.time() - t0
-        decode = jax.jit(
-            lambda p, c, tok, pos: model.decode_step(p, c, tok, pos, cfg,
-                                                     policy))
-        tok = jnp.argmax(logits.reshape(B, -1)[:, :cfg.vocab], -1) \
-            .astype(jnp.int32)
-        pos0 = S + (cfg.n_frontend_tokens if cfg.modality else 0)
-        outs = []
-        t0 = time.time()
-        for i in range(args.new_tokens):
-            outs.append(tok)
-            lg, cache = decode(params, cache, tok, pos0 + i)
-            tok = jnp.argmax(lg, -1).astype(jnp.int32)
-        jax.block_until_ready(tok)
-        t_decode = time.time() - t0
-    print(f"arch={args.arch} mesh={args.mesh} batch={B}")
-    print(f"prefill {S}tok: {t_prefill * 1e3:.0f} ms; decode: "
-          f"{t_decode / args.new_tokens * 1e3:.1f} ms/tok")
-    gen = jnp.stack(outs, 1)
-    print("sample:", list(map(int, gen[0, :10])))
+    eng = ServeEngine(params, cfg, max_batch=args.max_batch,
+                      max_len=args.max_len, prompt_pad=args.prompt_len,
+                      scheduler=args.scheduler)
+    rng = np.random.RandomState(args.seed)
+    for _ in range(args.requests):
+        plen = int(rng.randint(max(2, args.prompt_len // 2),
+                               args.prompt_len + 1))
+        eng.submit(rng.randint(0, cfg.vocab, plen).tolist(),
+                   max_new_tokens=args.new_tokens)
+    res = eng.run()
+
+    mets = sorted(res["metrics"].values(), key=lambda m: m.rid)
+    print(f"\nscheduler={args.scheduler} slots={args.max_batch} "
+          f"requests={len(mets)} steps={res['steps']}")
+    print(" rid  plen  new   wait_ms   ttft_ms    tok/s")
+    for m in mets:
+        print(f"{m.rid:4d} {m.prompt_len:5d} {m.new_tokens:4d} "
+              f"{m.queue_wait_s * 1e3:9.1f} {m.ttft_s * 1e3:9.1f} "
+              f"{m.tokens_per_s:8.1f}")
+    print(f"\naggregate: {res['requests_per_s']:.2f} req/s, "
+          f"{res['tokens_per_s']:.1f} tok/s, "
+          f"wall {res['wall_s']:.2f}s, peak occupancy "
+          f"{max(eng.occupancy) if eng.occupancy else 0}/{args.max_batch}")
+    print(f"serve stats: {sc.STATS}")
+    if args.compressed and sc.STATS["densify"]:
+        raise SystemExit("zero-densify violated: the serving path "
+                         f"densified {sc.STATS['densify']} leaves")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({
+                "requests_per_s": res["requests_per_s"],
+                "tokens_per_s": res["tokens_per_s"],
+                "steps": res["steps"],
+                "densify": sc.STATS["densify"],
+            }, f, indent=2)
+    sample = res["outputs"].get(0, [])[:10]
+    print("sample:", sample)
 
 
 if __name__ == "__main__":

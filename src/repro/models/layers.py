@@ -71,7 +71,19 @@ def rope(x: Array, positions: Array, theta: float) -> Array:
 
 
 def embed(tokens: Array, table: Array) -> Array:
+    if hasattr(table, "take_rows"):   # compressed serving table
+        return table.take_rows(tokens)
     return jnp.take(table, tokens, axis=0)
+
+
+def matmul(x: Array, w) -> Array:
+    """``x @ w`` with a duck-typed hook for compressed serving weights
+    (``serve.compressed.CompressedTensor``): anything exposing
+    ``.matmul`` routes the contraction itself (sparse/quantized Pallas
+    GEMMs), so models never import the serving layer."""
+    if hasattr(w, "matmul"):
+        return w.matmul(x)
+    return x @ w
 
 
 # ---------------------------------------------------------------------------
@@ -249,13 +261,11 @@ def decode_attention(
     cache: KVCache,
     cur_pos,                 # scalar int (traced ok)
     window: int,
+    use_pallas: bool = False,
 ) -> Array:
     B, _, H, hd = q.shape
     KV = cache.k.shape[2]
     G = H // KV
-    scale = hd ** -0.5
-    qr = q.reshape(B, 1, KV, G, hd).astype(jnp.float32) * scale
-    s = _gqa_scores(qr, cache.k.astype(jnp.float32))  # [B, KV, G, 1, C]
     valid = (cache.pos >= 0) & (cache.pos <= cur_pos)
     if window is None:
         pass
@@ -265,6 +275,14 @@ def decode_attention(
     else:
         w = jnp.asarray(window)
         valid &= jnp.where(w > 0, cache.pos > cur_pos - w, True)
+    if use_pallas:
+        # slot validity is plain jnp, so unlike the prefill flash path
+        # this works under scanned (traced) per-layer windows too
+        from repro.kernels import ops as kops
+        return kops.flash_decode(q, cache.k, cache.v, valid)
+    scale = hd ** -0.5
+    qr = q.reshape(B, 1, KV, G, hd).astype(jnp.float32) * scale
+    s = _gqa_scores(qr, cache.k.astype(jnp.float32))  # [B, KV, G, 1, C]
     s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = _gqa_out(p, cache.v)
@@ -277,16 +295,16 @@ def decode_attention(
 
 
 def swiglu(x: Array, p) -> Array:
-    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
-    return h @ p["w2"]
+    h = jax.nn.silu(matmul(x, p["w1"])) * matmul(x, p["w3"])
+    return matmul(h, p["w2"])
 
 
 def gqa_project(x: Array, p, cfg: ModelConfig):
     B, S, _ = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    q = (x @ p["wq"]).reshape(B, S, H, hd)
-    k = (x @ p["wk"]).reshape(B, S, KV, hd)
-    v = (x @ p["wv"]).reshape(B, S, KV, hd)
+    q = matmul(x, p["wq"]).reshape(B, S, H, hd)
+    k = matmul(x, p["wk"]).reshape(B, S, KV, hd)
+    v = matmul(x, p["wv"]).reshape(B, S, KV, hd)
     return q, k, v
 
 
@@ -306,7 +324,7 @@ def attn_block_train(x, p, cfg: ModelConfig, window: int, positions,
     else:
         o = chunked_attention(q, k, v, window=window, q_chunk=cfg.q_chunk)
     B, S = x.shape[:2]
-    out = o.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"]
+    out = matmul(o.reshape(B, S, cfg.n_heads * cfg.hd), p["wo"])
     return out, (k, v)
 
 
@@ -316,6 +334,6 @@ def attn_block_decode(x, p, cfg: ModelConfig, cache: KVCache, pos, window: int):
     q = rope(q, jnp.broadcast_to(posv, (x.shape[0], 1)), cfg.rope_theta)
     k = rope(k, jnp.broadcast_to(posv, (x.shape[0], 1)), cfg.rope_theta)
     cache = cache_write(cache, k, v, pos)
-    o = decode_attention(q, cache, pos, window)
-    out = o.reshape(x.shape[0], 1, cfg.n_heads * cfg.hd) @ p["wo"]
+    o = decode_attention(q, cache, pos, window, use_pallas=cfg.use_pallas)
+    out = matmul(o.reshape(x.shape[0], 1, cfg.n_heads * cfg.hd), p["wo"])
     return out, cache

@@ -73,8 +73,15 @@ def init_params(key: jax.Array, cfg: ModelConfig):
     return params
 
 
-def _head(params, cfg: ModelConfig):
-    return params["embed"].T if cfg.tie_embeddings else params["head"]
+def _apply_head(h, params, cfg: ModelConfig):
+    """LM head application: ``h @ head`` (or ``h @ embed.T`` when tied).
+    Duck-typed on ``.matmul`` so a compressed serving table — whose rows
+    enumerate the vocab either way — serves both variants without the
+    transpose that a compact tensor cannot express."""
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    if hasattr(w, "matmul"):
+        return w.matmul(h)
+    return h @ (w.T if cfg.tie_embeddings else w)
 
 
 # ---------------------------------------------------------------------------
@@ -134,7 +141,7 @@ def forward(params, batch: dict, cfg: ModelConfig,
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
     h, _ = apply_stack(params, h, positions, cfg, policy)
     h = rmsnorm(h, params["final_norm"])
-    logits = h @ _head(params, cfg)
+    logits = _apply_head(h, params, cfg)
     return maybe_shard(logits.astype(jnp.float32), policy.logits)
 
 
@@ -154,7 +161,6 @@ def loss_fn(params, batch: dict, cfg: ModelConfig,
     h = rmsnorm(h, params["final_norm"])
     if n_prefix:
         h = h[:, n_prefix:]
-    W = _head(params, cfg)
     Stok = h.shape[1]
     c = min(loss_chunk, Stok)
     pad = (-Stok) % c
@@ -168,7 +174,7 @@ def loss_fn(params, batch: dict, cfg: ModelConfig,
 
     def chunk_loss(carry, xs):
         hc, lc, mc = xs
-        logits = (hc @ W).astype(jnp.float32)
+        logits = _apply_head(hc, params, cfg).astype(jnp.float32)
         logits = maybe_shard(logits, policy.logits)
         lse = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
@@ -209,7 +215,7 @@ def prefill(params, batch: dict, cfg: ModelConfig,
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
     h, kvs = apply_stack(params, h, positions, cfg, policy, collect_kv=True)
     hl = rmsnorm(h[:, -1:], params["final_norm"])
-    logits = (hl @ _head(params, cfg)).astype(jnp.float32)
+    logits = _apply_head(hl, params, cfg).astype(jnp.float32)
     wins = cfg.layer_windows()
     if uniform_windows(cfg) and cfg.scan_layers:
         cache = init_kv_cache(cfg, B, wins[0], max_len, stacked=cfg.n_layers)
@@ -261,5 +267,5 @@ def decode_step(params, cache, token: jax.Array, pos, cfg: ModelConfig,
             h, c = layer(h, lp, cache[i], wins[i])
             new_cache.append(c)
     h = rmsnorm(h, params["final_norm"])
-    logits = (h[:, 0] @ _head(params, cfg)).astype(jnp.float32)
+    logits = _apply_head(h[:, 0], params, cfg).astype(jnp.float32)
     return maybe_shard(logits, policy.logits), new_cache

@@ -1,0 +1,23 @@
+"""Compressed-weight serving engine (DESIGN.md §11).
+
+``serve.compressed`` turns a trained Qsparse checkpoint into
+zero-densify serving weights — per-leaf compact ``(idx, val)`` sparse
+buffers or int8-level quantized buffers chosen by the training policy —
+and ``serve.engine`` runs a continuous-batching request runtime over
+the model's prefill/decode entry points.
+"""
+
+from repro.serve.compressed import (   # noqa: F401
+    STATS,
+    CompressedTensor,
+    compress_tree,
+    get_dispatch,
+    reset_stats,
+    set_dispatch,
+    tree_bytes,
+)
+from repro.serve.engine import (       # noqa: F401
+    Request,
+    RequestMetrics,
+    ServeEngine,
+)

@@ -1,0 +1,330 @@
+"""Compressed serving weights (DESIGN.md §11.1–§11.2).
+
+A trained Qsparse checkpoint carries its compression policy
+(``PolicySpec``), and serving reuses it: every 2-D weight whose rule
+lands in the Top_k family becomes a compact ``(idx, val)`` sparse
+tensor, every QSGD-ruled weight becomes per-row int8 levels plus an
+f32 scale column, and everything else (norm gains, biases, 1-D leaves)
+stays dense.  The compressed form is the *resident* form: forward
+passes contract activations against it directly through the
+``kernels/sparse_gemm.py`` Pallas GEMMs (dispatch-routed, reference
+fallback off-TPU), and the dense weight is never materialized on the
+load path — :data:`STATS` counts ``densify`` calls so tests and the
+launcher can assert exactly that.
+
+Storage orientation: compact rows always enumerate the GEMM *output*
+dimension.  A regular ``[n_in, n_out]`` weight is stored as rows of
+``W.T`` (``out_axis=1``, ``row_len = n_in``) so ``matmul(x) = x @ W``;
+the ``[V, d]`` embedding is stored row-major (``out_axis=0``) so the
+same buffers serve both token gather (``take_rows``) and the tied
+output head (``h @ W.T``).  One layout, three consumers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policy as pol
+from repro.core.operators import (
+    CompressionOp,
+    QSGDQuantizer,
+    RowSignTopK,
+    RowTopK,
+    SignSparsifier,
+    TopK,
+    ops_for_leaves,
+    resolve_k,
+)
+from repro.kernels import dispatch as dsp
+
+#: trace-time serving-path counters.  ``densify`` is the load-path
+#: counter the zero-densify guarantee is asserted on: the engine's
+#: forward never calls it; only explicit round-trip checks do.
+STATS = {"densify": 0, "sparse_matmul": 0, "quant_matmul": 0,
+         "take_rows": 0}
+
+#: QSGD serving levels are stored as int8 sign*xi
+_MAX_LEVELS = 127
+
+_dispatch_cfg: Optional[dsp.DispatchConfig] = None
+
+
+def reset_stats() -> None:
+    for k in STATS:
+        STATS[k] = 0
+
+
+def set_dispatch(cfg: Optional[dsp.DispatchConfig]) -> None:
+    """Pin the DispatchConfig every CompressedTensor matmul routes
+    through (None = the dispatch module default)."""
+    global _dispatch_cfg
+    _dispatch_cfg = cfg
+
+
+def get_dispatch() -> Optional[dsp.DispatchConfig]:
+    return _dispatch_cfg
+
+
+# ---------------------------------------------------------------------------
+# the compressed-leaf pytree
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+class CompressedTensor:
+    """One compressed weight leaf in serving orientation.
+
+    kind='sparse': ``a`` = int32 indices ``[R, kcap]`` (row-local,
+    ascending, out-of-row sentinel ``idx = row_len``), ``b`` = f32
+    values ``[R, kcap]``.  kind='quant': ``a`` = int8 levels
+    ``[R, row_len]``, ``b`` = f32 scale ``[R, 1]``.  A leading stack
+    axis (``a.ndim == 3``) carries scan-stacked layers; scan/vmap slice
+    the children and rebuild per-layer 2-D tensors through the pytree
+    protocol, so ``matmul`` only ever sees 2-D buffers.
+    """
+
+    def __init__(self, kind: str, a, b, row_len: int, shape: tuple,
+                 out_axis: int, dtype: str, op: str):
+        self.kind = kind
+        self.a = a
+        self.b = b
+        self.row_len = int(row_len)
+        self.shape = tuple(shape)
+        self.out_axis = int(out_axis)
+        self.dtype = str(dtype)
+        self.op = op
+
+    # -- pytree protocol (children traced, layout static) ------------------
+    def tree_flatten(self):
+        return ((self.a, self.b), (self.kind, self.row_len, self.shape,
+                                   self.out_axis, self.dtype, self.op))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kind, row_len, shape, out_axis, dtype, op = aux
+        a, b = children
+        return cls(kind, a, b, row_len, shape, out_axis, dtype, op)
+
+    def __repr__(self):
+        return (f"CompressedTensor({self.kind}, shape={self.shape}, "
+                f"row_len={self.row_len}, out_axis={self.out_axis}, "
+                f"op={self.op!r})")
+
+    # -- serving consumers -------------------------------------------------
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def compressed_bytes(self) -> int:
+        return int(self.a.size * self.a.dtype.itemsize
+                   + self.b.size * self.b.dtype.itemsize)
+
+    @property
+    def dense_bytes(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return int(n * jnp.dtype(self.dtype).itemsize)
+
+    def matmul(self, x: jnp.ndarray) -> jnp.ndarray:
+        """``x @ W`` (regular weights) / ``x @ W.T`` (tied embedding
+        head) without densifying: ``x[..., row_len] -> [..., R]``."""
+        if self.a.ndim != 2:
+            raise ValueError(
+                "stacked CompressedTensor must be sliced (scan/vmap) "
+                f"before matmul; got children of ndim {self.a.ndim}")
+        cfg = get_dispatch()
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        if self.kind == "sparse":
+            STATS["sparse_matmul"] += 1
+            y = dsp.sparse_gemm(x2, self.a, self.b, self.row_len, cfg)
+        else:
+            STATS["quant_matmul"] += 1
+            y = dsp.qdq_gemm(x2, self.a, self.b, cfg)
+        return y.reshape(*lead, y.shape[-1]).astype(self.dtype)
+
+    def take_rows(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        """Embedding gather: decode only the gathered rows
+        (``tokens[...] -> [..., row_len]``); the full table is never
+        built."""
+        if self.out_axis != 0:
+            raise ValueError("take_rows needs out_axis=0 storage "
+                             f"(got out_axis={self.out_axis})")
+        STATS["take_rows"] += 1
+        flat = tokens.reshape(-1)
+        a = jnp.take(self.a, flat, axis=0)
+        b = jnp.take(self.b, flat, axis=0)
+        if self.kind == "sparse":
+            w = dsp.decode_rows(a, b, self.row_len)
+        else:
+            w = a.astype(jnp.float32) * b
+        return w.reshape(*tokens.shape, self.row_len).astype(self.dtype)
+
+    def densify(self) -> jnp.ndarray:
+        """Reconstruct the dense weight in its original shape/dtype.
+        Bumps ``STATS['densify']`` — the zero-densify serving guarantee
+        is that the forward path never lands here."""
+        STATS["densify"] += 1
+        if self.kind == "sparse":
+            def dec(a, b):
+                return dsp.decode_rows(a, b, self.row_len)
+        else:
+            def dec(a, b):
+                return a.astype(jnp.float32) * b
+        if self.a.ndim == 3:
+            w = jax.vmap(dec)(self.a, self.b)
+            if self.out_axis == 1:
+                w = jnp.swapaxes(w, 1, 2)
+        else:
+            w = dec(self.a, self.b)
+            if self.out_axis == 1:
+                w = w.T
+        return w.reshape(self.shape).astype(self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# policy-guided tree compression
+# ---------------------------------------------------------------------------
+
+
+def _is_matrix(leaf, path: str) -> bool:
+    """Is this leaf a GEMM weight in serving terms?  3-D leaves are
+    scan-stacked ``[L, a, b]`` matrices; 2-D leaves are matrices UNLESS
+    they sit in a scan-stacked layer dict (path under ``layers/`` with
+    no numeric component), where ``[L, d]`` is a stacked *vector* (norm
+    gain) that the forward never feeds through a matmul."""
+    if leaf.ndim == 3:
+        return True
+    if leaf.ndim != 2:
+        return False
+    parts = path.split("/")
+    if parts[0] == "layers" and not any(p.isdigit() for p in parts):
+        return False   # scan-stacked per-layer 1-D param
+    return True
+
+
+def _plan(op: CompressionOp, leaf) -> Optional[tuple]:
+    """(kind, frac_or_s, sign_m) serving scheme for one (op, leaf) pair,
+    or None for dense passthrough.  ``frac`` is the survivor fraction
+    normalized out of the op's native domain (whole tensor for
+    TopK/SignTopK, op.row_len for the row variants) so it transfers to
+    the serving row length."""
+    if isinstance(op, TopK):
+        d = int(leaf.size) if leaf.ndim == 2 else int(leaf[0].size)
+        return ("sparse", resolve_k(op.k, d) / d, 0)
+    if isinstance(op, RowTopK):
+        row = min(op.row_len, int(leaf.size))
+        return ("sparse", resolve_k(op.k, row) / row, 0)
+    if isinstance(op, SignSparsifier):
+        if op.sparsifier != "top":
+            return None
+        d = int(leaf.size) if leaf.ndim == 2 else int(leaf[0].size)
+        return ("sparse", resolve_k(op.k, d) / d, op.m)
+    if isinstance(op, RowSignTopK):
+        row = min(op.row_len, int(leaf.size))
+        return ("sparse", resolve_k(op.k, row) / row, op.m)
+    if isinstance(op, QSGDQuantizer):
+        return ("quant", min(int(op.s), _MAX_LEVELS), 0)
+    return None
+
+
+def _sparse_rows(m: jnp.ndarray, k_row: int, kcap: int, sign_m: int):
+    """Per-row magnitude top-k of ``m [R, n]`` into compact ``(idx,
+    val)`` buffers of capacity ``kcap`` (ascending indices, sentinel
+    ``(n, 0)`` padding).  ``sign_m`` > 0 applies the SignComp_k value
+    coding: sign times ||sel||_m / k."""
+    n = m.shape[1]
+    _, idx = jax.lax.top_k(jnp.abs(m), k_row)
+    idx = jnp.sort(idx, axis=1)
+    vals = jnp.take_along_axis(m, idx, axis=1)
+    if sign_m == 1:
+        norm = jnp.sum(jnp.abs(vals), axis=1, keepdims=True)
+        vals = jnp.where(vals >= 0, 1.0, -1.0) * (norm / k_row)
+    elif sign_m == 2:
+        norm = jnp.sqrt(jnp.sum(vals * vals, axis=1, keepdims=True))
+        vals = jnp.where(vals >= 0, 1.0, -1.0) * (norm / k_row)
+    idx = jnp.pad(idx, ((0, 0), (0, kcap - k_row)),
+                  constant_values=n).astype(jnp.int32)
+    vals = jnp.pad(vals, ((0, 0), (0, kcap - k_row)))
+    return idx, vals.astype(jnp.float32)
+
+
+def _quant_rows(m: jnp.ndarray, s: int):
+    """Deterministic per-row QSGD snapshot of ``m [R, n]``: int8 levels
+    ``sign * round(s|x|/||row||)`` plus the ``[R, 1]`` f32 scale
+    ``||row||/s``.  Round-to-nearest, not stochastic: the dither in the
+    training quantizer unbiases *gradients across steps*; a one-shot
+    weight snapshot just wants minimum distortion."""
+    mf = m.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(mf * mf, axis=1, keepdims=True))
+    safe = jnp.where(norm > 0, norm, 1.0)
+    level = jnp.clip(jnp.round(jnp.abs(mf) / safe * s), 0, s)
+    lv = (jnp.sign(mf) * level).astype(jnp.int8)
+    return lv, (norm / s).astype(jnp.float32)
+
+
+def _compress_leaf(leaf, op: CompressionOp, path: str
+                   ) -> Any:
+    if not _is_matrix(leaf, path):
+        return leaf
+    plan = _plan(op, leaf)
+    if plan is None:
+        return leaf
+    kind, param, sign_m = plan
+    out_axis = 0 if path.split("/")[-1] == "embed" else 1
+    stacked = leaf.ndim == 3
+    rows = leaf if out_axis == 0 else jnp.swapaxes(leaf, -1, -2)
+    rows = rows.astype(jnp.float32)
+    n = rows.shape[-1]
+    try:
+        op_str = pol.OpSpec.of(op).to_string()
+    except Exception:
+        op_str = type(op).__name__
+    if kind == "sparse":
+        k_row = max(1, min(n, round(param * n)))
+        kcap = dsp.capacity(k_row, n)
+        fn = lambda m: _sparse_rows(m, k_row, kcap, sign_m)  # noqa: E731
+    else:
+        fn = lambda m: _quant_rows(m, param)                 # noqa: E731
+    a, b = (jax.vmap(fn)(rows) if stacked else fn(rows))
+    return CompressedTensor(kind, a, b, n, leaf.shape, out_axis,
+                            jnp.dtype(leaf.dtype).name, op_str)
+
+
+def compress_tree(params, policy) -> Any:
+    """Policy-guided one-shot compression of a dense param tree into
+    serving form.  ``policy`` is anything ``core.policy`` accepts (DSL
+    string, PolicySpec, ChannelSpec — uplink side — or a plain
+    operator/op-tree); rules select per-leaf schemes via :func:`_plan`.
+    Returns the params tree with eligible leaves replaced by
+    :class:`CompressedTensor` (all other leaves untouched)."""
+    try:
+        op_tree = pol.as_channel_spec(policy).uplink.resolve(params)
+    except TypeError:
+        op_tree = pol.resolve(policy, params)
+    paths, leaves, treedef = pol.tree_paths(params)
+    ops = ops_for_leaves(op_tree, len(leaves))
+    out = [_compress_leaf(leaf, op, path)
+           for leaf, op, path in zip(leaves, ops, paths)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_bytes(params) -> dict:
+    """{'compressed': int, 'dense': int, 'leaves': int} resident-bytes
+    summary of a (possibly compressed) param tree."""
+    comp = dense = n = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, CompressedTensor)):
+        n += 1
+        if isinstance(leaf, CompressedTensor):
+            comp += leaf.compressed_bytes
+            dense += leaf.dense_bytes
+        else:
+            comp += int(leaf.size * leaf.dtype.itemsize)
+            dense += int(leaf.size * leaf.dtype.itemsize)
+    return {"compressed": comp, "dense": dense, "leaves": n}

@@ -1,0 +1,277 @@
+"""Continuous-batching request runtime (DESIGN.md §11.3).
+
+The engine owns ``max_batch`` decode *slots*.  Each slot holds one
+in-flight request's KV cache (a B=1 cache stacked on a leading slot
+axis, so per-slot position state stays independent); every engine
+iteration admits queued requests into free slots (prefill-insert) and
+then advances **all** active slots by one token with a single vmapped,
+jitted decode step.  Completion frees the slot for the next queued
+request immediately — prefill and decode interleave, nothing waits for
+a batch to drain.  ``scheduler='static'`` keeps the same machinery but
+only admits when every slot is free (the classic static-batching
+baseline the benchmarks compare against).
+
+Slot admission (``_admit``): the prompt is right-padded to the engine's
+static ``prompt_pad`` (one prefill compilation), the B=1 prefilled
+cache has its pad positions invalidated (``pos >= true_len -> -1``) and
+is written into the slot axis with a ``dynamic_update_slice``.  The
+first decode step then re-feeds the last prompt token at position
+``true_len - 1`` — an idempotent rewrite of that token's k/v — so
+sampling starts from logits conditioned on the true prompt, not on pad
+garbage.
+
+Everything model-facing goes through ``models.transformer`` entry
+points; compressed parameter trees (``serve.compressed``) drop in
+unchanged because the model's matmuls are duck-typed on the leaves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.models.layers import KVCache
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: token prompt + decode budget."""
+
+    prompt: Sequence[int]
+    max_new_tokens: int = 16
+    rid: int = -1
+    submit_s: float = 0.0
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    """Per-request serving metrics (all host wall-clock)."""
+
+    rid: int
+    prompt_len: int
+    new_tokens: int
+    queue_wait_s: float     # submit -> slot admission
+    ttft_s: float           # submit -> first generated token
+    decode_s: float         # first token -> completion
+    tokens_per_s: float     # new_tokens / (admission -> completion)
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int = -1
+    tokens: Optional[List[int]] = None   # generated so far
+    next_token: int = 0
+    pos: int = 0                         # position of next_token
+    remaining: int = 0
+    admit_s: float = 0.0
+    submit_s: float = 0.0
+    ttft_s: float = -1.0
+
+    @property
+    def free(self) -> bool:
+        return self.rid < 0
+
+
+def _sanitize(cache, true_len):
+    """Invalidate prefill pad positions so decode masks them."""
+    def fix(c: KVCache) -> KVCache:
+        pos = jnp.where((c.pos >= 0) & (c.pos < true_len), c.pos, -1)
+        return c._replace(pos=pos)
+    if isinstance(cache, KVCache):
+        return fix(cache)
+    return [fix(c) for c in cache]
+
+
+class ServeEngine:
+    """Continuous-batching serving runtime over a (possibly compressed)
+    parameter tree.
+
+    model forward entry points come from ``models.transformer``;
+    ``scheduler`` is 'continuous' (slot reuse on completion) or
+    'static' (admit only into an all-free batch).  Greedy decoding;
+    ``eos_id`` stops a request early.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
+                 max_len: int = 64, prompt_pad: int = 16,
+                 scheduler: str = "continuous",
+                 eos_id: Optional[int] = None):
+        if scheduler not in ("continuous", "static"):
+            raise ValueError(f"unknown scheduler {scheduler!r}")
+        if prompt_pad >= max_len:
+            raise ValueError("prompt_pad must leave room to decode "
+                             f"(prompt_pad={prompt_pad}, max_len={max_len})")
+        self.params = params
+        self.cfg = cfg
+        self.max_batch = int(max_batch)
+        self.max_len = int(max_len)
+        self.prompt_pad = int(prompt_pad)
+        self.scheduler = scheduler
+        self.eos_id = eos_id
+        self._queue: deque = deque()
+        self._slots = [_Slot() for _ in range(self.max_batch)]
+        self._next_rid = 0
+        self._outputs: dict = {}
+        self._metrics: dict = {}
+        #: per-iteration active-slot counts (scheduler-invariant tests)
+        self.occupancy: List[int] = []
+        self.steps = 0
+
+        one = tf.init_cache(cfg, 1, self.max_len)
+        self._caches = jax.tree_util.tree_map(
+            lambda x: jnp.stack([x] * self.max_batch), one)
+
+        cfg_ = cfg
+        maxlen = self.max_len
+
+        def _admit_fn(params, caches, toks, true_len, slot):
+            # toks: [prompt_pad] int32; true_len, slot: traced scalars
+            _, cache, _ = tf.prefill(params, {"tokens": toks[None]}, cfg_,
+                                     max_len=maxlen)
+            cache = _sanitize(cache, true_len)
+
+            def ins(big, small):
+                return jax.lax.dynamic_update_slice(
+                    big, small[None].astype(big.dtype),
+                    (slot,) + (0,) * small.ndim)
+            return jax.tree_util.tree_map(ins, caches, cache)
+
+        def _step_fn(params, caches, toks, poss):
+            # toks, poss: [max_batch] int32 (per-slot token + position)
+            def one(cache, tok, pos):
+                logits, new_c = tf.decode_step(params, cache, tok[None],
+                                               pos, cfg_)
+                return jnp.argmax(logits[0], axis=-1).astype(jnp.int32), new_c
+            return jax.vmap(one, in_axes=(0, 0, 0))(caches, toks, poss)
+
+        self._admit_jit = jax.jit(_admit_fn)
+        self._step_jit = jax.jit(_step_fn)
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 16) -> int:
+        """Enqueue one request; returns its request id."""
+        prompt = list(int(t) for t in prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) > self.prompt_pad:
+            raise ValueError(f"prompt length {len(prompt)} exceeds "
+                             f"prompt_pad={self.prompt_pad}")
+        budget = self.max_len - len(prompt)
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(prompt, min(max_new_tokens, budget),
+                                   rid, time.perf_counter()))
+        return rid
+
+    # -- scheduling --------------------------------------------------------
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s.free]
+
+    def _admit(self) -> int:
+        """Move queued requests into free slots (FIFO).  The static
+        scheduler admits only when *every* slot is free."""
+        free = self._free_slots()
+        if self.scheduler == "static" and len(free) < self.max_batch:
+            return 0
+        admitted = 0
+        for slot_id in free:
+            if not self._queue:
+                break
+            req = self._queue.popleft()
+            toks = np.zeros(self.prompt_pad, np.int32)
+            toks[:len(req.prompt)] = req.prompt
+            true_len = len(req.prompt)
+            self._caches = self._admit_jit(
+                self.params, self._caches, jnp.asarray(toks),
+                jnp.asarray(true_len, jnp.int32),
+                jnp.asarray(slot_id, jnp.int32))
+            self._slots[slot_id] = _Slot(
+                rid=req.rid, tokens=[], next_token=req.prompt[-1],
+                pos=true_len - 1, remaining=req.max_new_tokens,
+                admit_s=time.perf_counter(), submit_s=req.submit_s)
+            admitted += 1
+        return admitted
+
+    def step(self) -> int:
+        """One engine iteration: admit, then advance every active slot
+        one token.  Returns the number of requests completed."""
+        self._admit()
+        active = [i for i, s in enumerate(self._slots) if not s.free]
+        if not active:
+            return 0
+        self.occupancy.append(len(active))
+        toks = np.zeros(self.max_batch, np.int32)
+        poss = np.zeros(self.max_batch, np.int32)
+        for i, s in enumerate(self._slots):
+            if not s.free:
+                toks[i] = s.next_token
+                poss[i] = s.pos
+        nxt, self._caches = self._step_jit(
+            self.params, self._caches, jnp.asarray(toks), jnp.asarray(poss))
+        nxt = np.asarray(nxt)
+        now = time.perf_counter()
+        done = 0
+        for i in active:
+            s = self._slots[i]
+            tok = int(nxt[i])
+            s.tokens.append(tok)
+            if s.ttft_s < 0:
+                s.ttft_s = now - s.submit_s
+            s.pos += 1
+            s.next_token = tok
+            s.remaining -= 1
+            if s.remaining <= 0 or (self.eos_id is not None
+                                    and tok == self.eos_id):
+                self._finish(i, now)
+                done += 1
+        self.steps += 1
+        return done
+
+    def _finish(self, slot_id: int, now: float) -> None:
+        s = self._slots[slot_id]
+        n = len(s.tokens)
+        span = max(now - s.admit_s, 1e-9)
+        self._outputs[s.rid] = list(s.tokens)
+        self._metrics[s.rid] = RequestMetrics(
+            rid=s.rid, prompt_len=s.pos + 1 - n, new_tokens=n,
+            queue_wait_s=s.admit_s - s.submit_s, ttft_s=s.ttft_s,
+            decode_s=max(now - (s.submit_s + s.ttft_s), 0.0),
+            tokens_per_s=n / span)
+        self._slots[slot_id] = _Slot()
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue) + sum(1 for s in self._slots if not s.free)
+
+    def run(self, requests: Optional[Sequence[Request]] = None,
+            max_steps: int = 100_000) -> dict:
+        """Drive the engine until every queued request completes.
+        Returns {'outputs': {rid: tokens}, 'metrics': {rid: ...},
+        'requests_per_s': float, 'tokens_per_s': float, 'steps': int}.
+        """
+        for req in requests or ():
+            self.submit(req.prompt, req.max_new_tokens)
+        t0 = time.perf_counter()
+        steps = 0
+        while self.pending and steps < max_steps:
+            self.step()
+            steps += 1
+        wall = max(time.perf_counter() - t0, 1e-9)
+        mets = dict(self._metrics)
+        total_tokens = sum(m.new_tokens for m in mets.values())
+        return {
+            "outputs": dict(self._outputs),
+            "metrics": mets,
+            "requests_per_s": len(mets) / wall,
+            "tokens_per_s": total_tokens / wall,
+            "steps": steps,
+            "wall_s": wall,
+        }

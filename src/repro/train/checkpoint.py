@@ -100,6 +100,115 @@ def load_policy(path: str):
 
 
 # ---------------------------------------------------------------------------
+# compact serving checkpoints (DESIGN.md §11.2)
+# ---------------------------------------------------------------------------
+
+COMPACT_FORMAT = "compact-v1"
+
+
+def _nest_paths(items):
+    """Rebuild a nested pytree from ('/'-joined path, value) pairs.
+    All-numeric key levels become lists (tree_flatten_with_path emits
+    list indices as numeric components)."""
+    if len(items) == 1 and items[0][0] == "":
+        return items[0][1]
+    root: dict = {}
+    for key, v in items:
+        parts = key.split("/")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+
+    def conv(d):
+        if not isinstance(d, dict):
+            return d
+        if d and all(k.isdigit() for k in d):
+            return [conv(d[k]) for k in sorted(d, key=int)]
+        return {k: conv(v) for k, v in d.items()}
+
+    return conv(root)
+
+
+def is_compact(path: str) -> bool:
+    """True when ``path`` holds a compact-format serving checkpoint."""
+    mpath = os.path.join(path, "manifest.json")
+    if not os.path.exists(mpath):
+        return False
+    with open(mpath) as f:
+        return json.load(f).get("format") == COMPACT_FORMAT
+
+
+def save_compact(path: str, tree: Any, step: Optional[int] = None,
+                 policy: Optional[dict] = None) -> None:
+    """Persist a serving tree (``serve.compressed.compress_tree``
+    output) in compact form: compressed leaves keep their ``(idx, val)``
+    / ``(levels, scale)`` buffers plus layout metadata; dense leaves
+    save as-is.  :func:`load_compact` rebuilds the tree without a
+    ``like`` structure and without ever densifying."""
+    from repro.serve.compressed import CompressedTensor
+    os.makedirs(path, exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, CompressedTensor))
+    arrays = {}
+    manifest = {"format": COMPACT_FORMAT, "keys": [], "step": step}
+    if policy is not None:
+        manifest["policy"] = policy
+    for i, (p, leaf) in enumerate(flat):
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        name = f"a{i}"
+        if isinstance(leaf, CompressedTensor):
+            arrays[name + "_a"] = np.asarray(jax.device_get(leaf.a))
+            arrays[name + "_b"] = np.asarray(jax.device_get(leaf.b))
+            manifest["keys"].append({
+                "name": name, "path": key, "kind": leaf.kind,
+                "row_len": leaf.row_len, "shape": list(leaf.shape),
+                "out_axis": leaf.out_axis, "dtype": leaf.dtype,
+                "op": leaf.op,
+            })
+        else:
+            arr = np.asarray(jax.device_get(leaf))
+            dtype = str(arr.dtype)
+            if dtype in _EXOTIC:
+                arr = arr.view(_EXOTIC[dtype][0])
+            arrays[name] = arr
+            manifest["keys"].append({"name": name, "path": key,
+                                     "kind": "dense", "dtype": dtype})
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def load_compact(path: str) -> Any:
+    """Rebuild the serving tree from a compact checkpoint.  Compressed
+    leaves come back as ``CompressedTensor`` holding exactly the stored
+    buffers — no dense materialization happens here (the zero-densify
+    counter stays untouched)."""
+    from repro.serve.compressed import CompressedTensor
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != COMPACT_FORMAT:
+        raise ValueError(f"{path} is not a {COMPACT_FORMAT} checkpoint")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    items = []
+    for e in manifest["keys"]:
+        if e["kind"] == "dense":
+            arr = np.asarray(data[e["name"]])
+            if e["dtype"] in _EXOTIC:
+                arr = arr.view(_EXOTIC[e["dtype"]][1])
+            items.append((e["path"], jax.numpy.asarray(arr)))
+        else:
+            leaf = CompressedTensor(
+                e["kind"], jax.numpy.asarray(data[e["name"] + "_a"]),
+                jax.numpy.asarray(data[e["name"] + "_b"]),
+                e["row_len"], tuple(e["shape"]), e["out_axis"],
+                e["dtype"], e.get("op", ""))
+            items.append((e["path"], leaf))
+    return _nest_paths(items)
+
+
+# ---------------------------------------------------------------------------
 # crash-consistent full train-state checkpoints (DESIGN.md §9)
 # ---------------------------------------------------------------------------
 
