@@ -13,6 +13,14 @@ Two row families:
   dense weights.  us_per_call is one engine step; derived carries the
   aggregate tokens/s, requests/s and mean TTFT — the serving numbers
   the paper-scale deployment cares about.
+* ``serve/kv/<layout>/b<B>`` — the same engine burst across KV-cache
+  layouts (DESIGN.md §12): per-slot contiguous, shared page pool, and
+  int8-quantized pages.  derived carries tok/s + TTFT plus
+  ``max_admissible`` — how many concurrent 16-token requests the
+  *contiguous layout's* KV HBM budget admits under each layout
+  (contiguous reserves max_len per slot; paged holds
+  ceil(tokens/page_size) pages; int8 pages pack ~4x more tokens per
+  byte), the capacity win paged admission buys at fixed memory.
 
 Every row lands in ``BENCH_serve.json`` and is gated by
 ``check_regression.py`` like the other suites.
@@ -118,5 +126,63 @@ def _engine_rows():
     return rows
 
 
+KV_BATCH = 8
+KV_MAX_LEN = 40
+KV_PAGE_SIZE = 8
+KV_REQ_TOKENS = PROMPT_PAD + NEW_TOKENS   # peak tokens per request
+
+
+def _kv_admissible(cfg, layout):
+    """Concurrent KV_REQ_TOKENS-token requests admissible at the
+    contiguous layout's HBM budget (KV_BATCH slots x KV_MAX_LEN)."""
+    tok_f32 = cfg.n_layers * 2 * cfg.n_kv_heads * cfg.head_dim * 4
+    budget = KV_BATCH * KV_MAX_LEN * tok_f32
+    if layout == "contig":
+        per_req = KV_MAX_LEN * tok_f32            # a whole slot
+    else:
+        pages = -(-KV_REQ_TOKENS // KV_PAGE_SIZE)
+        tok = (cfg.n_layers * 2 * (cfg.n_kv_heads * cfg.head_dim + 4)
+               if layout == "paged_q8" else tok_f32)
+        per_req = pages * KV_PAGE_SIZE * tok
+    return budget // per_req
+
+
+def _kv_row(params, cfg, layout):
+    eng = ServeEngine(params, cfg, max_batch=KV_BATCH, max_len=KV_MAX_LEN,
+                      prompt_pad=PROMPT_PAD, paged=layout != "contig",
+                      page_size=KV_PAGE_SIZE,
+                      kv_quant=layout == "paged_q8")
+    rng = np.random.RandomState(0)
+    for _ in range(KV_BATCH):
+        plen = int(rng.randint(max(2, PROMPT_PAD // 2), PROMPT_PAD + 1))
+        eng.submit(rng.randint(0, cfg.vocab, plen).tolist(),
+                   max_new_tokens=NEW_TOKENS)
+    res = eng.run()
+    mets = list(res["metrics"].values())
+    ttft_ms = 1e3 * float(np.mean([m.ttft_s for m in mets]))
+    extra = ""
+    if layout != "contig":
+        pool = res["pool"]
+        extra = (f";peak_pages={pool['peak_pages_used']}"
+                 f"/{pool['n_pages']}")
+    return BenchRow(
+        name=f"serve/kv/{layout}/b{KV_BATCH}",
+        us_per_call=res["wall_s"] / max(res["steps"], 1) * 1e6,
+        derived=(f"tok_s={res['tokens_per_s']:.1f};"
+                 f"ttft_ms={ttft_ms:.1f};steps={res['steps']};"
+                 f"max_admissible={_kv_admissible(cfg, layout)}"
+                 f"{extra}"),
+        path=layout,
+    )
+
+
+def _kv_rows():
+    cfg = get_config(ARCH, smoke=True)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    return [_kv_row(params, cfg, layout)
+            for layout in ("contig", "paged", "paged_q8")]
+
+
 def run() -> list:
-    return _gemm_rows() + _engine_rows()
+    return _gemm_rows() + _engine_rows() + _kv_rows()

@@ -71,7 +71,7 @@ VMEM_DENSE_BYTES = 3 * 8 * (1 << 19) * 4
 VMEM_COMPACT_BYTES = 8 * 128 * (1 << 11) * 4
 
 KERNELS = ("topk_compress", "topk_compact", "qsgd",
-           "sparse_gemm", "qdq_gemm")
+           "sparse_gemm", "qdq_gemm", "paged_decode")
 
 #: fixed activation-row count for serving-GEMM measurement — the tuned
 #: geometry tiles the *weight* rows; activation batch only scales every
@@ -292,6 +292,18 @@ def chunk_candidates(row_len: int) -> list:
     return out or [row_len]
 
 
+def page_block_candidates(pages: int) -> list:
+    """Pages-per-block candidates for ``paged_decode``: powers of two up
+    to the block-table width, plus the width itself (single-block)."""
+    cands = set()
+    p = 1
+    while p < max(pages, 1):
+        cands.add(p)
+        p *= 2
+    cands.add(max(pages, 1))
+    return sorted(cands)
+
+
 def _interpret_default(interpret: Optional[bool]) -> bool:
     if interpret is not None:
         return interpret
@@ -371,6 +383,37 @@ def measure_entry(key: ShapeKey, *, iters: int = 3,
             us = _time_us(fn, xact, levels, scale, iters=iters)
             if best is None or us < best.us:
                 best = TunedEntry(br, None, us)
+    elif key.kernel == "paged_decode":
+        # signature: rows = block-table width (max pages per request),
+        # row_len = page size, k = head_dim, sign = int8 page layout;
+        # block_rows stores the winning pages-per-block
+        from repro.kernels import paged_attention as _pa
+        P, ps, hd = key.rows, key.row_len, key.k
+        B, KV, G = 4, 1, 8
+        n_pages = B * P
+        q = jnp.asarray(rng.randn(B, 1, KV * G, hd).astype(np.float32))
+        if key.sign:
+            kp = jnp.asarray(rng.randint(
+                -127, 128, (n_pages, ps, KV, hd)).astype(np.int8))
+            vp = jnp.asarray(rng.randint(
+                -127, 128, (n_pages, ps, KV, hd)).astype(np.int8))
+        else:
+            kp = jnp.asarray(
+                rng.randn(n_pages, ps, KV, hd).astype(np.float32))
+            vp = jnp.asarray(
+                rng.randn(n_pages, ps, KV, hd).astype(np.float32))
+        ks_ = jnp.asarray(rng.rand(n_pages, ps).astype(np.float32))
+        vs_ = jnp.asarray(rng.rand(n_pages, ps).astype(np.float32))
+        tbl = jnp.asarray(
+            np.arange(n_pages).reshape(B, P).astype(np.int32))
+        lens = jnp.asarray(np.full(B, P * ps, np.int32))
+        for pb in page_block_candidates(P):
+            fn = jax.jit(functools.partial(
+                _pa.paged_decode_fwd, pages_per_block=pb,
+                interpret=interp))
+            us = _time_us(fn, q, kp, vp, ks_, vs_, tbl, lens, iters=iters)
+            if best is None or us < best.us:
+                best = TunedEntry(pb, None, us)
     else:
         raise ValueError(f"unknown kernel {key.kernel!r}; "
                          f"expected one of {KERNELS}")
@@ -436,6 +479,8 @@ SMOKE_KEYS = (
     ShapeKey("qsgd", 1, 1024, 15, False),
     ShapeKey("sparse_gemm", 8, 256, 16, False),
     ShapeKey("qdq_gemm", 8, 256, 15, False),
+    ShapeKey("paged_decode", 4, 16, 32, False),
+    ShapeKey("paged_decode", 4, 16, 32, True),
 )
 
 

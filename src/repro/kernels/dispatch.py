@@ -556,6 +556,48 @@ def _gemm_geometry(cfg: DispatchConfig, kernel: str, rows: int,
     return DEFAULT_BLOCK_ROWS, DEFAULT_CHUNK
 
 
+def paged_geometry(cfg: Optional[DispatchConfig], pages: int,
+                   page_size: int, head_dim: int, quant: bool) -> int:
+    """pages-per-block for a ``paged_decode`` launch — same resolution
+    order as the GEMMs: explicit ``cfg.block_rows`` (reused as the page
+    count per grid step), then the autotune table (signature = table
+    width × page size × head_dim, sign bit = int8 pages), then the
+    default; always clamped to the table width."""
+    cfg = _resolve(cfg)
+    if cfg.block_rows is not None:
+        return max(1, min(cfg.block_rows, pages))
+    from repro.kernels import autotune
+    from repro.kernels.paged_attention import DEFAULT_PAGES_PER_BLOCK
+    ent = autotune.lookup("paged_decode", pages, page_size, head_dim, quant)
+    pb = ent.block_rows if ent is not None else DEFAULT_PAGES_PER_BLOCK
+    return max(1, min(pb, pages))
+
+
+def paged_decode(x: jnp.ndarray, kp: jnp.ndarray, vp: jnp.ndarray,
+                 kscale: jnp.ndarray, vscale: jnp.ndarray,
+                 tables: jnp.ndarray, lengths: jnp.ndarray,
+                 cfg: Optional[DispatchConfig] = None) -> jnp.ndarray:
+    """Serving entry for paged flash-decode attention.
+
+    x: [B, 1, H, hd] rope'd queries; kp/vp/kscale/vscale: the KV page
+    pool (see ``kernels/paged_attention.py``); tables: [B, P] block
+    tables; lengths: [B].  Kernel when ``cfg.kernels_enabled()`` (pages
+    gathered into VMEM via scalar-prefetch block tables, int8 dequant
+    fused into the attention dot), the gather oracle otherwise;
+    [B, 1, H, hd] either way.
+    """
+    cfg = _resolve(cfg)
+    if cfg.kernels_enabled():
+        pb = paged_geometry(cfg, tables.shape[-1], kp.shape[-3],
+                            kp.shape[-1], kp.dtype == jnp.int8)
+        from repro.kernels import paged_attention as _pa
+        return _pa.paged_decode_fwd(x, kp, vp, kscale, vscale, tables,
+                                    lengths, pages_per_block=pb,
+                                    interpret=cfg._interpret())
+    from repro.kernels.ref import paged_decode_ref
+    return paged_decode_ref(x, kp, vp, kscale, vscale, tables, lengths)
+
+
 def sparse_gemm(x: jnp.ndarray, idx: jnp.ndarray, val: jnp.ndarray,
                 row_len: int, cfg: Optional[DispatchConfig] = None
                 ) -> jnp.ndarray:

@@ -10,8 +10,10 @@ from __future__ import annotations
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 from repro.kernels import qsgd as _qsgd
 from repro.kernels import sparse_gemm as _sg
 from repro.kernels import topk_compress as _topk
@@ -57,6 +59,34 @@ def qsgd_quantize(x, u, s: int, *, interpret: bool | None = None):
 def flash_decode(q, k, v, valid, *, interpret: bool | None = None):
     return _fa.flash_decode_fwd(q, k, v, valid,
                                 interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("pages_per_block", "interpret"))
+def _paged_decode_jit(q, kp, vp, kscale, vscale, tables, lengths, *,
+                      pages_per_block: int, interpret: bool):
+    return _pa.paged_decode_fwd(q, kp, vp, kscale, vscale, tables, lengths,
+                                pages_per_block=pages_per_block,
+                                interpret=interpret)
+
+
+def paged_decode(q, kp, vp, kscale, vscale, tables, lengths, *,
+                 pages_per_block: int | None = None,
+                 interpret: bool | None = None):
+    """Paged flash-decode over a KV page pool (kernels/paged_attention).
+
+    ``pages_per_block`` (the kernel geometry, static) defaults to the
+    autotuned table resolution for this (table width, page size,
+    head_dim, quantized) signature — resolved *before* the jit so a
+    tuned geometry never triggers a retrace inside a serving step.
+    """
+    if pages_per_block is None:
+        from repro.kernels import dispatch as _dsp
+        pages_per_block = _dsp.paged_geometry(
+            None, tables.shape[-1], kp.shape[-3], kp.shape[-1],
+            kp.dtype == jnp.int8)
+    return _paged_decode_jit(q, kp, vp, kscale, vscale, tables, lengths,
+                             pages_per_block=pages_per_block,
+                             interpret=_auto_interpret(interpret))
 
 
 @partial(jax.jit, static_argnames=("row_len", "block_m", "block_rows",

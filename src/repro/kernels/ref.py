@@ -209,6 +209,41 @@ def flash_decode_ref(q, k, v, valid):
     return o.reshape(B, 1, H, D).astype(q.dtype)
 
 
+def paged_decode_ref(q, kp, vp, kscale, vscale, tables, lengths):
+    """Gather-then-attend oracle for ``paged_decode_fwd``.
+
+    q: [B, 1, H, D]; kp/vp: [n_pages, page_size, KV, D] pool arenas
+    (fp, or int8 levels with the [n_pages, page_size] f32 per-token-slot
+    scales); tables: [B, P] int32 block tables (-1 = unallocated);
+    lengths: [B] int32.  Materializes each request's logical KV view
+    through the table, dequantizes, and attends with explicit masked
+    normalization — a length-0 row (free engine slot) yields exact
+    zeros, matching the kernel, where ``jax.nn.softmax`` would emit a
+    uniform distribution over garbage.
+    """
+    B, _, H, D = q.shape
+    n_pages, ps, KV, _ = kp.shape
+    P = tables.shape[1]
+    G = H // KV
+    tbl = jnp.clip(tables, 0, n_pages - 1)
+    k = kp[tbl].astype(jnp.float32)                  # [B, P, ps, KV, D]
+    v = vp[tbl].astype(jnp.float32)
+    if kp.dtype == jnp.int8:
+        k = k * kscale[tbl].astype(jnp.float32)[..., None, None]
+        v = v * vscale[tbl].astype(jnp.float32)[..., None, None]
+    k = k.reshape(B, P * ps, KV, D)
+    v = v.reshape(B, P * ps, KV, D)
+    live = jnp.arange(P * ps)[None, :] < lengths[:, None]        # [B, C]
+    qf = q.astype(jnp.float32).reshape(B, 1, KV, G, D) * (D ** -0.5)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k)
+    s = jnp.where(live[:, None, None, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(live[:, None, None, None, :], jnp.exp(s - m), 0.0)
+    denom = jnp.moveaxis(jnp.sum(p, axis=-1), -1, 1)[..., None]  # [B,1,KV,G,1]
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v) / jnp.maximum(denom, 1e-30)
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # bucketed QSGD stochastic quantization
 # ---------------------------------------------------------------------------

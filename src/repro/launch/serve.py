@@ -102,7 +102,19 @@ def main(argv=None):
                     help="synthetic request count")
     ap.add_argument("--flash", action="store_true",
                     help="route decode attention through the Pallas "
-                         "flash-decode kernel")
+                         "flash-decode kernel (paged: the paged kernel)")
+    ap.add_argument("--paged", action="store_true",
+                    help="shared KV page pool + block tables instead of "
+                         "per-slot contiguous caches (DESIGN.md §12)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (--paged)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 pages + per-token-slot f32 scales "
+                         "(--paged; 4x KV HBM at f32)")
+    ap.add_argument("--kv-pool-pages", type=int, default=None,
+                    help="total pool pages (default: max-batch * "
+                         "ceil(max-len / page-size), the contiguous "
+                         "layout's HBM equivalent)")
     ap.add_argument("--dispatch", choices=("auto", "kernel", "reference"),
                     default="auto",
                     help="compressed-GEMM dispatch mode (kernel uses "
@@ -132,9 +144,13 @@ def main(argv=None):
           f"(dense equivalent {sizes['dense'] / 1e6:.2f} MB, "
           f"{sizes['leaves']} leaves)")
 
+    if args.kv_quant and not args.paged:
+        raise SystemExit("--kv-quant requires --paged")
     eng = ServeEngine(params, cfg, max_batch=args.max_batch,
                       max_len=args.max_len, prompt_pad=args.prompt_len,
-                      scheduler=args.scheduler)
+                      scheduler=args.scheduler, paged=args.paged,
+                      page_size=args.page_size, kv_quant=args.kv_quant,
+                      kv_pool_pages=args.kv_pool_pages)
     rng = np.random.RandomState(args.seed)
     for _ in range(args.requests):
         plen = int(rng.randint(max(2, args.prompt_len // 2),
@@ -155,18 +171,30 @@ def main(argv=None):
           f"{res['tokens_per_s']:.1f} tok/s, "
           f"wall {res['wall_s']:.2f}s, peak occupancy "
           f"{max(eng.occupancy) if eng.occupancy else 0}/{args.max_batch}")
+    if args.paged:
+        pool = res["pool"]
+        print(f"page pool: {pool['peak_pages_used']}/{pool['n_pages']} "
+              f"peak pages ({pool['page_size']} tok/page, "
+              f"{'int8' if pool['kv_quant'] else 'fp'} layout), "
+              f"{pool['pages_used']} in use at exit")
+        print(f"  preemptions={pool['preemptions']} "
+              f"admission_stalls={pool['admission_stalls']} "
+              f"fragmentation={pool['fragmentation']:.4f}")
     print(f"serve stats: {sc.STATS}")
     if args.compressed and sc.STATS["densify"]:
         raise SystemExit("zero-densify violated: the serving path "
                          f"densified {sc.STATS['densify']} leaves")
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({
+            payload = {
                 "requests_per_s": res["requests_per_s"],
                 "tokens_per_s": res["tokens_per_s"],
                 "steps": res["steps"],
                 "densify": sc.STATS["densify"],
-            }, f, indent=2)
+            }
+            if args.paged:
+                payload["pool"] = res["pool"]
+            json.dump(payload, f, indent=2)
     sample = res["outputs"].get(0, [])[:10]
     print("sample:", sample)
 

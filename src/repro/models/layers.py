@@ -290,6 +290,131 @@ def decode_attention(
 
 
 # ---------------------------------------------------------------------------
+# paged KV cache (shared page pool + per-request block tables)
+# ---------------------------------------------------------------------------
+
+
+class PagedKVCache(NamedTuple):
+    """Shared KV page pool for one layer ([L, ...]-stacked outside).
+
+    ``k``/``v``: [n_pages, page_size, KV, hd] arenas — the activation
+    dtype, or int8 levels when the pool is quantized (inferred from the
+    dtype; no flag field so the pytree structure is layout-independent).
+    ``kscale``/``vscale``: [n_pages, page_size] f32 per-token-slot
+    dequantization scales, zeros (and unread) for fp pools.
+
+    Block tables and lengths live *outside* the pytree (one table per
+    request, shared by every layer) — see ``serve/engine.py``.
+    """
+
+    k: Array
+    v: Array
+    kscale: Array
+    vscale: Array
+
+
+def init_paged_pool(cfg: ModelConfig, n_pages: int, page_size: int,
+                    stacked: int | None = None, quant: bool = False,
+                    dtype=None) -> PagedKVCache:
+    pre = (stacked,) if stacked else ()
+    dt = jnp.int8 if quant else (dtype or cfg.adtype)
+    shape = pre + (n_pages, page_size, cfg.n_kv_heads, cfg.hd)
+    return PagedKVCache(
+        k=jnp.zeros(shape, dt),
+        v=jnp.zeros(shape, dt),
+        kscale=jnp.zeros(pre + (n_pages, page_size), jnp.float32),
+        vscale=jnp.zeros(pre + (n_pages, page_size), jnp.float32),
+    )
+
+
+def quantize_kv(x: Array) -> tuple[Array, Array]:
+    """Deterministic symmetric int8 over the trailing [KV, hd] axes:
+    scale = amax/127 per token slot (round-to-nearest, clip ±127), the
+    same wire scheme as ``serve/compressed.py``'s QSGD levels — so a
+    requantized identical token is bit-identical (admission re-feeds the
+    last prompt token; idempotency keeps that step exact)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=(-2, -1))
+    scale = amax / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)[..., None, None]
+    levels = jnp.clip(jnp.round(xf / safe), -127, 127).astype(jnp.int8)
+    return levels, scale
+
+
+def paged_write(pool: PagedKVCache, k_new: Array, v_new: Array,
+                tables: Array, positions: Array,
+                active: Array) -> PagedKVCache:
+    """Write one token per slot (k_new/v_new: [B, 1, KV, hd]) into each
+    slot's table-mapped page at ``positions`` ([B]).  Inactive slots
+    (``active`` False — free engine slots still traced by the batched
+    step) and unallocated (-1) table entries scatter to an out-of-pool
+    sentinel and are dropped."""
+    n_pages, ps = pool.k.shape[0], pool.k.shape[1]
+    P = tables.shape[1]
+    pidx = jnp.clip(positions // ps, 0, P - 1)
+    pids = jnp.take_along_axis(tables, pidx[:, None], axis=1)[:, 0]
+    pids = jnp.where(active & (pids >= 0), pids, n_pages)
+    offs = jnp.mod(positions, ps)
+    kv_k, kv_v = k_new[:, 0], v_new[:, 0]            # [B, KV, hd]
+    if pool.k.dtype == jnp.int8:
+        lk, sk = quantize_kv(kv_k)
+        lv, sv = quantize_kv(kv_v)
+        return pool._replace(
+            k=pool.k.at[pids, offs].set(lk, mode="drop"),
+            v=pool.v.at[pids, offs].set(lv, mode="drop"),
+            kscale=pool.kscale.at[pids, offs].set(sk, mode="drop"),
+            vscale=pool.vscale.at[pids, offs].set(sv, mode="drop"),
+        )
+    return pool._replace(
+        k=pool.k.at[pids, offs].set(kv_k.astype(pool.k.dtype), mode="drop"),
+        v=pool.v.at[pids, offs].set(kv_v.astype(pool.v.dtype), mode="drop"),
+    )
+
+
+def paged_prefill_insert(pool: PagedKVCache, k_all: Array, v_all: Array,
+                         page_ids: Array) -> PagedKVCache:
+    """Scatter one request's prefilled KV into the pool.
+
+    k_all/v_all: [L, Cp, KV, hd] (Cp a page multiple); page_ids:
+    [Cp/page_size] physical destinations in logical page order, with
+    the ``n_pages`` sentinel marking unallocated tail pages (dropped).
+    Pool is [L, ...]-stacked; quantization applied per token slot."""
+    L, Cp, KV, hd = k_all.shape
+    ps = pool.k.shape[2]
+    n_adm = Cp // ps
+    kp = k_all.reshape(L, n_adm, ps, KV, hd)
+    vp = v_all.reshape(L, n_adm, ps, KV, hd)
+    if pool.k.dtype == jnp.int8:
+        lk, sk = quantize_kv(kp)
+        lv, sv = quantize_kv(vp)
+        return pool._replace(
+            k=pool.k.at[:, page_ids].set(lk, mode="drop"),
+            v=pool.v.at[:, page_ids].set(lv, mode="drop"),
+            kscale=pool.kscale.at[:, page_ids].set(sk, mode="drop"),
+            vscale=pool.vscale.at[:, page_ids].set(sv, mode="drop"),
+        )
+    return pool._replace(
+        k=pool.k.at[:, page_ids].set(kp.astype(pool.k.dtype), mode="drop"),
+        v=pool.v.at[:, page_ids].set(vp.astype(pool.v.dtype), mode="drop"),
+    )
+
+
+def paged_decode_attention(q: Array, pool: PagedKVCache, tables: Array,
+                           lengths: Array, use_pallas: bool = False) -> Array:
+    """Single-token attention against the page pool (full causal — the
+    engine gates paged serving to uniform full-window configs).  Kernel
+    or gather-oracle path by ``use_pallas``; a length-0 slot yields
+    zeros either way."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.paged_decode(q, pool.k, pool.v, pool.kscale,
+                                 pool.vscale, tables, lengths)
+    from repro.kernels.ref import paged_decode_ref
+    return paged_decode_ref(q, pool.k, pool.v, pool.kscale, pool.vscale,
+                            tables, lengths)
+
+
+# ---------------------------------------------------------------------------
 # blocks
 # ---------------------------------------------------------------------------
 
@@ -337,3 +462,20 @@ def attn_block_decode(x, p, cfg: ModelConfig, cache: KVCache, pos, window: int):
     o = decode_attention(q, cache, pos, window, use_pallas=cfg.use_pallas)
     out = matmul(o.reshape(x.shape[0], 1, cfg.n_heads * cfg.hd), p["wo"])
     return out, cache
+
+
+def attn_block_decode_paged(x, p, cfg: ModelConfig, pool: PagedKVCache,
+                            tables: Array, positions: Array, active: Array):
+    """Decode attention block over the shared page pool.  Unlike the
+    contiguous block (one scalar ``pos``, vmapped per slot), this runs
+    the whole slot batch at once: ``positions`` is [B] (per-slot rope
+    phase) and ``active`` gates pool writes for free slots."""
+    q, k, v = gqa_project(x, p, cfg)
+    q = rope(q, positions[:, None], cfg.rope_theta)
+    k = rope(k, positions[:, None], cfg.rope_theta)
+    pool = paged_write(pool, k, v, tables, positions, active)
+    lengths = jnp.where(active, positions + 1, 0).astype(jnp.int32)
+    o = paged_decode_attention(q, pool, tables, lengths,
+                               use_pallas=cfg.use_pallas)
+    out = matmul(o.reshape(x.shape[0], 1, cfg.n_heads * cfg.hd), p["wo"])
+    return out, pool

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, NO_SHARDING, ShardingPolicy
 from repro.models.layers import (
     attn_block_decode,
+    attn_block_decode_paged,
     attn_block_train,
     attn_params,
     cache_prefill,
@@ -269,3 +270,33 @@ def decode_step(params, cache, token: jax.Array, pos, cfg: ModelConfig,
     h = rmsnorm(h, params["final_norm"])
     logits = _apply_head(h[:, 0], params, cfg).astype(jnp.float32)
     return maybe_shard(logits, policy.logits), new_cache
+
+
+def decode_step_paged(params, pool, tables, tokens: jax.Array,
+                      positions: jax.Array, active: jax.Array,
+                      cfg: ModelConfig,
+                      policy: ShardingPolicy = NO_SHARDING):
+    """One decode step over the shared KV page pool, whole slot batch at
+    once.  tokens/positions/active: [B] (per-slot token, position and
+    liveness); pool: ``PagedKVCache`` stacked [L, ...]; tables: [B, P]
+    block tables shared by every layer.  Returns (logits [B, V],
+    new_pool).  Paged serving is gated to uniform-window scanned stacks
+    (full attention) — the engine enforces it; this asserts it."""
+    if not (uniform_windows(cfg) and cfg.scan_layers):
+        raise ValueError("paged decode requires uniform windows and "
+                         "scanned layers")
+    h = embed(tokens[:, None], params["embed"]).astype(cfg.adtype)
+
+    def body(carry, xs):
+        lp, pool_l = xs
+        a, new_pool = attn_block_decode_paged(
+            rmsnorm(carry, lp["ln1"]), lp["attn"], cfg, pool_l, tables,
+            positions, active)
+        hh = carry + a
+        hh = hh + swiglu(rmsnorm(hh, lp["ln2"]), lp["mlp"])
+        return hh, new_pool
+
+    h, new_pool = jax.lax.scan(body, h, (params["layers"], pool))
+    h = rmsnorm(h, params["final_norm"])
+    logits = _apply_head(h[:, 0], params, cfg).astype(jnp.float32)
+    return maybe_shard(logits, policy.logits), new_pool

@@ -1,24 +1,52 @@
-"""Continuous-batching request runtime (DESIGN.md §11.3).
+"""Continuous-batching request runtime (DESIGN.md §11.3, §12).
 
 The engine owns ``max_batch`` decode *slots*.  Each slot holds one
-in-flight request's KV cache (a B=1 cache stacked on a leading slot
-axis, so per-slot position state stays independent); every engine
-iteration admits queued requests into free slots (prefill-insert) and
-then advances **all** active slots by one token with a single vmapped,
-jitted decode step.  Completion frees the slot for the next queued
-request immediately — prefill and decode interleave, nothing waits for
-a batch to drain.  ``scheduler='static'`` keeps the same machinery but
-only admits when every slot is free (the classic static-batching
-baseline the benchmarks compare against).
+in-flight request's KV state; every engine iteration admits queued
+requests into free slots (prefill-insert) and then advances **all**
+active slots by one token with a single jitted decode step.  Completion
+frees the slot for the next queued request immediately — prefill and
+decode interleave, nothing waits for a batch to drain.
+``scheduler='static'`` keeps the same machinery but only admits when
+every slot is free (the classic static-batching baseline the benchmarks
+compare against).
+
+Two KV layouts (DESIGN.md §12):
+
+- **contiguous** (default): a B=1 ``max_len`` ring cache per slot,
+  stacked on a leading slot axis; HBM is ``max_batch × max_len``
+  regardless of the tokens actually in flight.
+- **paged** (``paged=True``): one shared page pool
+  (``models.layers.PagedKVCache``, [L, n_pages, page_size, KV, hd]) +
+  per-request block tables.  Admission allocates ``ceil(true_len /
+  page_size)`` pages from a host-side free list (``serve.paging``),
+  decode grows a request's table page-by-page, and occupancy is
+  bounded by *tokens in flight*: requests are admitted while pages
+  remain, stall in the queue when the pool can't hold their prompt
+  (``admission_stalls``), and — when an active request needs a growth
+  page the pool can't supply — the newest-admitted other request is
+  preempted (pages freed, original request requeued at the *front* for
+  recompute-from-start; ``preemptions``).  ``n_pages >=
+  max_pages_per_req`` is enforced at construction, so a lone request
+  can always finish and the preemption loop terminates.
 
 Slot admission (``_admit``): the prompt is right-padded to the engine's
-static ``prompt_pad`` (one prefill compilation), the B=1 prefilled
-cache has its pad positions invalidated (``pos >= true_len -> -1``) and
-is written into the slot axis with a ``dynamic_update_slice``.  The
-first decode step then re-feeds the last prompt token at position
-``true_len - 1`` — an idempotent rewrite of that token's k/v — so
-sampling starts from logits conditioned on the true prompt, not on pad
-garbage.
+static ``prompt_pad`` (one prefill compilation).  Contiguous: the B=1
+prefilled cache has its pad positions invalidated (``pos >= true_len ->
+-1``) and is written into the slot axis with a ``dynamic_update_slice``.
+Paged: the prefilled KV is scattered into the allocated pages
+(pad-token garbage beyond ``true_len`` lands inside owned pages, is
+masked by the per-slot length until decode overwrites it, and never
+crosses request boundaries).  Either way the first decode step re-feeds
+the last prompt token at position ``true_len - 1`` — an idempotent
+rewrite of that token's k/v (int8 page quantization is deterministic,
+so requantization is idempotent too) — so sampling starts from logits
+conditioned on the true prompt, not on pad garbage.
+
+Per-step host↔device traffic is download-only: slot tokens, positions
+and liveness live in device buffers that the jitted step advances
+(``poss + 1``) and that admission/finish *events* patch pointwise —
+the per-step ``jnp.asarray`` uploads of the original engine are gone,
+and tests pin ``_step_jit._cache_size() == 1`` across a whole run.
 
 Everything model-facing goes through ``models.transformer`` entry
 points; compressed parameter trees (``serve.compressed``) drop in
@@ -37,8 +65,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels.launch_stats import PAGE_POOL
+from repro.models import layers as mlayers
 from repro.models import transformer as tf
 from repro.models.layers import KVCache
+from repro.serve.paging import PagePool
 
 
 @dataclasses.dataclass
@@ -74,6 +105,13 @@ class _Slot:
     admit_s: float = 0.0
     submit_s: float = 0.0
     ttft_s: float = -1.0
+    # paged bookkeeping: owned physical pages (logical order), the
+    # original request (for recompute-from-start preemption), and the
+    # admission sequence number (preemption victims = newest first)
+    pages: Optional[List[int]] = None
+    prompt: Optional[List[int]] = None
+    budget: int = 0
+    admit_seq: int = -1
 
     @property
     def free(self) -> bool:
@@ -97,18 +135,29 @@ class ServeEngine:
     model forward entry points come from ``models.transformer``;
     ``scheduler`` is 'continuous' (slot reuse on completion) or
     'static' (admit only into an all-free batch).  Greedy decoding;
-    ``eos_id`` stops a request early.
+    ``eos_id`` stops a request early.  ``paged=True`` switches the KV
+    state to the shared page pool (``page_size`` tokens per page,
+    ``kv_pool_pages`` total — default ``max_batch * ceil(max_len /
+    page_size)``, the contiguous layout's HBM equivalent);
+    ``kv_quant=True`` stores pages as int8 levels + per-token-slot f32
+    scales (4x KV HBM at f32 activations).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
                  max_len: int = 64, prompt_pad: int = 16,
                  scheduler: str = "continuous",
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 paged: bool = False, page_size: int = 16,
+                 kv_quant: bool = False,
+                 kv_pool_pages: Optional[int] = None):
         if scheduler not in ("continuous", "static"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         if prompt_pad >= max_len:
             raise ValueError("prompt_pad must leave room to decode "
                              f"(prompt_pad={prompt_pad}, max_len={max_len})")
+        if kv_quant and not paged:
+            raise ValueError("kv_quant requires paged=True (the contiguous "
+                             "layout has no quantized variant)")
         self.params = params
         self.cfg = cfg
         self.max_batch = int(max_batch)
@@ -116,44 +165,108 @@ class ServeEngine:
         self.prompt_pad = int(prompt_pad)
         self.scheduler = scheduler
         self.eos_id = eos_id
+        self.paged = bool(paged)
+        self.kv_quant = bool(kv_quant)
         self._queue: deque = deque()
         self._slots = [_Slot() for _ in range(self.max_batch)]
         self._next_rid = 0
+        self._admit_seq = 0
         self._outputs: dict = {}
         self._metrics: dict = {}
         #: per-iteration active-slot counts (scheduler-invariant tests)
         self.occupancy: List[int] = []
         self.steps = 0
-
-        one = tf.init_cache(cfg, 1, self.max_len)
-        self._caches = jax.tree_util.tree_map(
-            lambda x: jnp.stack([x] * self.max_batch), one)
+        #: paged-runtime counters (mirrored into launch_stats.PAGE_POOL)
+        self.preemptions = 0
+        self.admission_stalls = 0
+        self._peak_pages = 0
 
         cfg_ = cfg
         maxlen = self.max_len
 
-        def _admit_fn(params, caches, toks, true_len, slot):
-            # toks: [prompt_pad] int32; true_len, slot: traced scalars
-            _, cache, _ = tf.prefill(params, {"tokens": toks[None]}, cfg_,
-                                     max_len=maxlen)
-            cache = _sanitize(cache, true_len)
+        # per-slot decode state lives on device; the jitted step advances
+        # positions, admission/finish events patch entries pointwise —
+        # no per-step host->device uploads (tests pin the jit cache size)
+        self._toks = jnp.zeros(self.max_batch, jnp.int32)
+        self._poss = jnp.zeros(self.max_batch, jnp.int32)
+        self._active = jnp.zeros(self.max_batch, bool)
 
-            def ins(big, small):
-                return jax.lax.dynamic_update_slice(
-                    big, small[None].astype(big.dtype),
-                    (slot,) + (0,) * small.ndim)
-            return jax.tree_util.tree_map(ins, caches, cache)
+        if self.paged:
+            wins = cfg.layer_windows()
+            if not (tf.uniform_windows(cfg) and cfg.scan_layers
+                    and wins[0] <= 0):
+                raise ValueError(
+                    "paged KV serving requires uniform full-attention "
+                    f"windows and scanned layers (windows={wins}, "
+                    f"scan_layers={cfg.scan_layers})")
+            if page_size <= 0:
+                raise ValueError(f"page_size must be positive: {page_size}")
+            self.page_size = int(page_size)
+            self.max_pages_per_req = -(-self.max_len // self.page_size)
+            default_pages = self.max_batch * self.max_pages_per_req
+            self.n_pages = int(kv_pool_pages or default_pages)
+            if self.n_pages < self.max_pages_per_req:
+                raise ValueError(
+                    f"kv_pool_pages={self.n_pages} cannot hold one "
+                    f"max_len={self.max_len} request "
+                    f"({self.max_pages_per_req} pages of {self.page_size})")
+            self.pool_alloc = PagePool(self.n_pages, self.page_size)
+            self._adm_pages = -(-self.prompt_pad // self.page_size)
+            adm_cp = self._adm_pages * self.page_size
+            self._pool = mlayers.init_paged_pool(
+                cfg, self.n_pages, self.page_size, stacked=cfg.n_layers,
+                quant=self.kv_quant)
+            self._tables_np = np.full(
+                (self.max_batch, self.max_pages_per_req), -1, np.int32)
+            self._tables = jnp.asarray(self._tables_np)
+            self._tables_dirty = False
 
-        def _step_fn(params, caches, toks, poss):
-            # toks, poss: [max_batch] int32 (per-slot token + position)
-            def one(cache, tok, pos):
-                logits, new_c = tf.decode_step(params, cache, tok[None],
-                                               pos, cfg_)
-                return jnp.argmax(logits[0], axis=-1).astype(jnp.int32), new_c
-            return jax.vmap(one, in_axes=(0, 0, 0))(caches, toks, poss)
+            def _paged_admit_fn(params, pool, toks, page_ids):
+                # toks: [prompt_pad]; page_ids: [adm_pages] physical page
+                # destinations (n_pages sentinel = unallocated, dropped)
+                _, cache, _ = tf.prefill(params, {"tokens": toks[None]},
+                                         cfg_, max_len=adm_cp)
+                return mlayers.paged_prefill_insert(
+                    pool, cache.k[:, 0], cache.v[:, 0], page_ids)
 
-        self._admit_jit = jax.jit(_admit_fn)
-        self._step_jit = jax.jit(_step_fn)
+            def _paged_step_fn(params, pool, tables, toks, poss, active):
+                logits, new_pool = tf.decode_step_paged(
+                    params, pool, tables, toks, poss, active, cfg_)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return nxt, new_pool, poss + 1
+
+            self._admit_jit = jax.jit(_paged_admit_fn)
+            self._step_jit = jax.jit(_paged_step_fn)
+        else:
+            one = tf.init_cache(cfg, 1, self.max_len)
+            self._caches = jax.tree_util.tree_map(
+                lambda x: jnp.stack([x] * self.max_batch), one)
+
+            def _admit_fn(params, caches, toks, true_len, slot):
+                # toks: [prompt_pad] int32; true_len, slot: traced scalars
+                _, cache, _ = tf.prefill(params, {"tokens": toks[None]},
+                                         cfg_, max_len=maxlen)
+                cache = _sanitize(cache, true_len)
+
+                def ins(big, small):
+                    return jax.lax.dynamic_update_slice(
+                        big, small[None].astype(big.dtype),
+                        (slot,) + (0,) * small.ndim)
+                return jax.tree_util.tree_map(ins, caches, cache)
+
+            def _step_fn(params, caches, toks, poss):
+                # toks, poss: [max_batch] int32 (per-slot token + position)
+                def one(cache, tok, pos):
+                    logits, new_c = tf.decode_step(params, cache, tok[None],
+                                                   pos, cfg_)
+                    return (jnp.argmax(logits[0], axis=-1).astype(jnp.int32),
+                            new_c)
+                nxt, new_caches = jax.vmap(one, in_axes=(0, 0, 0))(
+                    caches, toks, poss)
+                return nxt, new_caches, poss + 1
+
+            self._admit_jit = jax.jit(_admit_fn)
+            self._step_jit = jax.jit(_step_fn)
 
     # -- request intake ----------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 16) -> int:
@@ -171,13 +284,25 @@ class ServeEngine:
                                    rid, time.perf_counter()))
         return rid
 
+    # -- device slot state -------------------------------------------------
+    def _set_slot_state(self, slot: int, tok: int, pos: int,
+                        active: bool) -> None:
+        """Point-patch one slot's device decode state (admission and
+        finish events only — never per step)."""
+        self._toks = self._toks.at[slot].set(tok)
+        self._poss = self._poss.at[slot].set(pos)
+        self._active = self._active.at[slot].set(active)
+
     # -- scheduling --------------------------------------------------------
     def _free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self._slots) if s.free]
 
     def _admit(self) -> int:
         """Move queued requests into free slots (FIFO).  The static
-        scheduler admits only when *every* slot is free."""
+        scheduler admits only when *every* slot is free.  Paged: the
+        queue head additionally needs ``ceil(true_len / page_size)``
+        free pages — token-budget admission; a blocked head counts an
+        admission stall and keeps FIFO order (no head-of-line bypass)."""
         free = self._free_slots()
         if self.scheduler == "static" and len(free) < self.max_batch:
             return 0
@@ -185,37 +310,134 @@ class ServeEngine:
         for slot_id in free:
             if not self._queue:
                 break
-            req = self._queue.popleft()
-            toks = np.zeros(self.prompt_pad, np.int32)
-            toks[:len(req.prompt)] = req.prompt
+            req = self._queue[0]
             true_len = len(req.prompt)
-            self._caches = self._admit_jit(
-                self.params, self._caches, jnp.asarray(toks),
-                jnp.asarray(true_len, jnp.int32),
-                jnp.asarray(slot_id, jnp.int32))
+            pages: List[int] = []
+            if self.paged:
+                need = self.pool_alloc.pages_for(true_len)
+                if not self.pool_alloc.can_alloc(need):
+                    self.admission_stalls += 1
+                    break
+                pages = self.pool_alloc.alloc(need, req.rid)
+            self._queue.popleft()
+            toks = np.zeros(self.prompt_pad, np.int32)
+            toks[:true_len] = req.prompt
+            if self.paged:
+                page_ids = np.full(self._adm_pages, self.n_pages, np.int32)
+                page_ids[:len(pages)] = pages
+                self._pool = self._admit_jit(
+                    self.params, self._pool, jnp.asarray(toks),
+                    jnp.asarray(page_ids))
+                self._tables_np[slot_id, :] = -1
+                self._tables_np[slot_id, :len(pages)] = pages
+                self._tables_dirty = True
+            else:
+                self._caches = self._admit_jit(
+                    self.params, self._caches, jnp.asarray(toks),
+                    jnp.asarray(true_len, jnp.int32),
+                    jnp.asarray(slot_id, jnp.int32))
             self._slots[slot_id] = _Slot(
                 rid=req.rid, tokens=[], next_token=req.prompt[-1],
                 pos=true_len - 1, remaining=req.max_new_tokens,
-                admit_s=time.perf_counter(), submit_s=req.submit_s)
+                admit_s=time.perf_counter(), submit_s=req.submit_s,
+                pages=pages, prompt=list(req.prompt),
+                budget=req.max_new_tokens, admit_seq=self._admit_seq)
+            self._admit_seq += 1
+            self._set_slot_state(slot_id, req.prompt[-1], true_len - 1, True)
             admitted += 1
         return admitted
 
+    # -- paged page management ---------------------------------------------
+    def _pick_victim(self, exclude: int) -> Optional[int]:
+        cands = [(s.admit_seq, i) for i, s in enumerate(self._slots)
+                 if not s.free and i != exclude]
+        return max(cands)[1] if cands else None
+
+    def _preempt(self, slot_id: int) -> None:
+        """Evict one active request (recompute-from-start): free its
+        pages, drop its generated tokens, and requeue the *original*
+        request at the queue front so FIFO completion order survives."""
+        s = self._slots[slot_id]
+        self.pool_alloc.release(s.pages, s.rid)
+        self._queue.appendleft(Request(s.prompt, s.budget, s.rid,
+                                       s.submit_s))
+        self._tables_np[slot_id, :] = -1
+        self._tables_dirty = True
+        self._slots[slot_id] = _Slot()
+        self._set_slot_state(slot_id, 0, 0, False)
+        self.preemptions += 1
+
+    def _grow_pages(self) -> None:
+        """Before a decode step, make sure every active slot owns the
+        page its next write lands in, oldest admission first; preempt
+        newest-admitted requests when the pool runs dry.  Terminates:
+        ``n_pages >= max_pages_per_req`` guarantees the oldest survivor
+        can always grow once every other slot is evicted."""
+        order = sorted((i for i, s in enumerate(self._slots) if not s.free),
+                       key=lambda i: self._slots[i].admit_seq)
+        for i in order:
+            s = self._slots[i]
+            if s.free:           # preempted earlier in this pass
+                continue
+            while s.pos // self.page_size >= len(s.pages):
+                if self.pool_alloc.can_alloc(1):
+                    page = self.pool_alloc.alloc(1, s.rid)[0]
+                    self._tables_np[i, len(s.pages)] = page
+                    s.pages.append(page)
+                    self._tables_dirty = True
+                else:
+                    victim = self._pick_victim(exclude=i)
+                    if victim is None:
+                        raise RuntimeError(
+                            "page pool deadlock: lone request cannot grow "
+                            "(kv_pool_pages misconfigured?)")
+                    self._preempt(victim)
+
+    def _refresh_gauges(self) -> None:
+        used = self.pool_alloc.used_pages
+        live = sum(s.pos + 1 for s in self._slots if not s.free)
+        self._peak_pages = max(self._peak_pages, used)
+        PAGE_POOL["pages_used"] = used
+        PAGE_POOL["pages_free"] = self.pool_alloc.free_pages
+        PAGE_POOL["peak_pages_used"] = self._peak_pages
+        PAGE_POOL["fragmentation"] = (
+            round(1.0 - live / (used * self.page_size), 4) if used else 0.0)
+        PAGE_POOL["preemptions"] = self.preemptions
+        PAGE_POOL["admission_stalls"] = self.admission_stalls
+
+    def pool_metrics(self) -> dict:
+        """Current page-pool gauges (paged engines only)."""
+        if not self.paged:
+            return {}
+        self._refresh_gauges()
+        return {"n_pages": self.n_pages, "page_size": self.page_size,
+                "kv_quant": self.kv_quant, **{k: PAGE_POOL[k]
+                                              for k in PAGE_POOL}}
+
     def step(self) -> int:
-        """One engine iteration: admit, then advance every active slot
-        one token.  Returns the number of requests completed."""
+        """One engine iteration: admit, grow block tables (paged), then
+        advance every active slot one token.  Returns the number of
+        requests completed."""
         self._admit()
+        if self.paged:
+            self._grow_pages()
         active = [i for i, s in enumerate(self._slots) if not s.free]
         if not active:
+            if self.paged:
+                self._refresh_gauges()
             return 0
         self.occupancy.append(len(active))
-        toks = np.zeros(self.max_batch, np.int32)
-        poss = np.zeros(self.max_batch, np.int32)
-        for i, s in enumerate(self._slots):
-            if not s.free:
-                toks[i] = s.next_token
-                poss[i] = s.pos
-        nxt, self._caches = self._step_jit(
-            self.params, self._caches, jnp.asarray(toks), jnp.asarray(poss))
+        if self.paged:
+            if self._tables_dirty:
+                self._tables = jnp.asarray(self._tables_np)
+                self._tables_dirty = False
+            nxt, self._pool, self._poss = self._step_jit(
+                self.params, self._pool, self._tables, self._toks,
+                self._poss, self._active)
+        else:
+            nxt, self._caches, self._poss = self._step_jit(
+                self.params, self._caches, self._toks, self._poss)
+        self._toks = nxt
         nxt = np.asarray(nxt)
         now = time.perf_counter()
         done = 0
@@ -233,6 +455,8 @@ class ServeEngine:
                 self._finish(i, now)
                 done += 1
         self.steps += 1
+        if self.paged:
+            self._refresh_gauges()
         return done
 
     def _finish(self, slot_id: int, now: float) -> None:
@@ -245,7 +469,12 @@ class ServeEngine:
             queue_wait_s=s.admit_s - s.submit_s, ttft_s=s.ttft_s,
             decode_s=max(now - (s.submit_s + s.ttft_s), 0.0),
             tokens_per_s=n / span)
+        if self.paged and s.pages:
+            self.pool_alloc.release(s.pages, s.rid)
+            self._tables_np[slot_id, :] = -1
+            self._tables_dirty = True
         self._slots[slot_id] = _Slot()
+        self._set_slot_state(slot_id, 0, 0, False)
 
     @property
     def pending(self) -> int:
@@ -255,7 +484,8 @@ class ServeEngine:
             max_steps: int = 100_000) -> dict:
         """Drive the engine until every queued request completes.
         Returns {'outputs': {rid: tokens}, 'metrics': {rid: ...},
-        'requests_per_s': float, 'tokens_per_s': float, 'steps': int}.
+        'requests_per_s': float, 'tokens_per_s': float, 'steps': int}
+        (plus 'pool': page-pool gauges when paged).
         """
         for req in requests or ():
             self.submit(req.prompt, req.max_new_tokens)
@@ -267,7 +497,7 @@ class ServeEngine:
         wall = max(time.perf_counter() - t0, 1e-9)
         mets = dict(self._metrics)
         total_tokens = sum(m.new_tokens for m in mets.values())
-        return {
+        out: dict[str, Any] = {
             "outputs": dict(self._outputs),
             "metrics": mets,
             "requests_per_s": len(mets) / wall,
@@ -275,3 +505,6 @@ class ServeEngine:
             "steps": steps,
             "wall_s": wall,
         }
+        if self.paged:
+            out["pool"] = self.pool_metrics()
+        return out

@@ -1,0 +1,415 @@
+"""Paged + quantized KV-cache serving (DESIGN.md §12): paged
+flash-decode kernel vs gather oracle (fp + int8, geometry sweep),
+paged-vs-contiguous logits pins at the transformer level, page
+allocator properties (hypothesis + deterministic twins), and
+``ServeEngine`` paged-runtime invariants — token parity with the
+contiguous path, preemption recompute-from-start, admission stalls,
+pool drain after ``run()``, block-table coverage, and the no-per-step-
+recompilation jit cache pin (satellite fix).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.kernels import dispatch as dsp
+from repro.kernels.launch_stats import LAUNCHES, PAGE_POOL
+from repro.kernels.paged_attention import paged_decode_fwd
+from repro.kernels.ref import paged_decode_ref
+from repro.models import layers as mlayers
+from repro.models import transformer as tfm
+from repro.serve.engine import ServeEngine
+from repro.serve.paging import PagePool
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("yi-6b", smoke=True)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+def _rand_pool(rng, n_pages, ps, KV, hd, quant):
+    if quant:
+        kp = rng.randint(-127, 128, (n_pages, ps, KV, hd)).astype(np.int8)
+        vp = rng.randint(-127, 128, (n_pages, ps, KV, hd)).astype(np.int8)
+        ks = (rng.rand(n_pages, ps) * 0.1).astype(np.float32)
+        vs = (rng.rand(n_pages, ps) * 0.1).astype(np.float32)
+    else:
+        kp = rng.randn(n_pages, ps, KV, hd).astype(np.float32)
+        vp = rng.randn(n_pages, ps, KV, hd).astype(np.float32)
+        ks = np.zeros((n_pages, ps), np.float32)
+        vs = np.zeros((n_pages, ps), np.float32)
+    return map(jnp.asarray, (kp, vp, ks, vs))
+
+
+def _rand_tables(rng, B, P, ps, n_pages, lengths):
+    """Distinct physical pages per request, -1 beyond each row's need."""
+    perm = rng.permutation(n_pages)[:B * P].reshape(B, P)
+    tables = np.full((B, P), -1, np.int32)
+    for b in range(B):
+        need = max(1, -(-int(lengths[b]) // ps))
+        tables[b, :need] = perm[b, :need]
+    return jnp.asarray(tables)
+
+
+@pytest.mark.parametrize("quant", [False, True])
+@pytest.mark.parametrize("pb", [1, 2, 3, 4, 8])
+def test_paged_kernel_matches_ref(quant, pb):
+    rng = np.random.RandomState(0)
+    B, H, KV, hd, ps, P, n_pages = 3, 8, 2, 32, 8, 5, 16
+    q = jnp.asarray(rng.randn(B, 1, H, hd).astype(np.float32))
+    kp, vp, ks, vs = _rand_pool(rng, n_pages, ps, KV, hd, quant)
+    lengths = np.array([0, 7, P * ps], np.int32)   # free slot / partial / full
+    tables = _rand_tables(rng, B, P, ps, n_pages, lengths)
+    lens = jnp.asarray(lengths)
+    ref = paged_decode_ref(q, kp, vp, ks, vs, tables, lens)
+    out = paged_decode_fwd(q, kp, vp, ks, vs, tables, lens,
+                           pages_per_block=pb, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    # a length-0 row is a free engine slot: exact zeros, not garbage
+    assert float(jnp.max(jnp.abs(out[0]))) == 0.0
+
+
+def test_paged_kernel_gqa_single_kv_head():
+    # the smoke-model geometry: KV=1, every query head shares one page
+    rng = np.random.RandomState(1)
+    B, H, KV, hd, ps, P, n_pages = 2, 8, 1, 32, 4, 3, 8
+    q = jnp.asarray(rng.randn(B, 1, H, hd).astype(np.float32))
+    kp, vp, ks, vs = _rand_pool(rng, n_pages, ps, KV, hd, False)
+    lengths = np.array([5, 12], np.int32)
+    tables = _rand_tables(rng, B, P, ps, n_pages, lengths)
+    ref = paged_decode_ref(q, kp, vp, ks, vs, tables, jnp.asarray(lengths))
+    out = paged_decode_fwd(q, kp, vp, ks, vs, tables, jnp.asarray(lengths),
+                           pages_per_block=2, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_dispatch_paged_decode_parity_and_counter():
+    rng = np.random.RandomState(2)
+    B, H, KV, hd, ps, P, n_pages = 2, 4, 2, 16, 4, 4, 12
+    q = jnp.asarray(rng.randn(B, 1, H, hd).astype(np.float32))
+    kp, vp, ks, vs = _rand_pool(rng, n_pages, ps, KV, hd, True)
+    lengths = np.array([3, 16], np.int32)
+    tables = _rand_tables(rng, B, P, ps, n_pages, lengths)
+    lens = jnp.asarray(lengths)
+    ref = dsp.paged_decode(q, kp, vp, ks, vs, tables, lens,
+                           dsp.DispatchConfig(mode="reference"))
+    before = LAUNCHES["paged_decode"]
+    out = dsp.paged_decode(q, kp, vp, ks, vs, tables, lens,
+                           dsp.DispatchConfig(mode="kernel"))
+    assert LAUNCHES["paged_decode"] == before + 1
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_paged_geometry_resolution():
+    # explicit block_rows wins and is clamped to the table width
+    assert dsp.paged_geometry(
+        dsp.DispatchConfig(block_rows=64), 5, 8, 32, False) == 5
+    # auto falls back to the default (clamped) when the table has no entry
+    pb = dsp.paged_geometry(None, 3, 8, 32, False)
+    assert 1 <= pb <= 3
+
+
+# ---------------------------------------------------------------------------
+# transformer-level logits pins (paged vs contiguous, fp + int8)
+# ---------------------------------------------------------------------------
+
+
+def _paged_logits(cfg, params, toks, quant, use_pallas=False):
+    """Prefill -> page-pool insert -> one paged decode step."""
+    if use_pallas:
+        cfg = dataclasses.replace(cfg, use_pallas=True)
+    S = toks.shape[1]
+    ps = 4
+    n_adm = -(-S // ps)
+    cp = n_adm * ps
+    logits_p, cache, _ = tfm.prefill(params, {"tokens": toks}, cfg,
+                                     max_len=cp)
+    pool = mlayers.init_paged_pool(cfg, 8, ps, stacked=cfg.n_layers,
+                                   quant=quant)
+    page_ids = jnp.arange(n_adm, dtype=jnp.int32)
+    pool = mlayers.paged_prefill_insert(pool, cache.k[:, 0], cache.v[:, 0],
+                                        page_ids)
+    tables = np.full((1, 5), -1, np.int32)
+    tables[0, :n_adm] = np.arange(n_adm)
+    tok = jnp.argmax(logits_p[0, -1]).astype(jnp.int32)[None]
+    lp, _ = tfm.decode_step_paged(
+        params, pool, jnp.asarray(tables), tok,
+        jnp.asarray([S], jnp.int32), jnp.asarray([True]), cfg)
+    return lp
+
+
+@pytest.mark.parametrize("prompt_len", [1, 3, 6])
+def test_paged_logits_match_contiguous(smoke_model, prompt_len):
+    cfg, params = smoke_model
+    toks = jnp.asarray(np.random.RandomState(3).randint(
+        0, cfg.vocab, (1, prompt_len)))
+    logits_c, cache, _ = tfm.prefill(params, {"tokens": toks}, cfg,
+                                     max_len=20)
+    tok = jnp.argmax(logits_c[0, -1]).astype(jnp.int32)[None]
+    lc, _ = tfm.decode_step(params, cache, tok, prompt_len, cfg)
+    lp = _paged_logits(cfg, params, toks, quant=False)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lc), atol=1e-4)
+    # int8 pages: within quantization tolerance, same greedy token
+    lq = _paged_logits(cfg, params, toks, quant=True)
+    np.testing.assert_allclose(np.asarray(lq), np.asarray(lc), atol=0.1)
+    assert int(jnp.argmax(lq[0])) == int(jnp.argmax(lc[0]))
+
+
+def test_paged_logits_kernel_matches_jnp(smoke_model):
+    cfg, params = smoke_model
+    toks = jnp.asarray(np.random.RandomState(4).randint(0, cfg.vocab,
+                                                        (1, 5)))
+    before = LAUNCHES["paged_decode"]
+    lk = _paged_logits(cfg, params, toks, quant=False, use_pallas=True)
+    assert LAUNCHES["paged_decode"] > before
+    lj = _paged_logits(cfg, params, toks, quant=False)
+    np.testing.assert_allclose(np.asarray(lk), np.asarray(lj), atol=1e-4)
+
+
+def test_decode_step_paged_rejects_unscanned(smoke_model):
+    cfg, params = smoke_model
+    bad = dataclasses.replace(cfg, scan_layers=False)
+    with pytest.raises(ValueError, match="paged decode"):
+        tfm.decode_step_paged(params, None, None,
+                              jnp.zeros(1, jnp.int32),
+                              jnp.zeros(1, jnp.int32),
+                              jnp.zeros(1, bool), bad)
+
+
+# ---------------------------------------------------------------------------
+# page allocator (hypothesis properties + deterministic twin)
+# ---------------------------------------------------------------------------
+
+
+def check_allocator_trace(n_pages, page_size, ops):
+    """Replays (want_pages, release_idx) ops; checks conservation, no
+    double allocation, and ownership-validated release throughout."""
+    pool = PagePool(n_pages, page_size)
+    held = {}          # rid -> pages
+    rid = 0
+    for want, release_idx in ops:
+        want = 1 + want % n_pages
+        if pool.can_alloc(want):
+            pages = pool.alloc(want, rid)
+            assert len(pages) == len(set(pages))
+            for other, theirs in held.items():
+                assert not set(pages) & set(theirs), "double allocation"
+            held[rid] = pages
+            rid += 1
+        else:
+            with pytest.raises(MemoryError):
+                pool.alloc(want, rid)
+        if held and release_idx is not None:
+            victim = sorted(held)[release_idx % len(held)]
+            pool.release(held.pop(victim), victim)
+        live = sum(len(p) for p in held.values())
+        assert pool.used_pages == live
+        assert pool.free_pages == n_pages - live
+    for r in sorted(held):
+        pool.release(held.pop(r), r)
+    assert pool.used_pages == 0 and pool.free_pages == n_pages
+
+
+@settings(max_examples=50, deadline=None)
+@given(n_pages=st.integers(1, 24), page_size=st.integers(1, 16),
+       ops=st.lists(st.tuples(st.integers(0, 30),
+                              st.one_of(st.none(), st.integers(0, 30))),
+                    max_size=40))
+def test_allocator_properties(n_pages, page_size, ops):
+    check_allocator_trace(n_pages, page_size, ops)
+
+
+def test_allocator_trace_deterministic():
+    rng = np.random.RandomState(7)
+    for n_pages in (1, 5, 16):
+        ops = [(int(rng.randint(0, 30)),
+                None if rng.rand() < 0.4 else int(rng.randint(0, 30)))
+               for _ in range(60)]
+        check_allocator_trace(n_pages, 4, ops)
+
+
+def test_allocator_rejects_foreign_release():
+    pool = PagePool(4, 2)
+    pages = pool.alloc(2, rid=0)
+    with pytest.raises(ValueError, match="owned by"):
+        pool.release(pages, rid=1)
+    pool.release(pages, rid=0)
+    with pytest.raises(ValueError):       # double free
+        pool.release(pages, rid=0)
+
+
+def test_allocator_pages_for():
+    pool = PagePool(8, 4)
+    assert pool.pages_for(0) == 1
+    assert pool.pages_for(1) == 1
+    assert pool.pages_for(4) == 1
+    assert pool.pages_for(5) == 2
+    assert pool.pages_for(16) == 4
+
+
+# ---------------------------------------------------------------------------
+# engine: paged runtime invariants
+# ---------------------------------------------------------------------------
+
+
+REQS = [([5, 6, 7], 6), ([1], 4), ([9, 8, 7, 6, 5], 8), ([3, 3], 5),
+        ([11, 2, 4], 7), ([8], 3)]
+
+
+def _engine(smoke_model, **kw):
+    cfg, params = smoke_model
+    if kw.pop("use_pallas", False):
+        cfg = dataclasses.replace(cfg, use_pallas=True)
+    return ServeEngine(params, cfg, max_batch=2, max_len=20, prompt_pad=6,
+                       **kw)
+
+
+def _run(eng, reqs=REQS):
+    for p, n in reqs:
+        eng.submit(p, n)
+    return eng.run()
+
+
+@pytest.mark.parametrize("scheduler", ["continuous", "static"])
+def test_paged_engine_matches_contiguous_tokens(smoke_model, scheduler):
+    res_c = _run(_engine(smoke_model, scheduler=scheduler))
+    res_p = _run(_engine(smoke_model, scheduler=scheduler, paged=True,
+                         page_size=4))
+    assert res_p["outputs"] == res_c["outputs"]
+
+
+def test_paged_engine_int8_within_tolerance(smoke_model):
+    # int8 pages change logits by ~1e-2 — greedy tokens may legitimately
+    # diverge on near-ties, but every request must complete its budget
+    # and stay in-vocab; on this smoke model they match exactly
+    cfg, _ = smoke_model
+    res_c = _run(_engine(smoke_model))
+    res_q = _run(_engine(smoke_model, paged=True, page_size=4,
+                         kv_quant=True))
+    assert sorted(res_q["outputs"]) == sorted(res_c["outputs"])
+    for rid, toks in res_q["outputs"].items():
+        assert len(toks) == len(res_c["outputs"][rid])
+        assert all(0 <= t < cfg.vocab for t in toks)
+    exact = sum(res_q["outputs"][r] == res_c["outputs"][r]
+                for r in res_c["outputs"])
+    assert exact >= len(res_c["outputs"]) // 2
+
+
+def test_paged_engine_kernel_path_matches_jnp(smoke_model):
+    before = LAUNCHES["paged_decode"]
+    res_k = _run(_engine(smoke_model, paged=True, page_size=4,
+                         use_pallas=True))
+    assert LAUNCHES["paged_decode"] > before
+    res_j = _run(_engine(smoke_model, paged=True, page_size=4))
+    assert res_k["outputs"] == res_j["outputs"]
+
+
+def test_no_per_step_recompilation(smoke_model):
+    # satellite fix: slot tokens/positions live in device buffers the
+    # step advances — one compilation for the whole mixed-length run
+    for kw in ({}, {"paged": True, "page_size": 4}):
+        eng = _engine(smoke_model, **kw)
+        res = _run(eng)
+        assert res["steps"] > 5
+        assert eng._step_jit._cache_size() == 1, kw
+
+
+def test_paged_pool_drains_after_run(smoke_model):
+    eng = _engine(smoke_model, paged=True, page_size=4)
+    res = _run(eng)
+    assert sorted(res["outputs"]) == list(range(len(REQS)))
+    assert eng.pool_alloc.used_pages == 0
+    assert eng.pool_alloc.free_pages == eng.n_pages
+    assert (eng._tables_np == -1).all()
+    assert res["pool"]["pages_used"] == 0
+    assert res["pool"]["peak_pages_used"] > 0
+
+
+def test_block_tables_cover_exactly_true_len(smoke_model):
+    # after every step, an active slot owns exactly
+    # ceil(tokens_written / page_size) pages and its table rows match
+    eng = _engine(smoke_model, paged=True, page_size=4)
+    for p, n in REQS:
+        eng.submit(p, n)
+    while eng.pending:
+        eng.step()
+        for i, s in enumerate(eng._slots):
+            if s.free:
+                assert (eng._tables_np[i] == -1).all()
+                continue
+            written = s.pos            # post-step: positions [0, pos)
+            want = max(1, -(-written // eng.page_size))
+            assert len(s.pages) == want
+            assert list(eng._tables_np[i, :want]) == s.pages
+            assert (eng._tables_np[i, want:] == -1).all()
+
+
+def test_preemption_recomputes_identically(smoke_model):
+    reqs = [([5, 6, 7], 12), ([1, 2, 3, 4], 12), ([9, 8], 12)]
+    tiny = _engine(smoke_model, paged=True, page_size=4, kv_pool_pages=6)
+    res_t = _run(tiny, reqs)
+    assert tiny.preemptions > 0
+    assert tiny.pool_alloc.used_pages == 0
+    assert res_t["pool"]["preemptions"] == tiny.preemptions
+    # the module-level gauge tracks the engine that refreshed it last
+    assert PAGE_POOL["preemptions"] == tiny.preemptions
+    ample = _engine(smoke_model, paged=True, page_size=4)
+    res_a = _run(ample, reqs)
+    assert ample.preemptions == 0
+    # recompute-from-start: evicted requests regenerate the same tokens
+    assert res_t["outputs"] == res_a["outputs"]
+
+
+def test_admission_stalls_counted(smoke_model):
+    # a 3-page pool: the running request holds 2-3 pages the whole
+    # time, so the queued second prompt (2 pages) stalls every step
+    # despite the free slot, then admits and completes once the first
+    # request finishes and drains its pages
+    cfg, params = smoke_model
+    eng = ServeEngine(params, cfg, max_batch=2, max_len=12, prompt_pad=6,
+                      paged=True, page_size=4, kv_pool_pages=3)
+    reqs = [([1, 2, 3, 4, 5, 6], 6), ([7, 8, 9, 10, 11, 12], 6)]
+    res = _run(eng, reqs)
+    assert sorted(res["outputs"]) == [0, 1]
+    assert eng.preemptions == 0        # stall, not eviction
+    assert eng.admission_stalls > 0
+    assert res["pool"]["admission_stalls"] == eng.admission_stalls
+
+
+def test_paged_engine_rejects_bad_config(smoke_model):
+    cfg, params = smoke_model
+    with pytest.raises(ValueError, match="kv_quant requires paged"):
+        ServeEngine(params, cfg, kv_quant=True)
+    with pytest.raises(ValueError, match="cannot hold one"):
+        ServeEngine(params, cfg, max_len=64, page_size=4, paged=True,
+                    kv_pool_pages=2)
+    bad = dataclasses.replace(cfg, scan_layers=False)
+    with pytest.raises(ValueError, match="paged KV serving requires"):
+        ServeEngine(params, bad, paged=True)
+
+
+def test_paged_admission_is_token_budget_not_slots(smoke_model):
+    # 8 slots x max_len 20 would need 40 pages contiguously; a 10-page
+    # pool still admits as many *short* requests as fit by tokens
+    cfg, params = smoke_model
+    eng = ServeEngine(params, cfg, max_batch=8, max_len=20, prompt_pad=6,
+                      paged=True, page_size=4, kv_pool_pages=10)
+    for _ in range(8):
+        eng.submit([1, 2, 3], 2)       # 1 page each at admit
+    eng.step()
+    assert eng.occupancy[-1] == 8      # all 8 admitted on 10 pages
+    while eng.pending:
+        eng.step()
+    assert len(eng._outputs) == 8
